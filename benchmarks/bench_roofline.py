@@ -1,0 +1,31 @@
+"""Roofline summary (deliverable g): reads the dry-run artifact and reports
+per-(arch x shape) terms and dominant bottlenecks. Requires
+results/dryrun_baseline.json (produced by `python -m repro.launch.dryrun`)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+
+def run():
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_baseline.json")
+    if not os.path.exists(path):
+        return [row("roofline/missing", 0.0,
+                    note="run repro.launch.dryrun first")]
+    with open(path) as f:
+        rows_in = json.load(f)
+    out = []
+    for r in rows_in:
+        if r["status"] != "ok":
+            continue
+        total = r["t_compute"] + r["t_memory"] + r["t_collective"]
+        out.append(row(f"roofline/{r['arch']}/{r['shape']}@{r['mesh']}",
+                       total * 1e6,
+                       dom=r["dominant"],
+                       t_comp=r["t_compute"], t_mem=r["t_memory"],
+                       t_coll=r["t_collective"],
+                       useful=r["useful_ratio"]))
+    return out

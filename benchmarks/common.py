@@ -1,0 +1,33 @@
+"""Shared benchmark scaffolding."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+ARCH = "llama3.2-3b"       # the paper's own evaluation model (§6.1)
+E = 16                     # paper testbed: 16 GPUs
+DURATION = 20.0
+LIGHT_RATE = 8.0
+HEAVY_RATE = 40.0
+CAPACITY = 400_000.0
+
+
+def row(name: str, us_per_call: float, **derived) -> Dict:
+    return {"name": name, "us_per_call": us_per_call,
+            "derived": ";".join(f"{k}={_fmt(v)}" for k, v in derived.items())}
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, us_per_call)."""
+    fn(*args, **kw)  # warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us

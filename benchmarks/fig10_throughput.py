@@ -1,0 +1,20 @@
+"""Paper Figs. 9/10/11: system throughput across request rates."""
+from __future__ import annotations
+
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from repro.sim.experiment import compare_policies
+
+
+def run():
+    rows = []
+    for rate in (8.0, 24.0, 40.0):
+        res = compare_policies(ARCH, rate=rate, duration=DURATION, E=E,
+                               capacity_tokens=CAPACITY)
+        thr = {k: r.throughput() for k, r in res.items()}
+        rows.append(row(f"fig10/throughput@{rate:g}", thr["cascade"],
+                        cascade=thr["cascade"], round_robin=thr["round-robin"],
+                        llumnix=thr["llumnix"],
+                        x_vs_rr=thr["cascade"] / max(thr["round-robin"], 1e-9),
+                        x_vs_llumnix=thr["cascade"] / max(thr["llumnix"],
+                                                          1e-9)))
+    return rows

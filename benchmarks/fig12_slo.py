@@ -1,0 +1,32 @@
+"""Paper Fig. 12: SLO attainment at Nx the minimum-load SLO."""
+from __future__ import annotations
+
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from repro.configs import get_config
+from repro.sim.costmodel import (decode_iter_time, prefill_time,
+                                 profile_from_config)
+from repro.sim.experiment import compare_policies
+from repro.sim.workload import WorkloadSpec, sample_lengths
+import numpy as np
+
+
+def run():
+    prof = profile_from_config(get_config(ARCH))
+    # baseline SLO: TTFT/TPOT at minimum load (single median request)
+    rng = np.random.default_rng(0)
+    ins, _ = sample_lengths(WorkloadSpec(rate=1, duration=1), 1000, rng)
+    ttft0 = prefill_time(int(np.median(ins)), prof)
+    tpot0 = decode_iter_time([int(np.median(ins))], prof)
+    res = compare_policies(ARCH, rate=32.0, duration=DURATION, E=E,
+                           capacity_tokens=CAPACITY)
+    rows = []
+    for scale in (5.0, 10.0, 20.0):
+        att = {k: r.slo_attainment(ttft0, tpot0, scale)
+               for k, r in res.items()}
+        rows.append(row(f"fig12/slo@{scale:g}x", att["cascade"] * 100,
+                        cascade=att["cascade"],
+                        round_robin=att["round-robin"],
+                        llumnix=att["llumnix"],
+                        x_vs_rr=att["cascade"] / max(att["round-robin"],
+                                                     1e-9)))
+    return rows

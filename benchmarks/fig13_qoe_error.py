@@ -1,0 +1,30 @@
+"""Paper Fig. 13: QoE-model prediction error vs static predictor
+(fit/validation split)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ARCH, row
+from repro.configs import get_config
+from repro.core.qoe import fit_qoe, relative_errors, static_baseline_errors
+from repro.sim.costmodel import profile_from_config
+from repro.sim.profiler import profile_and_fit
+
+
+def run():
+    prof = profile_from_config(get_config(ARCH))
+    _, F, Q = profile_and_fit(prof, horizon_s=8.0, seed=0,
+                              return_samples=True)
+    n = len(Q)
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(n)
+    cut = int(0.7 * n)
+    fit_i, val_i = idx[:cut], idx[cut:]
+    model = fit_qoe(F[fit_i], Q[fit_i])
+    err = np.abs(relative_errors(model, F[val_i], Q[val_i]))
+    base = np.abs(static_baseline_errors(F[val_i], Q[val_i]))
+    return [row("fig13/qoe_error", float(err.mean()) * 100,
+                model_mean_err=float(err.mean()),
+                model_median_err=float(np.median(err)),
+                static_mean_err=float(base.mean()),
+                paper="model 8.9% vs static 64%")]

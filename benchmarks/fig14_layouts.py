@@ -1,0 +1,35 @@
+"""Paper Fig. 14: planned cascade vs chain vs no-pipeline layouts."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from repro.sim.cluster import CascadePolicy
+from repro.sim.experiment import (chain_plan, fitted_qoe, no_pipeline_plan,
+                                  plan_pipeline, run_policy)
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def run():
+    qoe = fitted_qoe(ARCH)
+    reqs = generate(WorkloadSpec(rate=40.0, duration=DURATION, seed=3))
+    plans = {
+        "cascade": plan_pipeline(ARCH, qoe, E),
+        "chain": chain_plan(ARCH, qoe, E),
+        "no-pipeline": no_pipeline_plan(E),
+    }
+    rows = []
+    base = None
+    for name, plan in plans.items():
+        res = run_policy(ARCH, CascadePolicy(plan, qoe), reqs, DURATION,
+                         E=E, capacity_tokens=CAPACITY)
+        nl = float(np.mean(res.normalized_latency()))
+        thr = res.throughput()
+        if name == "cascade":
+            base = (nl, thr)
+        rows.append(row(f"fig14/{name}", nl * 1e6, norm_latency=nl,
+                        throughput=thr,
+                        nl_vs_cascade=nl / base[0],
+                        thr_vs_cascade=thr / base[1],
+                        completed=f"{len(res.completed)}/{res.num_submitted}"))
+    return rows

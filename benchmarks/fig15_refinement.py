@@ -1,0 +1,28 @@
+"""Paper Fig. 15: adaptive vs quantity- vs memory-based range refinement."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from repro.sim.cluster import CascadePolicy
+from repro.sim.experiment import fitted_qoe, plan_pipeline, run_policy
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def run():
+    qoe = fitted_qoe(ARCH)
+    plan = plan_pipeline(ARCH, qoe, E)
+    reqs = generate(WorkloadSpec(rate=32.0, duration=DURATION, seed=5,
+                                 drift_mu=1.2))  # §4.3: drifting lengths
+    rows = []
+    base = None
+    for mode in ("adaptive", "quantity", "memory", "none"):
+        res = run_policy(ARCH, CascadePolicy(plan, qoe, refinement=mode),
+                         reqs, DURATION, E=E, capacity_tokens=CAPACITY)
+        nl = float(np.mean(res.normalized_latency()))
+        thr = res.throughput()
+        if mode == "adaptive":
+            base = (nl, thr)
+        rows.append(row(f"fig15/{mode}", nl * 1e6, norm_latency=nl,
+                        throughput=thr, nl_vs_adaptive=nl / base[0]))
+    return rows

@@ -1,0 +1,61 @@
+"""Paper Fig. 16: load-balance effect of the bid-ask protocol — CV of
+per-instance output tokens per stage (4 stages x 4 instances), token-
+weighted and averaged over 3 seeds."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ARCH, CAPACITY, DURATION, row
+from repro.core.partition import PipelinePlan, Stage
+from repro.sim.cluster import CascadePolicy
+from repro.sim.experiment import fitted_qoe, run_policy
+from repro.sim.workload import WorkloadSpec, generate
+
+SEEDS = (9, 10, 11, 12, 13)
+
+
+def _weighted_cv(res) -> float:
+    toks = res.output_tokens_by_instance()
+    groups = {}
+    for iid, si in enumerate(res.stage_of_instance):
+        groups.setdefault(si, []).append(iid)
+    cvs, ws = [], []
+    for si in sorted(groups):
+        vals = toks[groups[si]]
+        if vals.sum() > 0:
+            cvs.append(vals.std() / vals.mean())
+            ws.append(vals.sum())
+    return float(np.average(cvs, weights=ws))
+
+
+def run():
+    qoe = fitted_qoe(ARCH)
+    # quantile-ish bounds: every stage sees substantial traffic
+    bounds = [0.0, 600.0, 1200.0, 3000.0, float("inf")]
+    plan = PipelinePlan([Stage(bounds[i], bounds[i + 1], 4)
+                         for i in range(4)], 0.0)
+    rows = []
+    cvs = {}
+    for mode, label in (("rr", "round-robin"),
+                        ("inter-stage", "inter-stage-only"),
+                        ("full", "full-bidask")):
+        vals = []
+        for seed in SEEDS:
+            reqs = generate(WorkloadSpec(rate=32.0, duration=2 * DURATION,
+                                         seed=seed))
+            res = run_policy(ARCH,
+                             CascadePolicy(plan, qoe, balancing=mode,
+                                           refinement="none"),
+                             reqs, 2 * DURATION, E=16,
+                             capacity_tokens=CAPACITY, seed=seed)
+            vals.append(_weighted_cv(res))
+        cv = float(np.mean(vals))
+        cvs[label] = cv
+        rows.append(row(f"fig16/{label}", cv * 100, mean_stage_cv=cv,
+                        seeds=",".join(f"{v:.3f}" for v in vals)))
+    rows.append(row("fig16/reduction", 0.0,
+                    full_vs_rr=1 - cvs["full-bidask"] / cvs["round-robin"],
+                    full_vs_interstage=1 - cvs["full-bidask"]
+                    / cvs["inter-stage-only"],
+                    paper="40% vs inter-stage, 47% vs rr"))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Figs. 6 & 7: mean and p95 TTFT / TPOT across systems and rates.
+
+16-instance simulated cluster, ShareGPT-shaped workload, policies:
+round-robin (vLLM/SGLang deployment), Llumnix-like, CascadeInfer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (ARCH, CAPACITY, DURATION, E, HEAVY_RATE,
+                               LIGHT_RATE, row)
+from repro.sim.experiment import compare_policies
+
+
+def run():
+    rows = []
+    for rate in (LIGHT_RATE, HEAVY_RATE):
+        res = compare_policies(ARCH, rate=rate, duration=DURATION, E=E,
+                               capacity_tokens=CAPACITY)
+        base = res["round-robin"]
+        for kind, r in res.items():
+            s = r.summary()
+            rows.append(row(
+                f"fig6_7/{kind}@{rate:g}", s["tpot_mean"] * 1e6,
+                ttft_mean=s["ttft_mean"], ttft_p95=s["ttft_p95"],
+                tpot_mean=s["tpot_mean"], tpot_p95=s["tpot_p95"],
+                vs_rr_ttft=(1 - s["ttft_mean"]
+                            / max(base.summary()["ttft_mean"], 1e-12)),
+                vs_rr_tpot=(1 - s["tpot_mean"]
+                            / max(base.summary()["tpot_mean"], 1e-12)),
+                completed=s["completed"]))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Fig. 8: single-instance parity — CascadeInfer's scheduling layer
+adds no overhead at E=1 (matches the engine baseline)."""
+from __future__ import annotations
+
+from benchmarks.common import ARCH, CAPACITY, row
+from repro.core.partition import PipelinePlan, Stage
+from repro.sim.cluster import CascadePolicy, RoundRobinPolicy
+from repro.sim.experiment import fitted_qoe, run_policy
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def run():
+    reqs = generate(WorkloadSpec(rate=4.0, duration=20.0, seed=11))
+    rr = run_policy(ARCH, RoundRobinPolicy(), reqs, 20.0, E=1,
+                    capacity_tokens=CAPACITY)
+    plan = PipelinePlan([Stage(0.0, float("inf"), 1)], 0.0)
+    ca = run_policy(ARCH, CascadePolicy(plan, fitted_qoe(ARCH)), reqs, 20.0,
+                    E=1, capacity_tokens=CAPACITY)
+    s_rr, s_ca = rr.summary(), ca.summary()
+    return [row("fig8/single_instance", s_ca["tpot_mean"] * 1e6,
+                cascade_tpot=s_ca["tpot_mean"],
+                engine_tpot=s_rr["tpot_mean"],
+                overhead=(s_ca["tpot_mean"] / max(s_rr["tpot_mean"], 1e-12)
+                          - 1.0))]

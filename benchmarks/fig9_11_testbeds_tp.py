@@ -1,0 +1,58 @@
+"""Paper Figs. 9 & 11: platform and tensor-parallel sensitivity.
+
+(a) Memory-constrained testbed (the paper's L40, 48 GB vs H20 141 GB):
+    smaller KV capacity caps batch sizes and narrows the heterogeneity
+    gap -> CascadeInfer's gains shrink but stay positive.
+(b) Tensor parallelism (paper's Llama-70B TP=2/4): TP divides per-chip
+    weight-access overhead, so attention heterogeneity dominates more and
+    CascadeInfer's relative benefit grows with TP degree.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ARCH, DURATION, row
+from repro.sim.experiment import compare_policies
+
+
+def run():
+    rows = []
+    # (a) capacity sweep: H20-like vs L40-like KV budgets
+    for name, cap in (("h20-like", 400_000.0), ("l40-like", 120_000.0)):
+        res = compare_policies(ARCH, rate=32.0, duration=DURATION, E=16,
+                               capacity_tokens=cap)
+        thr = {k: r.throughput() for k, r in res.items()}
+        nl = {k: float(np.mean(r.normalized_latency()))
+              for k, r in res.items()}
+        rows.append(row(f"fig9_11/{name}", nl["cascade"] * 1e6,
+                        thr_x_vs_rr=thr["cascade"] / max(thr["round-robin"],
+                                                         1e-9),
+                        nl_vs_rr=nl["cascade"] / max(nl["round-robin"],
+                                                     1e-9),
+                        cap_tokens=cap))
+    # (b) TP sweep on a large model: qwen2.5-14b, 16 chips total
+    from repro.sim.experiment import fitted_qoe, make_policy, run_policy
+    from repro.sim.workload import WorkloadSpec, generate
+    from repro.sim.cluster import RoundRobinPolicy
+    from repro.core.partition import PipelinePlan, Stage
+
+    arch = "qwen2.5-14b"
+    for tp in (2, 4):
+        E = 16 // tp
+        rate = 24.0 / tp
+        reqs = generate(WorkloadSpec(rate=rate, duration=DURATION, seed=13))
+        qoe = fitted_qoe(arch, tp=tp)
+        plan = PipelinePlan([Stage(0.0, 1500.0, E - E // 2),
+                             Stage(1500.0, float("inf"), E // 2)], 0.0)
+        from repro.sim.cluster import CascadePolicy
+        rr = run_policy(arch, RoundRobinPolicy(), reqs, DURATION, E=E,
+                        capacity_tokens=400_000.0 * tp, tp=tp)
+        ca = run_policy(arch, CascadePolicy(plan, qoe), reqs, DURATION,
+                        E=E, capacity_tokens=400_000.0 * tp, tp=tp)
+        rows.append(row(f"fig9_11/tp{tp}", ca.summary()["tpot_mean"] * 1e6,
+                        thr_x_vs_rr=ca.throughput() / max(rr.throughput(),
+                                                          1e-9),
+                        tpot_vs_rr=(ca.summary()["tpot_mean"]
+                                    / max(rr.summary()["tpot_mean"], 1e-9)),
+                        instances=E))
+    return rows

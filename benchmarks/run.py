@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig13]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "fig2_heterogeneity",     # Fig. 2  kernel heterogeneity tax
+    "fig67_latency",          # Figs. 6/7 TTFT + TPOT
+    "fig8_single_instance",   # Fig. 8  single-instance parity
+    "fig10_throughput",       # Figs. 9/10/11 throughput
+    "fig9_11_testbeds_tp",    # Figs. 9/11 platform + TP sensitivity
+    "fig12_slo",              # Fig. 12 SLO attainment
+    "fig13_qoe_error",        # Fig. 13 QoE model error
+    "fig14_layouts",          # Fig. 14 layout ablation
+    "fig15_refinement",       # Fig. 15 refinement ablation
+    "fig16_bidask",           # Fig. 16 bid-ask CV
+    "tab_partition_speed",    # §6.5   partition complexity
+    "bench_roofline",         # §Roofline summary from the dry-run
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if only and not any(mod_name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["run"])
+            for r in mod.run():
+                print(f"{r['name']},{r['us_per_call']:.3f},{r['derived']}",
+                      flush=True)
+        except Exception as e:  # noqa: BLE001 — report all, fail at end
+            failures += 1
+            print(f"{mod_name},nan,ERROR={type(e).__name__}:{e}", flush=True)
+        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr,
+              flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Reproduce the paper's cluster experiment (Figs. 6/7/10) at chosen scale.
+
+    PYTHONPATH=src python examples/simulate_cluster.py --rate 40 --arch llama3.2-3b
+"""
+import argparse
+
+from repro.sim.experiment import compare_policies
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3.2-3b")
+ap.add_argument("--rate", type=float, default=40.0)
+ap.add_argument("--duration", type=float, default=20.0)
+ap.add_argument("--instances", type=int, default=16)
+args = ap.parse_args()
+
+res = compare_policies(args.arch, rate=args.rate, duration=args.duration,
+                       E=args.instances)
+print(f"{'policy':14s} {'TTFT(s)':>9s} {'p95':>9s} {'TPOT(ms)':>9s} "
+      f"{'p95':>9s} {'tok/s':>8s}")
+for kind, r in res.items():
+    s = r.summary()
+    print(f"{kind:14s} {s['ttft_mean']:9.3f} {s['ttft_p95']:9.3f} "
+          f"{s['tpot_mean'] * 1e3:9.2f} {s['tpot_p95'] * 1e3:9.2f} "
+          f"{s['throughput_tok_s']:8.0f}")
+base = res["round-robin"].summary()
+ca = res["cascade"].summary()
+print(f"\ncascade vs round-robin: TTFT -{(1 - ca['ttft_mean'] / base['ttft_mean']) * 100:.0f}%  "
+      f"TPOT -{(1 - ca['tpot_mean'] / base['tpot_mean']) * 100:.0f}%  "
+      f"throughput x{ca['throughput_tok_s'] / base['throughput_tok_s']:.2f}")

@@ -1,0 +1,86 @@
+"""Block-level cost model for the decode-attention kernel on TPU.
+
+This is the analytic bridge between the kernel and the rest of the system:
+  * the Fig.-2 benchmark uses it to quantify the heterogeneity tax,
+  * the simulator's ground-truth iteration cost is calibrated from it,
+  * §Perf napkin math reads straight off these terms.
+
+Model (per decode iteration, per chip):
+  padded backend:  blocks(b) = ceil(S_pad / BS) for every request
+  ragged backend:  blocks(b) = ceil(L_b / BS) compute + skip-overhead
+
+Each KV block costs DMA ``2·BS·Dh·bytes / HBM_bw`` (K and V streamed
+HBM→VMEM) and MXU ``2·2·G·BS·Dh / peak`` FLOP-time; decode attention has
+arithmetic intensity ≈ G (<< ridge point), so the DMA term dominates and a
+block's wall time is max(dma, mxu) ≈ dma — which is why wasted *padded*
+blocks hurt exactly in proportion to their count, matching the paper's
+observation that heterogeneity, not raw FLOPs, sets the iteration time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+# TPU v5e constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+SKIP_OVERHEAD_S = 2e-7       # per skipped grid step (scalar branch + DMA mgmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_q_heads: int
+    num_kv_heads: int
+    head_dim: int
+    kv_bytes: int = 2          # bf16 cache
+    block_s: int = 512
+
+
+def block_time_s(spec: AttnSpec) -> float:
+    """Wall time of one (kv-head, kv-block) grid step."""
+    g = spec.num_q_heads // spec.num_kv_heads
+    dma = 2 * spec.block_s * spec.head_dim * spec.kv_bytes / HBM_BW
+    mxu = 2 * 2 * g * spec.block_s * spec.head_dim / PEAK_FLOPS
+    return max(dma, mxu)
+
+
+def padded_blocks(lengths: Sequence[int], block_s: int,
+                  pad_to: int | None = None) -> int:
+    """Grid steps a padded (paper-faithful) backend executes per kv head."""
+    if not len(lengths):
+        return 0
+    s_pad = pad_to if pad_to is not None else max(lengths)
+    return len(lengths) * math.ceil(max(s_pad, 1) / block_s)
+
+
+def ragged_blocks(lengths: Sequence[int], block_s: int) -> int:
+    """Compute blocks a ragged backend executes per kv head."""
+    return sum(math.ceil(max(l, 1) / block_s) for l in lengths)
+
+
+def decode_attn_time_s(lengths: Sequence[int], spec: AttnSpec,
+                       ragged: bool = False,
+                       pad_to: int | None = None) -> float:
+    """Decode-attention wall time for one iteration over a batch."""
+    if not len(lengths):
+        return 0.0
+    t_blk = block_time_s(spec)
+    full = padded_blocks(lengths, spec.block_s, pad_to)
+    if not ragged:
+        return spec.num_kv_heads * full * t_blk
+    comp = ragged_blocks(lengths, spec.block_s)
+    skipped = full - comp
+    return spec.num_kv_heads * (comp * t_blk + skipped * SKIP_OVERHEAD_S)
+
+
+def heterogeneity_tax(lengths: Sequence[int], spec: AttnSpec) -> float:
+    """Fraction of padded-backend time wasted vs. a length-homogeneous
+    batch with the same total token count (the paper's Fig.-2 metric)."""
+    if not len(lengths):
+        return 0.0
+    hetero = decode_attn_time_s(lengths, spec, ragged=False)
+    mean = sum(lengths) / len(lengths)
+    homog = decode_attn_time_s([mean] * len(lengths), spec, ragged=False)
+    return hetero / max(homog, 1e-12)

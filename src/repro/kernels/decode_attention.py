@@ -1,0 +1,126 @@
+"""Flash-decode GQA attention — Pallas TPU kernel.
+
+This is the serving hot spot the paper's scheduling is built around: decode
+attention over a (possibly heterogeneous) batch of KV caches.
+
+TPU adaptation of the paper's SM-block analysis (DESIGN.md §2): the grid is
+``(B, Hkv, S/BS)`` and TPU grid steps execute *sequentially* per core, so a
+batch padded to its longest member burns ``Σ_b (ceil(maxL/BS) − ceil(L_b/BS))``
+wasted block iterations — the TPU restatement of inter-SM imbalance.
+
+Two modes, same numerics:
+  * ``ragged=False`` (paper-faithful backend): every KV block is fetched and
+    computed, out-of-range positions masked — cost ∝ B · ceil(S/BS).
+  * ``ragged=True`` (beyond-paper): per-request length scalars are prefetched
+    (SMEM) and fully-masked blocks skip the MXU work via ``pl.when`` —
+    cost ∝ Σ_b ceil(L_b/BS) plus a small per-skipped-block grid overhead.
+
+Block design for v5e: BS=512 KV rows × Dh=128 lanes (bf16 tile 16×128
+aligned, MXU contraction dim 128); the per-(b,hkv) working set is
+q [G,128] + k,v [512,128] ≈ 0.26 MB ≪ 16 MB VMEM, leaving room for
+double-buffered DMA of the next KV block. Accumulators (m, l, acc) live in
+VMEM scratch that persists across the sequential KV-block grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK = 512
+
+
+def _decode_kernel(lengths_ref,          # scalar prefetch [B]
+                   q_ref,                # [1, 1, G, Dh]
+                   k_ref, v_ref,         # [1, BS, 1, Dh]
+                   o_ref,                # [1, 1, G, Dh]
+                   m_ref, l_ref, acc_ref,  # VMEM scratch
+                   *, block_s: int, ragged: bool):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    start = j * block_s
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
+        s = s / math.sqrt(q.shape[-1])
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(idx < length, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                            # [G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                 # [G, BS]
+        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    if ragged:
+        # skip the MXU work for blocks entirely beyond this request's length
+        pl.when(start < length)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "ragged", "interpret"))
+def decode_attention(q, k, v, lengths, *, block_s: int = DEFAULT_BLOCK,
+                     ragged: bool = False, interpret: bool = False):
+    """q [B, H, Dh]; k, v [B, S, Hkv, Dh]; lengths [B] int32 -> [B, H, Dh].
+
+    ``interpret=True`` runs the kernel body in Python on CPU (used for all
+    validation in this repo); on a real TPU leave it False.
+    """
+    B, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    assert H % Hkv == 0 and S % block_s == 0, (H, Hkv, S, block_s)
+    nj = S // block_s
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    grid = (B, Hkv, nj)
+    kernel = functools.partial(_decode_kernel, block_s=block_s, ragged=ragged)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, *prefetch: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, Dh), lambda b, h, j, *prefetch: (b, j, h, 0)),
+                pl.BlockSpec((1, block_s, 1, Dh), lambda b, h, j, *prefetch: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, *prefetch: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 128), jnp.float32),   # m (lane-replicated)
+                pltpu.VMEM((G, 128), jnp.float32),   # l
+                pltpu.VMEM((G, Dh), jnp.float32),    # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(B, H, Dh)

@@ -1,0 +1,40 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` (Python
+execution of the kernel body) — numerics are identical to TPU. The
+``backend`` argument lets callers (engine, tests) pick:
+
+  * ``"xla"``     — pure-jnp reference (fast on CPU, default here)
+  * ``"pallas"``  — the TPU kernel (interpret on CPU, compiled on TPU)
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.prefill_attention import prefill_attention as _prefill_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k, v, lengths, *, backend: str = "xla",
+                     ragged: bool = False, block_s: int = 512):
+    if backend == "xla":
+        return ref.decode_attention_ref(q, k, v, lengths)
+    if backend == "pallas":
+        return _decode_pallas(q, k, v, lengths, block_s=block_s,
+                              ragged=ragged, interpret=not _on_tpu())
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def prefill_attention(q, k, v, lengths=None, *, backend: str = "xla",
+                      block_q: int = 256, block_k: int = 256):
+    if backend == "xla":
+        return ref.prefill_attention_ref(q, k, v, lengths)
+    if backend == "pallas":
+        return _prefill_pallas(q, k, v, lengths, block_q=block_q,
+                               block_k=block_k, interpret=not _on_tpu())
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,114 @@
+"""Causal flash-attention prefill — Pallas TPU kernel.
+
+The paper isolates prefill into dedicated compute-bound iterations (§2.1);
+this kernel is that iteration's hot spot. Standard flash tiling:
+grid ``(B, Hkv, Tq/BQ, S/BK)`` with online-softmax accumulation over the
+innermost (sequential) KV dimension and causal block pruning — upper-
+triangular KV blocks are skipped entirely (``pl.when``), halving compute.
+
+Block design: q tile [BQ·G, 128], kv tile [BK, 128]; BQ=BK=256 keeps the
+working set ≈ (256·G + 2·256) · 128 · 2 B ≲ 1 MB in VMEM with MXU-aligned
+contraction dims.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, bq: int, bk: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # kv block
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    q_start = i * bq
+    kv_start = j * bk
+
+    @pl.when((kv_start <= q_start + bq - 1) & (kv_start < length))
+    def _compute():
+        G, Dh = q_ref.shape[3], q_ref.shape[4]
+        q = q_ref[0, 0].astype(jnp.float32).reshape(bq * G, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # [BK, Dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+        s = s / math.sqrt(Dh)                               # [BQ*G, BK]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((kpos <= qpos) & (kpos < length), s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        G, Dh = o_ref.shape[3], o_ref.shape[4]
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = out.reshape(o_ref.shape[2], G, Dh)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "interpret"))
+def prefill_attention(q, k, v, lengths=None, *, block_q: int = 256,
+                      block_k: int = 256, interpret: bool = False):
+    """q [B, T, H, Dh]; k, v [B, T, Hkv, Dh] -> [B, T, H, Dh] (causal)."""
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    assert T % block_q == 0 and T % block_k == 0, (T, block_q, block_k)
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    # [B, Hkv, T, G, Dh] so a q tile is contiguous rows per kv head
+    qg = q.reshape(B, T, Hkv, G, Dh).transpose(0, 2, 1, 3, 4)
+
+    grid = (B, Hkv, T // block_q, T // block_k)
+    kernel = functools.partial(_prefill_kernel, bq=block_q, bk=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, G, Dh),
+                             lambda b, h, i, j, *p: (b, h, i, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, Dh),
+                             lambda b, h, i, j, *p: (b, j, h, 0)),
+                pl.BlockSpec((1, block_k, 1, Dh),
+                             lambda b, h, i, j, *p: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, G, Dh),
+                                   lambda b, h, i, j, *p: (b, h, i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q * G, 128), jnp.float32),
+                pltpu.VMEM((block_q * G, 128), jnp.float32),
+                pltpu.VMEM((block_q * G, Dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, T, G, Dh), q.dtype),
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, Dh)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth for every kernel sweep test —
+straightforward masked softmax attention with no tiling tricks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """Single-token GQA decode attention.
+
+    q        [B, H, Dh]     — one query token per request
+    k, v     [B, S, Hkv, Dh] — KV cache (padded to S)
+    lengths  [B] int32       — valid cache length per request
+    returns  [B, H, Dh]
+    """
+    B, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, kf) / jnp.sqrt(Dh)
+    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vf)
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def prefill_attention_ref(q, k, v, lengths=None):
+    """Causal full-sequence GQA attention (flash-prefill oracle).
+
+    q [B, T, H, Dh]; k, v [B, T, Hkv, Dh]; lengths [B] optional padding.
+    """
+    B, T, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, Dh).astype(jnp.float32)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(Dh)
+    causal = jnp.arange(T)[:, None] >= jnp.arange(T)[None, :]
+    mask = causal[None, None, None]
+    if lengths is not None:
+        valid = jnp.arange(T)[None, :] < lengths[:, None]           # [B, S]
+        mask = mask & valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, Dh).astype(q.dtype)

@@ -1,0 +1,230 @@
+"""Dry-run case construction: (architecture × input shape) -> a jit-able
+step function + ShapeDtypeStruct inputs + shardings.
+
+Input shapes (assignment):
+    train_4k     seq 4096,   global batch 256   -> train_step
+    prefill_32k  seq 32768,  global batch 32    -> prefill
+    decode_32k   seq 32768,  global batch 128   -> serve_step (1 new token)
+    long_500k    seq 524288, global batch 1     -> serve_step, sub-quadratic
+
+Family adjustments (DESIGN §4):
+  * long_500k gives full-attention families a sliding-window (8192)
+    variant; whisper skips long_500k (448-position decoder, no 500k story);
+    rwkv6 (O(1) state) and zamba2 run their native decode.
+  * whisper's decoder position table is extended to the exercised decode
+    length (synthetic but shape-faithful).
+  * MoE archs lower the GShard capacity-dispatch path (expert-parallel
+    all-to-all) instead of the dense-verification path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import batch_axes
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    param_shardings, replicated,
+                                    zero1_shardings)
+from repro.models import build_model
+from repro.models.common import ModelConfig
+from repro.training.optimizer import AdamWConfig, AdamWState, init_adamw
+from repro.models.model import Model
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind=0),
+    "prefill_32k": dict(seq_len=32_768, global_batch=32, kind=1),
+    "decode_32k": dict(seq_len=32_768, global_batch=128, kind=2),
+    "long_500k": dict(seq_len=524_288, global_batch=1, kind=2),
+}
+
+SLIDING_WINDOW_LONG = 8192
+
+
+def shape_kind(shape_name: str) -> str:
+    return {0: "train", 1: "prefill", 2: "decode"}[SHAPES[shape_name]["kind"]]
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    if arch == "whisper-large-v3" and shape_name == "long_500k":
+        return ("enc-dec audio decoder is position-capped (448); no 500k "
+                "decode story (DESIGN §4)")
+    return None
+
+
+def adjusted_config(arch: str, shape_name: str,
+                    dtype=jnp.bfloat16) -> ModelConfig:
+    import dataclasses as dc
+    cfg = get_config(arch, dtype=dtype)
+    over: Dict[str, Any] = {}
+    if cfg.num_experts:
+        over["moe_impl"] = "gshard"
+    if shape_name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        over["sliding_window"] = SLIDING_WINDOW_LONG
+    if cfg.family == "encdec":
+        # extend the decoder position table to the exercised length
+        seq = SHAPES[shape_name]["seq_len"]
+        if shape_name != "train_4k":
+            over["max_position"] = max(cfg.max_position, seq + 1)
+        else:
+            over["max_position"] = max(cfg.max_position, 4096 + 1)
+    if over:
+        cfg = dc.replace(cfg, **over)
+    return cfg
+
+
+@dataclasses.dataclass
+class DryrunCase:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    model: Model
+
+
+def _token_batch_shapes(cfg: ModelConfig, B: int, T: int) -> Dict[str, Any]:
+    sh: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    if cfg.family == "encdec":
+        sh["audio_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        n_patch = max(1, T // 8)
+        sh["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_patch, cfg.d_model), cfg.dtype)
+        sh["vision_mask"] = jax.ShapeDtypeStruct((B, T), jnp.bool_)
+        sh["mrope_positions"] = jax.ShapeDtypeStruct((B, T, 3), jnp.int32)
+    return sh
+
+
+def input_specs(arch: str, shape_name: str = "train_4k"):
+    """ShapeDtypeStruct stand-ins for every model input of the given
+    (arch, shape) — weak-type-correct, shardable, no device allocation
+    (the brief's ``input_specs()`` entry point; build_case composes these
+    with params/cache shapes and shardings)."""
+    cfg = adjusted_config(arch, shape_name)
+    sp = SHAPES[shape_name]
+    B, T = sp["global_batch"], sp["seq_len"]
+    if shape_kind(shape_name) == "decode":
+        return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    return _token_batch_shapes(cfg, B, T)
+
+
+def build_case(arch: str, shape_name: str, mesh,
+               optimized: bool = False) -> DryrunCase:
+    """``optimized=False`` is the paper-faithful/naive baseline;
+    ``optimized=True`` enables the beyond-paper §Perf levers:
+      * sequence-parallel activation sharding (train/prefill),
+      * ZeRO-1 optimizer-state sharding over 'data' (train),
+      * 2D expert sharding (MoE: experts on 'model', FFN dim on 'data'),
+      * pinned KV-cache layout on the decode scatter (decode shapes).
+    """
+    import dataclasses as dc
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    reason = skip_reason(arch, shape_name)
+    if reason is not None:
+        raise ValueError(f"skipped: {reason}")
+    cfg = adjusted_config(arch, shape_name)
+    sp = SHAPES[shape_name]
+    B, T = sp["global_batch"], sp["seq_len"]
+    kind = shape_kind(shape_name)
+    ba = batch_axes(mesh)
+
+    if optimized and kind == "train":
+        # sequence-parallel pays off where remat stacks residuals; in
+        # prefill it only added resharding (measured regression — §Perf)
+        cfg = dc.replace(cfg, act_shard=(ba, "model"))
+    if optimized and cfg.family == "hybrid" and kind in ("train", "prefill"):
+        # chunked SSD: per-chunk (not per-token) AD state residuals
+        cfg = dc.replace(cfg, ssm_chunk=128)
+
+    model = build_model(cfg)
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # 2D expert sharding: always pays in decode (weight streaming is the
+    # wall); in train/prefill it trades data-axis partial-sum collectives
+    # for memory, so only use it when weights otherwise can't fit
+    # (measured: qwen3-moe prefill regressed 0.59x with it always-on).
+    expert_2d = False
+    if optimized and cfg.num_experts:
+        if kind == "decode":
+            expert_2d = True
+        else:
+            from repro.sim.costmodel import profile_from_config
+            w_chip = 2.0 * profile_from_config(cfg).params_total \
+                / mesh.shape["model"]
+            expert_2d = w_chip > 8 * 2**30
+    p_shard = param_shardings(param_shapes, mesh, expert_2d=expert_2d)
+
+    if kind == "train":
+        batch_shapes = _token_batch_shapes(cfg, B, T)
+        b_shard = batch_shardings(batch_shapes, mesh)
+        opt_shapes = jax.eval_shape(init_adamw, param_shapes)
+        if optimized:   # ZeRO-1: mu/nu also sharded over 'data'
+            z = zero1_shardings(param_shapes, mesh)
+            o_shard = AdamWState(step=replicated(mesh), mu=z, nu=z)
+        else:           # optimizer state shards like params
+            o_shard = AdamWState(step=replicated(mesh), mu=p_shard,
+                                 nu=p_shard)
+        from repro.training.trainer import make_train_step
+        step = make_train_step(model, AdamWConfig(), remat=True)
+        return DryrunCase(arch, shape_name, cfg, step,
+                          (param_shapes, opt_shapes, batch_shapes),
+                          (p_shard, o_shard, b_shard), model)
+
+    if kind == "prefill":
+        batch_shapes = _token_batch_shapes(cfg, B, T)
+        b_shard = batch_shardings(batch_shapes, mesh)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=T)
+
+        return DryrunCase(arch, shape_name, cfg, prefill_step,
+                          (param_shapes, batch_shapes),
+                          (p_shard, b_shard), model)
+
+    # decode: one new token against a cache of T tokens
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, T))
+    context_parallel = (B == 1)
+    c_shard = cache_shardings(
+        cache_shapes, mesh, batch_size=B,
+        cache_seq=(min(T, cfg.sliding_window) if cfg.sliding_window else T),
+        context_parallel=context_parallel, seq_on_model=optimized)
+    if optimized and cfg.num_heads:
+        # pin the per-layer [B,S,H,D] cache layout inside serve_step: the
+        # leading (layer/group) axis of the stored cache is scanned away
+        S_eff = min(T, cfg.sliding_window) if cfg.sliding_window else T
+        kv_spec = None
+        for sh, sd in zip(jax.tree.leaves(cache_shapes),
+                          jax.tree.leaves(c_shard)):
+            if len(sh.shape) == 5 and sh.shape[2] == S_eff:
+                kv_spec = P(*sd.spec[1:])
+                break
+        if kv_spec is not None:
+            cfg = dc.replace(cfg, kv_cache_spec=kv_spec)
+            model = build_model(cfg)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tp_shard = NamedSharding(
+        mesh, P(ba) if (B % _axes_size(mesh, ba) == 0 and B > 1) else P())
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return DryrunCase(arch, shape_name, cfg, serve_step,
+                      (param_shapes, cache_shapes, tok, pos),
+                      (p_shard, c_shard, tp_shard, tp_shard), model)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,137 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) on the production meshes and extract the
+roofline terms from the compiled artifact.
+
+The two lines ABOVE the docstring must run before any jax import — jax
+locks the device count at first init. This flag is set ONLY here (smoke
+tests and benches see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun.json
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS  # noqa: E402
+from repro.launch.cases import SHAPES, build_case, skip_reason  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (Roofline, collective_wire_bytes,  # noqa: E402
+                                   model_flops, parse_collectives)
+
+ASSIGNED = [a for a in ARCHS if a != "llama3.2-3b"]
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, optimized: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    status="skipped", reason=reason)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        case = build_case(arch, shape_name, mesh, optimized=optimized)
+        with mesh:
+            jitted = jax.jit(case.fn, in_shardings=case.in_shardings)
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        sp = SHAPES[shape_name]
+        colls = parse_collectives(hlo,
+                                  body_multiplier=case.cfg.num_layers)
+        wire = collective_wire_bytes(colls)
+        from repro.launch.roofline import (analytic_flops_global,
+                                           analytic_min_bytes)
+        flops_an = analytic_flops_global(case.cfg, shape_name,
+                                         sp["seq_len"], sp["global_batch"])
+        bytes_floor = analytic_min_bytes(case.cfg, shape_name,
+                                         sp["seq_len"], sp["global_batch"],
+                                         dict(mesh.shape))
+        hlo_bytes = float(cost.get("bytes accessed", 0.0))
+        rl = Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name,
+            flops_per_chip=flops_an / mesh.size,
+            bytes_per_chip=max(hlo_bytes, bytes_floor),
+            collective_bytes_per_chip=wire,
+            num_chips=mesh.size,
+            model_flops_global=model_flops(case.cfg, shape_name,
+                                           sp["seq_len"], sp["global_batch"]),
+            flops_hlo_per_chip=float(cost.get("flops", 0.0)),
+            bytes_hlo_per_chip=hlo_bytes,
+            n_collectives=len(colls),
+            temp_bytes_per_chip=float(mem.temp_size_in_bytes),
+            arg_bytes_per_chip=float(mem.argument_size_in_bytes),
+        )
+        row = rl.row()
+        row.update(status="ok", optimized=optimized,
+                   t_lower=t_lower, t_compile=t_compile,
+                   output_bytes=float(mem.output_size_in_bytes))
+        if verbose:
+            print(f"[ok] {arch:22s} {shape_name:12s} {mesh_name:8s} "
+                  f"comp={rl.t_compute:.3e}s mem={rl.t_memory:.3e}s "
+                  f"coll={rl.t_collective:.3e}s dom={rl.dominant:10s} "
+                  f"args/chip={rl.arg_bytes_per_chip/2**30:.2f}GiB "
+                  f"temp/chip={rl.temp_bytes_per_chip/2**30:.2f}GiB "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)",
+                  flush=True)
+        return row
+    except Exception as e:  # noqa: BLE001 — report, don't abort the sweep
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} {mesh_name}: {e}", flush=True)
+            traceback.print_exc()
+        return dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                    status="fail", error=f"{type(e).__name__}: {e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable beyond-paper sharding optimizations")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    rows = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rows.append(run_case(arch, shape, mp,
+                                     optimized=args.opt))
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skipped")
+    fail = sum(1 for r in rows if r["status"] == "fail")
+    print(f"\n== dry-run: {ok} ok / {skip} skipped / {fail} FAILED "
+          f"of {len(rows)}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print("wrote", args.out)
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher: a CascadeInfer MILS cluster over real JAX engines.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --engines 4 --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.partition import PipelinePlan, Stage
+from repro.core.qoe import QoEModel
+from repro.models import build_model
+from repro.serving.request import ServeRequest
+from repro.serving.server import MILSServer, ServerConfig
+
+
+def default_plan(num_engines: int, max_seq: int) -> PipelinePlan:
+    """Two length stages splitting the engine pool (bootstrapping plan;
+    production planning uses core.partition on profiled stats)."""
+    if num_engines == 1:
+        return PipelinePlan([Stage(0.0, float("inf"), 1)], 0.0)
+    half = num_engines // 2
+    return PipelinePlan(
+        [Stage(0.0, max_seq / 4, num_engines - half),
+         Stage(max_seq / 4, float("inf"), half)], 0.0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--engines", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--policy", default="cascade",
+                    choices=["cascade", "round-robin", "least-loaded"])
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-slots", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = default_plan(args.engines, args.max_seq)
+    qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+    srv = MILSServer(model, params, plan, qoe,
+                     ServerConfig(policy=args.policy, seed=args.seed),
+                     max_slots=args.max_slots, max_seq=args.max_seq)
+    rng = np.random.default_rng(args.seed)
+    reqs = [ServeRequest(i,
+                         rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(8, args.max_seq // 3))
+                                      ).astype(np.int32),
+                         int(rng.integers(8, args.max_seq // 2)))
+            for i in range(args.requests)]
+    srv.run(reqs, max_steps=50 * args.requests)
+    print("summary:", srv.summary())
+    print("stage bounds:", srv.stage_bounds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.common import ModelConfig
+from repro.models.model import Model, build_model, synthetic_batch
+
+__all__ = ["ModelConfig", "Model", "build_model", "synthetic_batch"]

@@ -1,0 +1,319 @@
+"""GQA attention with RoPE / M-RoPE, full and sliding-window variants,
+prefill and single-token decode against a preallocated KV cache.
+
+Shapes follow the serving convention:
+  activations  x        [B, T, D]
+  kv cache     k, v     [B, S, H_kv, Dh]   (ring buffer of size W when
+                                            sliding_window > 0)
+The decode step writes ONE token at ``pos`` and attends over the cache —
+this is what ``serve_step`` lowers in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [B, T, H, Dh]; positions [B, T] (int)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [B, T, Dh/2]
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections=(2, 3, 3)):
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x [B, T, H, Dh]; positions3 [B, T, 3] (temporal, height, width ids —
+    identical streams for pure text).  [arXiv:2409.12191]
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_freqs(dh, theta)                                # [half]
+    total = sum(sections)
+    bounds = []
+    start = 0
+    for s in sections:
+        n = (half * s) // total
+        bounds.append((start, start + n))
+        start += n
+    bounds[-1] = (bounds[-1][0], half)  # absorb rounding into last section
+    pos = positions3.astype(jnp.float32)                         # [B, T, 3]
+    angle_parts = []
+    for i, (lo, hi) in enumerate(bounds):
+        angle_parts.append(pos[..., i:i + 1] * freqs[lo:hi])     # [B, T, hi-lo]
+    angles = jnp.concatenate(angle_parts, axis=-1)               # [B, T, half]
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), cfg.dtype),
+        "wk": dense_init(ks[1], (d, hk * dh), cfg.dtype),
+        "wv": dense_init(ks[2], (d, hk * dh), cfg.dtype),
+        "wo": dense_init(ks[3], (h * dh, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((hk * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((hk * dh,), cfg.dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x):
+    B, T, _ = x.shape
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, T, h, dh), k.reshape(B, T, hk, dh),
+            v.reshape(B, T, hk, dh))
+
+
+# --------------------------------------------------------------------------
+# Core SDPA (GQA, masked) — the XLA path. jnp.einsum lets GSPMD shard the
+# KV sequence axis for context-parallel long decode.
+# --------------------------------------------------------------------------
+def _gqa_sdpa(q, k, v, mask):
+    """q [B,Tq,H,Dh]; k,v [B,S,Hkv,Dh]; mask broadcastable to
+    [B, Hkv, G, Tq, S] (pass 5-d masks; None = attend everything).
+
+    K/V stay in their storage dtype — f32 accumulation comes from
+    ``preferred_element_type`` so the (multi-GiB in decode) cache is never
+    materialized as an f32 copy; scores/softmax still run in f32.
+    """
+    B, Tq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, G, Dh)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(Dh).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Tq, H, Dh).astype(q.dtype)
+
+
+def _causal_mask(Tq: int, S: int, q_offset, window: int = 0):
+    """[1, 1, 1, Tq, S] boolean; True = attend. q position i (global
+    q_offset + i) may see kv position j <= its own; window limits lookback."""
+    qpos = q_offset + jnp.arange(Tq)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m[None, None, None]
+
+
+# --------------------------------------------------------------------------
+# Memory-bounded flash attention (XLA path): double lax.scan over q / kv
+# blocks with online softmax. This is what long-sequence prefill/train
+# lower to on the production mesh — peak temp is O(BQ·BK) per chip instead
+# of O(T·S). (The Pallas kernel is the TPU-executed equivalent; this is
+# the pjit-shardable formulation. Causal block pruning is NOT applied —
+# the grid is static — so HLO FLOPs count ~2× the causal minimum; the
+# roofline's useful_flops_ratio surfaces that.)
+# --------------------------------------------------------------------------
+FLASH_THRESHOLD = 2048 * 2048   # T·S above which prefill uses the scan path
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 1024):
+    """q [B,T,H,Dh]; k,v [B,S,Hkv,Dh] -> [B,T,H,Dh]."""
+    B, T, H, Dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bq, bk = min(block_q, T), min(block_k, S)
+    nq, nk = -(-T // bq), -(-S // bk)
+    Tp, Sp = nq * bq, nk * bk
+    qf = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qg = qf.reshape(B, nq, bq, Hkv, G, Dh).astype(jnp.float32)
+    kg = kf.reshape(B, nk, bk, Hkv, Dh).astype(jnp.float32)
+    vg = vf.reshape(B, nk, bk, Hkv, Dh).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(Dh)
+
+    def q_step(_, qi):
+        qblk, i = qi                      # [B,bq,Hkv,G,Dh], scalar
+        qpos = i * bq + jnp.arange(bq)
+
+        @jax.checkpoint   # backward recomputes p per block (flash-style):
+        def kv_step(carry, kvj):          # else AD saves every [bq,bk] tile
+            m, l, acc = carry
+            kblk, vblk, j = kvj
+            kpos = j * bk + jnp.arange(bk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            mask = kpos[None, :] < S      # padding
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.swapaxes(kg, 0, 1), jnp.swapaxes(vg, 0, 1),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # [B,Hkv,G,bq,Dh]
+        return None, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (jnp.swapaxes(qg, 0, 1), jnp.arange(nq)))
+    # outs [nq, B, Hkv, G, bq, Dh] -> [B, T, H, Dh]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    out = out.reshape(B, Tp, H, Dh)[:, :T]
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Prefill: full self-attention over the prompt, returns the populated cache.
+# --------------------------------------------------------------------------
+def attention_prefill(p, cfg: ModelConfig, x, positions, *, mrope_positions=None):
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.use_mrope:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    elif not cfg.learned_pos:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    T = x.shape[1]
+    B = x.shape[0]
+    if T * T > FLASH_THRESHOLD:
+        out = flash_attention_xla(q, k, v, causal=True,
+                                  window=cfg.sliding_window)
+    else:
+        mask = _causal_mask(T, T, 0, cfg.sliding_window)
+        out = _gqa_sdpa(q, k, v, mask)
+    return (out.reshape(B, T, -1) @ p["wo"]), (k, v)
+
+
+# --------------------------------------------------------------------------
+# Decode: one token vs. a preallocated cache.
+# --------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, S, Hkv, Dh]
+    v: jnp.ndarray
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos,
+                     *, mrope_positions=None):
+    """x [B, 1, D]; pos [B] int32 — number of tokens already in the cache.
+
+    Writes the new token's K/V at ``pos`` (ring index ``pos % W`` when
+    sliding) and attends over valid positions. Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)           # q [B,1,H,Dh]; k,v [B,1,Hkv,Dh]
+    if cfg.use_mrope:
+        mp = (mrope_positions if mrope_positions is not None
+              else jnp.broadcast_to(pos[:, None, None], (B, 1, 3)))
+        q = apply_mrope(q, mp, cfg.rope_theta)
+        k = apply_mrope(k, mp, cfg.rope_theta)
+    elif not cfg.learned_pos:
+        pp = pos[:, None]
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k = apply_rope(k, pp, cfg.rope_theta)
+
+    S = cache.k.shape[1]
+    W = cfg.sliding_window
+    write_idx = (pos % W) if W else jnp.minimum(pos, S - 1)
+
+    def write(buf, new):
+        def one(b, n, i):
+            return jax.lax.dynamic_update_slice(b, n, (i, 0, 0))
+        out = jax.vmap(one)(buf, new, write_idx)
+        if cfg.kv_cache_spec is not None:
+            # pin the scatter result to the cache layout: GSPMD then
+            # reshards the 1-token operand, not the multi-GiB cache
+            out = jax.lax.with_sharding_constraint(out, cfg.kv_cache_spec)
+        return out
+
+    new_k = write(cache.k, k)
+    new_v = write(cache.v, v)
+
+    kpos = jnp.arange(S)[None, :]                               # [1, S]
+    if W:
+        # ring buffer: slot j holds absolute position p where p % W == j and
+        # p <= pos; valid iff pos - W < p <= pos  <=> slot written recently.
+        abs_pos = kpos + ((pos[:, None] - kpos) // W) * W        # latest write
+        valid = (abs_pos >= 0) & (abs_pos >= pos[:, None] - W + 1) \
+                & (abs_pos <= pos[:, None])
+        mask = valid[:, None, None, None, :]
+    else:
+        mask = (kpos <= pos[:, None])[:, None, None, None, :]
+    out = _gqa_sdpa(q, new_k, new_v, mask)
+    return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (whisper decoder): KV precomputed from encoder output.
+# --------------------------------------------------------------------------
+def cross_attention(p, cfg: ModelConfig, x, enc_kv: KVCache):
+    B, T, _ = x.shape
+    h, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, T, h, dh)
+    out = _gqa_sdpa(q, enc_kv.k, enc_kv.v, None)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def encode_cross_kv(p, cfg: ModelConfig, enc_out):
+    B, S, _ = enc_out.shape
+    hk, dh = cfg.num_kv_heads, cfg.head_dim
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return KVCache(k.reshape(B, S, hk, dh), v.reshape(B, S, hk, dh))
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> KVCache:
+    """Preallocate a zeroed cache (ring of size window when sliding)."""
+    S = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    dt = dtype or cfg.dtype
+    shape = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))

@@ -1,0 +1,189 @@
+"""Shared model components: config, norms, embeddings, initializers.
+
+All models in the zoo are pure-functional JAX: parameters are pytrees of
+jnp arrays, every forward is a plain function. Layers are stacked for
+``jax.lax.scan`` (leading ``num_layers`` axis on every per-layer weight)
+so deep configs (48-54 layers) compile quickly and remat cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config per assigned architecture (src/repro/configs/)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int          # 0 for attention-free (rwkv6)
+    num_kv_heads: int
+    d_ff: int               # dense FFN dim (per-expert dim for MoE)
+    vocab_size: int
+    head_dim: int = 0       # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    router_aux_coef: float = 0.01  # load-balance loss coefficient
+    moe_impl: str = "dense"        # dense (exact, CPU) | gshard (distributed)
+
+    # --- positional / attention flavor ---
+    rope_theta: float = 10_000.0
+    use_mrope: bool = False        # qwen2-vl 3-section rope
+    qkv_bias: bool = False
+    sliding_window: int = 0        # 0 = full attention; >0 = window size
+    learned_pos: bool = False      # whisper decoder
+    max_position: int = 131_072
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0             # mamba2 N
+    ssm_head_dim: int = 64         # mamba2 P
+    ssm_chunk: int = 0             # 0 = sequential scan; >0 = chunked SSD
+    attn_every: int = 0            # zamba2: shared attn each N ssm blocks
+
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # frames after the (stubbed) conv frontend
+
+    # --- numerics / impl ---
+    act: str = "swiglu"            # swiglu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: Any = jnp.float32
+    attention_impl: str = "xla"    # xla | pallas (decode path only)
+    # sequence-parallel activation sharding between blocks (§Perf lever):
+    # (batch_axes, seq_axis) mesh-axis names, e.g. (("pod","data"), "model").
+    # None = off (paper-faithful baseline). Needs an active mesh context.
+    act_shard: Any = None
+    # decode KV-cache layout hint (§Perf lever): PartitionSpec for
+    # [B, S, Hkv, Dh] applied to the updated cache inside serve_step —
+    # pins the scatter output so GSPMD reshards the 1-token operand
+    # instead of round-tripping the multi-GiB cache. None = off.
+    kv_cache_spec: Any = None
+    source: str = ""               # citation bracket from the assignment
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def reduced(self, **over) -> "ModelConfig":
+        """Smoke-test variant: <=2 layers, d_model<=256, <=4 experts."""
+        small = dict(
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            num_heads=min(self.num_heads, 4) if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=64 if self.num_heads else 0,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4),
+            experts_per_token=min(self.experts_per_token, 2),
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            attn_every=2 if self.attn_every else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            max_position=4096,
+            name=self.name + "-reduced",
+        )
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+# --------------------------------------------------------------------------
+# Initializers (shape-only friendly: everything goes through jax.random so
+# jax.eval_shape(init, rng) gives ShapeDtypeStructs without allocation).
+# --------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+    std = scale / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def maybe_shard_activations(x, cfg: "ModelConfig"):
+    """Sequence-parallel constraint on inter-block activations [B, T, D]
+    (Megatron SP): seq dim sharded on the tensor axis between blocks, so
+    remat residual stacks shrink by the model-axis size."""
+    if cfg.act_shard is None:
+        return x
+    batch_axes, seq_axis = cfg.act_shard
+    spec = jax.sharding.PartitionSpec(batch_axes, seq_axis,
+                                      *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# Normalization
+# --------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+def act_fn(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross-entropy. logits [..., V], labels int [...].
+
+    The gold logit is extracted with an iota-compare mask-sum rather than
+    ``take_along_axis``: a gather along a model-sharded vocab axis forces
+    GSPMD to replicate the logits (and scatter in backward), while the
+    mask-sum fuses elementwise and keeps the vocab dim sharded.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

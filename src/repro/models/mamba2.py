@@ -1,0 +1,342 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid stack. [arXiv:2411.15242]
+
+Mamba2 head-structured state space: per head h, state S ∈ R^{P×N},
+  S_t = exp(dt_t·A_h)·S_{t-1} + dt_t·(x_t ⊗ B_t),   y_t = S_t·C_t + D_h·x_t
+with scalar A per head, short causal conv on (x, B, C), gated RMSNorm out.
+
+Zamba2: a backbone of Mamba2 blocks with ONE shared attention+MLP block
+applied every ``attn_every`` layers (weights reused at every site, each
+site keeps its own KV cache). Simplification vs. the released model (noted
+in DESIGN.md): the shared block consumes the hidden state directly instead
+of concat(hidden, embedding) + per-site projector.
+
+Decode state is O(1) in sequence length for the Mamba part; only the
+shared-attention sites carry a KV cache — the hybrid's heterogeneity tax
+is scaled by the attention fraction (DESIGN §4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.attention import KVCache
+from repro.models.common import (ModelConfig, dense_init, embed_init,
+                                 rms_norm, maybe_shard_activations)
+from repro.models.mlp import ffn, init_ffn
+
+CONV_K = 4
+EXPAND = 2
+
+
+def dims(cfg: ModelConfig):
+    d_inner = EXPAND * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block params
+# --------------------------------------------------------------------------
+def init_mamba_block(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C share the conv
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((D,), cfg.dtype),
+        "w_in": dense_init(ks[0], (D, 2 * d_inner + 2 * N + H), cfg.dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, conv_dim), cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "ln_gate": jnp.ones((d_inner,), cfg.dtype),
+        "w_out": dense_init(ks[2], (d_inner, D), cfg.dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    d_inner, H, P, N = dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _conv_seq(pl, xbc):
+    """Causal depthwise conv over time. xbc [B, T, Cd]."""
+    w = pl["conv_w"].astype(jnp.float32)                          # [K, Cd]
+    pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + xbc.shape[1]] * w[k] for k in range(CONV_K))
+    return jax.nn.silu(out + pl["conv_b"].astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_scan(pl, cfg: ModelConfig, x, B, C, dt, S0=None):
+    """Sequential SSD over time. x [B,T,d_inner]; B,C [B,T,N]; dt [B,T,H].
+    Returns (y [B,T,d_inner], final state [B,H,P,N])."""
+    d_inner, H, P, N = dims(cfg)
+    Bb, T, _ = x.shape
+    xh = x.reshape(Bb, T, H, P).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + pl["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(pl["A_log"])                                      # [H]
+    decay = jnp.exp(dtf * A)                                       # [B,T,H]
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    S = S0 if S0 is not None else jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(S, inp):
+        xt, Bt, Ct, dct, dtt = inp          # [B,H,P],[B,N],[B,N],[B,H],[B,H]
+        S = dct[..., None, None] * S + (dtt[..., None, None]
+                                        * xt[..., None] * Bt[:, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, y
+
+    xs = (jnp.swapaxes(xh, 0, 1), jnp.swapaxes(Bf, 0, 1),
+          jnp.swapaxes(Cf, 0, 1), jnp.swapaxes(decay, 0, 1),
+          jnp.swapaxes(dtf, 0, 1))
+    S, ys = jax.lax.scan(step, S, xs)
+    y = jnp.swapaxes(ys, 0, 1)                                     # [B,T,H,P]
+    y = y + pl["D_skip"][None, None, :, None] * xh
+    return y.reshape(Bb, T, d_inner), S
+
+
+def _ssd_chunked(pl, cfg: ModelConfig, x, B, C, dt, S0=None,
+                 chunk: int = 128):
+    """Chunk-parallel SSD (the actual Mamba2 algorithm): within a chunk the
+    scalar-per-head decays form a 1-semiseparable matrix computed with
+    matmuls; only the T/chunk inter-chunk state recurrence is sequential.
+    Numerically identical to ``_ssd_scan`` (tested); AD saves one state
+    per CHUNK instead of per token — the zamba2 train-memory fix.
+    """
+    d_inner, H, P, N = dims(cfg)
+    Bb, T, _ = x.shape
+    assert T % chunk == 0, (T, chunk)
+    nc, Ck = T // chunk, chunk
+    xh = x.reshape(Bb, T, H, P).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + pl["dt_bias"])  # [B,T,H]
+    A = -jnp.exp(pl["A_log"])                                      # [H]
+    la = dtf * A                                                   # log decay
+    xdt = xh * dtf[..., None]                                      # [B,T,H,P]
+    Bf = B.astype(jnp.float32).reshape(Bb, nc, Ck, N)
+    Cf = C.astype(jnp.float32).reshape(Bb, nc, Ck, N)
+    xdt_c = xdt.reshape(Bb, nc, Ck, H, P)
+    cl = jnp.cumsum(la.reshape(Bb, nc, Ck, H), axis=2)             # [B,nc,Ck,H]
+    mask = jnp.tril(jnp.ones((Ck, Ck), bool))                      # s <= t
+    S = S0 if S0 is not None else jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def chunk_body(S, inp):
+        xc, Bc, Cc, clc = inp          # [B,Ck,H,P],[B,Ck,N],[B,Ck,N],[B,Ck,H]
+        # intra-chunk: y_t += Σ_{s<=t} exp(cl_t - cl_s) (C_t·B_s) xdt_s
+        M = jnp.exp(clc[:, :, None, :] - clc[:, None, :, :])       # [B,t,s,H]
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)
+        y = jnp.einsum("bts,btsh,bshp->bthp", CB, M, xc)
+        # inter-chunk: carry-in state decayed to position t
+        y = y + jnp.einsum("bth,btn,bhpn->bthp", jnp.exp(clc), Cc, S)
+        # state update to chunk end
+        cl_last = clc[:, -1]                                       # [B,H]
+        S_add = jnp.einsum("bsh,bshp,bsn->bhpn",
+                           jnp.exp(cl_last[:, None] - clc), xc, Bc)
+        S = jnp.exp(cl_last)[..., None, None] * S + S_add
+        return S, y
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (xdt_c, Bf, Cf, cl))
+    S, ys = jax.lax.scan(chunk_body, S, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, T, H, P)
+    y = y + pl["D_skip"][None, None, :, None] * xh
+    return y.reshape(Bb, T, d_inner), S
+
+
+def _ssd(pl, cfg: ModelConfig, x, B, C, dt, S0=None):
+    """Dispatch: chunked when enabled and the length divides."""
+    chunk = getattr(cfg, "ssm_chunk", 0)
+    if chunk and x.shape[1] % chunk == 0 and x.shape[1] >= chunk:
+        return _ssd_chunked(pl, cfg, x, B, C, dt, S0, chunk)
+    return _ssd_scan(pl, cfg, x, B, C, dt, S0)
+
+
+def mamba_seq(pl, cfg: ModelConfig, x, return_state: bool = False):
+    """Full-sequence Mamba2 block. x [B,T,D] -> [B,T,D] (+ decode states)."""
+    h = rms_norm(x, pl["ln"], cfg.norm_eps)
+    z, xs, B, C, dt = _split_proj(cfg, h @ pl["w_in"])
+    xbc_raw = jnp.concatenate([xs, B, C], axis=-1)
+    xbc = _conv_seq(pl, xbc_raw)
+    d_inner, _, _, N = dims(cfg)
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    y, S = _ssd(pl, cfg, xs, B, C, dt)
+    y = _gated_out(pl, cfg, y, z)
+    if return_state:
+        pad = jnp.pad(xbc_raw, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+        conv_state = pad[:, -(CONV_K - 1):] if CONV_K > 1 else pad[:, :0]
+        return x + y, conv_state, S
+    return x + y
+
+
+def _gated_out(pl, cfg: ModelConfig, y, z):
+    y = rms_norm(y.astype(cfg.dtype) * jax.nn.silu(z), pl["ln_gate"],
+                 cfg.norm_eps)
+    return y @ pl["w_out"]
+
+
+def mamba_step(pl, cfg: ModelConfig, x, conv_state, S):
+    """One decode token. x [B,D]; conv_state [B,K-1,Cd]; S [B,H,P,N]."""
+    d_inner, H, P, N = dims(cfg)
+    h = rms_norm(x, pl["ln"], cfg.norm_eps)
+    z, xs, B, C, dt = _split_proj(cfg, h @ pl["w_in"])
+    xbc = jnp.concatenate([xs, B, C], axis=-1)                     # [B, Cd]
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)   # [B,K,Cd]
+    w = pl["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    conv = jax.nn.silu(conv + pl["conv_b"].astype(jnp.float32))
+    xs, B, C = jnp.split(conv.astype(x.dtype), [d_inner, d_inner + N], axis=-1)
+
+    y, S = _ssd_scan(pl, cfg, xs[:, None], B[:, None], C[:, None],
+                     dt[:, None], S0=S)
+    y = _gated_out(pl, cfg, y[:, 0], z)
+    return x + y, window[:, 1:], S
+
+
+# --------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# --------------------------------------------------------------------------
+def init_zamba(key, cfg: ModelConfig):
+    assert cfg.attn_every and cfg.num_layers % cfg.attn_every == 0
+    groups = cfg.num_layers // cfg.attn_every
+    ks = jax.random.split(key, cfg.num_layers + 4)
+    blocks = [init_mamba_block(ks[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    # reshape leading axis L -> [groups, attn_every]
+    stacked = jax.tree.map(
+        lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), stacked)
+    shared = {
+        "ln_attn": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_mlp": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": attn.init_attention(ks[-4], cfg),
+        "ffn": init_ffn(ks[-3], cfg),
+    }
+    return {
+        "embed": embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), cfg.dtype),
+        "mamba": stacked,
+        "shared": shared,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        "unembed": dense_init(ks[-1], (cfg.d_model, cfg.vocab_size), cfg.dtype),
+    }
+
+
+def _shared_full(ps, cfg, x, positions):
+    h = rms_norm(x, ps["ln_attn"], cfg.norm_eps)
+    a, kv = attn.attention_prefill(ps["attn"], cfg, h, positions)
+    x = x + a
+    x = x + ffn(ps["ffn"], cfg, rms_norm(x, ps["ln_mlp"], cfg.norm_eps))
+    return x, KVCache(*kv)
+
+
+def _shared_decode(ps, cfg, x, cache_site: KVCache, pos):
+    h = rms_norm(x, ps["ln_attn"], cfg.norm_eps)
+    a, new_cache = attn.attention_decode(ps["attn"], cfg, h, cache_site, pos)
+    x = x + a
+    x = x + ffn(ps["ffn"], cfg, rms_norm(x, ps["ln_mlp"], cfg.norm_eps))
+    return x, new_cache
+
+
+def forward_full(p, cfg: ModelConfig, tokens, remat: bool = False,
+                 return_cache: bool = False):
+    x = p["embed"][tokens]
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def group(x, mamba_group):
+        def inner(x, pl):
+            x = maybe_shard_activations(x, cfg)
+            return mamba_seq(pl, cfg, x), 0
+        inner_fn = jax.checkpoint(inner) if remat else inner
+        x, _ = jax.lax.scan(inner_fn, x, mamba_group)
+        x, kv = _shared_full(p["shared"], cfg, x, positions)
+        return x, kv if return_cache else 0
+
+    x, kvs = jax.lax.scan(group, x, p["mamba"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["unembed"], (kvs if return_cache else None), jnp.float32(0.0)
+
+
+def init_state(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    groups = cfg.num_layers // cfg.attn_every
+    S = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    return {
+        "conv": jnp.zeros((groups, cfg.attn_every, batch, CONV_K - 1, conv_dim),
+                          cfg.dtype),
+        "ssm": jnp.zeros((groups, cfg.attn_every, batch, H, P, N), jnp.float32),
+        "kv": KVCache(
+            jnp.zeros((groups, batch, S, cfg.num_kv_heads, cfg.head_dim),
+                      cfg.dtype),
+            jnp.zeros((groups, batch, S, cfg.num_kv_heads, cfg.head_dim),
+                      cfg.dtype)),
+    }
+
+
+def prefill(p, cfg: ModelConfig, tokens, cache_len: int | None = None):
+    """Run the prompt, return (last_logits, decode state dict).
+
+    The attention KV cache is re-laid into a preallocated buffer of
+    ``cache_len`` (default: prompt length) so decode can append."""
+    B, T = tokens.shape
+    S = cache_len or T
+    x = p["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def group(x, mamba_group):
+        def inner(x, pl):
+            x, conv, Ss = mamba_seq(pl, cfg, x, return_state=True)
+            return x, (conv, Ss)
+
+        x, (conv_g, ssm_g) = jax.lax.scan(inner, x, mamba_group)
+        x, kv = _shared_full(p["shared"], cfg, x, positions)
+        return x, (conv_g, ssm_g, kv)
+
+    x, (conv, ssm, kvs) = jax.lax.scan(group, x, p["mamba"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = x[:, -1] @ p["unembed"]
+
+    # re-lay prompt KV into the preallocated decode buffer
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    G = cfg.num_layers // cfg.attn_every
+
+    def relay(k):  # [G, B, T, Hkv, Dh] -> [G, B, W, Hkv, Dh]
+        buf = jnp.zeros((G, B, W, cfg.num_kv_heads, cfg.head_dim), k.dtype)
+        take = min(T, W)
+        # slot = absolute position % W (ring-buffer layout used by decode)
+        idx = jnp.arange(T - take, T) % W
+        return buf.at[:, :, idx].set(k[:, :, T - take:])
+
+    state = {"conv": conv, "ssm": ssm,
+             "kv": KVCache(relay(kvs.k), relay(kvs.v))}
+    return logits, state
+
+
+def forward_decode(p, cfg: ModelConfig, token, state, pos):
+    """token [B]; pos [B] — tokens already in the attention cache."""
+    x = p["embed"][token]
+
+    def group(x, inp):
+        mamba_group, conv_g, ssm_g, kv_g = inp
+
+        def inner(x, layer):
+            pl, conv, S = layer
+            x, conv, S = mamba_step(pl, cfg, x, conv, S)
+            return x, (conv, S)
+
+        x, (conv_g, ssm_g) = jax.lax.scan(inner, x, (mamba_group, conv_g, ssm_g))
+        x2, kv_g = _shared_decode(p["shared"], cfg, x[:, None], kv_g, pos)
+        return x2[:, 0], (conv_g, ssm_g, kv_g)
+
+    x, (conv, ssm, kv) = jax.lax.scan(
+        group, x, (p["mamba"], state["conv"], state["ssm"], state["kv"]))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = x @ p["unembed"]
+    return logits, {"conv": conv, "ssm": ssm, "kv": kv}

@@ -1,0 +1,143 @@
+"""Feed-forward layers: SwiGLU / GELU dense FFN and token-choice MoE.
+
+Two MoE dispatch implementations:
+
+  * ``dense``  — every token runs every expert, masked combine. Exact,
+    dropless, trivial to verify; used for CPU smoke tests and the real
+    in-process serving engine (expert counts are tiny there).
+  * ``gshard`` — capacity-based one-hot dispatch/combine einsums
+    (GShard / Switch formulation). Active-expert FLOPs only; the expert
+    axis shards cleanly under GSPMD (all-to-all), which is what the
+    multi-pod dry-run and roofline need at 128 experts.
+
+Router load-balance auxiliary loss follows Switch Transformer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, act_fn, dense_init
+
+
+# --------------------------------------------------------------------------
+# Dense FFN
+# --------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f), cfg.dtype),
+            "w_up": dense_init(ks[1], (d, f), cfg.dtype),
+            "w_down": dense_init(ks[2], (f, d), cfg.dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f), cfg.dtype),
+        "b_up": jnp.zeros((f,), cfg.dtype),
+        "w_down": dense_init(ks[1], (f, d), cfg.dtype),
+        "b_down": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def ffn(p, cfg: ModelConfig, x):
+    a = act_fn(cfg.act)
+    if "w_gate" in p:
+        return (a(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return a(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), cfg.dtype),
+        "w_up": dense_init(ks[2], (e, d, f), cfg.dtype),
+        "w_down": dense_init(ks[3], (e, f, d), cfg.dtype),
+    }
+
+
+def _route(p, cfg: ModelConfig, xf):
+    """xf [N, D] -> (probs [N,E], topw [N,K], topi [N,K], aux scalar)."""
+    E, K = cfg.num_experts, cfg.experts_per_token
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)           # [N, K, E]
+    frac = jnp.mean(onehot.sum(1), axis=0)                        # tokens/expert
+    prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * prob) * cfg.router_aux_coef
+    return probs, topw, topi, aux
+
+
+def _experts(p, cfg: ModelConfig, xe):
+    """Batched expert FFN. xe [E, ..., D] -> [E, ..., D]."""
+    a = act_fn(cfg.act)
+    h = jnp.einsum("e...d,edf->e...f", xe, p["w_gate"])
+    u = jnp.einsum("e...d,edf->e...f", xe, p["w_up"])
+    return jnp.einsum("e...f,efd->e...d", a(h) * u, p["w_down"])
+
+
+def moe_dense(p, cfg: ModelConfig, x):
+    """Exact dropless MoE by running all experts on all tokens."""
+    B, T, D = x.shape
+    E = cfg.num_experts
+    xf = x.reshape(B * T, D)
+    _, topw, topi, aux = _route(p, cfg, xf)
+    combine = jnp.einsum("nk,nke->ne", topw,
+                         jax.nn.one_hot(topi, E, dtype=jnp.float32))
+    y = _experts(p, cfg, jnp.broadcast_to(xf, (E,) + xf.shape))   # [E, N, D]
+    out = jnp.einsum("end,ne->nd", y.astype(jnp.float32), combine)
+    return out.reshape(B, T, D).astype(x.dtype), aux
+
+
+def moe_gshard(p, cfg: ModelConfig, x, capacity_factor: float = 1.25):
+    """Capacity-based dispatch. x [G, S, D] with G = batch groups (sharded
+    on data under pjit); tokens above per-group expert capacity are dropped
+    with their combine weight (GShard semantics)."""
+    G, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = max(1, math.ceil(S * K / E * capacity_factor))
+
+    xf = x.reshape(G * S, D)
+    _, topw, topi, aux = _route(p, cfg, xf)
+    topw = topw.reshape(G, S, K)
+    topi = topi.reshape(G, S, K)
+
+    # slot of each (token, k) pair within its expert, per group
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)           # [G,S,K,E]
+    flat = onehot.reshape(G, S * K, E)
+    prior = jnp.cumsum(flat, axis=1) - flat                       # earlier pairs
+    slot = jnp.einsum("gpe,gpe->gp", prior,
+                      flat).reshape(G, S, K).astype(jnp.int32)
+
+    # combine mask [G,S,E,C]: sum over K of weight * onehot(expert)*onehot(slot)
+    combine = jnp.zeros((G, S, E, C), jnp.float32)
+    for k in range(K):
+        keep = (slot[..., k] < C).astype(jnp.float32) * topw[..., k]
+        slot_oh = jax.nn.one_hot(jnp.minimum(slot[..., k], C - 1), C,
+                                 dtype=jnp.float32)               # [G,S,C]
+        combine = combine + (keep[..., None, None]
+                             * onehot[:, :, k, :, None] * slot_oh[:, :, None, :])
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, x)                # [E,G,C,D]
+    y = _experts(p, cfg, xe)                                      # [E,G,C,D]
+    out = jnp.einsum("egcd,gsec->gsd", y.astype(jnp.float32), combine)
+    return out.astype(x.dtype), aux
+
+
+def moe(p, cfg: ModelConfig, x, impl: str | None = None):
+    impl = impl or getattr(cfg, "moe_impl", "dense")
+    if impl == "dense":
+        return moe_dense(p, cfg, x)
+    if impl == "gshard":
+        return moe_gshard(p, cfg, x)
+    raise ValueError(f"unknown moe impl {impl!r}")

@@ -1,0 +1,238 @@
+"""RWKV-6 "Finch" — attention-free RNN with data-dependent decay.
+[arXiv:2404.05892]
+
+Faithful pieces: token-shift mixing, per-channel data-dependent decay
+``w_t = exp(-exp(w0 + lora(x)))``, per-head matrix-valued state
+``S_t = diag(w_t) S_{t-1} + k_t v_t^T``, bonus ``u`` on the current token,
+squared-ReLU channel mix. Simplification (noted in DESIGN.md): static
+token-shift interpolation weights instead of the v6 dynamic ddlerp — the
+decay (the part that matters for serving cost) stays fully data-dependent.
+
+Decode is O(1) per token: the whole point of including this arch —
+CascadeInfer's length-heterogeneity tax vanishes for it (DESIGN §4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, dense_init, embed_init,
+                                 rms_norm, maybe_shard_activations)
+
+LORA_R = 32
+
+
+def _heads(cfg: ModelConfig):
+    K = cfg.ssm_head_dim or 64
+    H = cfg.d_model // K
+    return H, K
+
+
+def init_layer(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H, K = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    return {
+        "ln_att": jnp.ones((D,), cfg.dtype),
+        "ln_ffn": jnp.ones((D,), cfg.dtype),
+        # token-shift mixes (static lerp weights in [0,1])
+        "mu_r": jnp.full((D,), 0.5, cfg.dtype),
+        "mu_k": jnp.full((D,), 0.5, cfg.dtype),
+        "mu_v": jnp.full((D,), 0.5, cfg.dtype),
+        "mu_w": jnp.full((D,), 0.5, cfg.dtype),
+        "mu_g": jnp.full((D,), 0.5, cfg.dtype),
+        "w_r": dense_init(ks[0], (D, D), cfg.dtype),
+        "w_k": dense_init(ks[1], (D, D), cfg.dtype),
+        "w_v": dense_init(ks[2], (D, D), cfg.dtype),
+        "w_g": dense_init(ks[3], (D, D), cfg.dtype),
+        "w_o": dense_init(ks[4], (D, D), cfg.dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": jnp.full((D,), -6.0, cfg.dtype),
+        "decay_A": dense_init(ks[5], (D, LORA_R), cfg.dtype),
+        "decay_B": dense_init(ks[6], (LORA_R, D), cfg.dtype, scale=0.1),
+        "bonus_u": jnp.zeros((H, K), cfg.dtype),
+        "ln_x": jnp.ones((D,), cfg.dtype),  # per-head group norm weight
+        # channel mix
+        "mu_ck": jnp.full((D,), 0.5, cfg.dtype),
+        "mu_cr": jnp.full((D,), 0.5, cfg.dtype),
+        "cw_k": dense_init(ks[7], (D, cfg.d_ff), cfg.dtype),
+        "cw_v": dense_init(ks[8], (cfg.d_ff, D), cfg.dtype),
+        "cw_r": dense_init(ks[9], (D, D), cfg.dtype),
+    }
+
+
+def init_model(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    layers = [init_layer(ks[i], cfg) for i in range(cfg.num_layers)]
+    return {
+        "embed": embed_init(ks[-3], (cfg.vocab_size, cfg.d_model), cfg.dtype),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        "unembed": dense_init(ks[-2], (cfg.d_model, cfg.vocab_size), cfg.dtype),
+    }
+
+
+def _decay(pl, xw):
+    return jnp.exp(-jnp.exp(
+        (pl["decay_w0"].astype(jnp.float32)
+         + jnp.tanh(xw.astype(jnp.float32) @ pl["decay_A"].astype(jnp.float32))
+         @ pl["decay_B"].astype(jnp.float32))))
+
+
+def _group_norm(x, weight, H, K, eps=1e-5):
+    """Per-head LayerNorm on [..., H, K] flattened to [..., D]."""
+    shp = x.shape
+    x = x.reshape(shp[:-1] + (H, K)).astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x.reshape(shp) * weight.astype(jnp.float32))
+
+
+def time_mix_step(pl, cfg: ModelConfig, x, x_prev, S):
+    """One token. x [B, D]; S [B, H, K, K]; returns (out, S')."""
+    H, K = _heads(cfg)
+    B, D = x.shape
+    lerp = lambda mu: x + (x_prev - x) * mu
+    r = (lerp(pl["mu_r"]) @ pl["w_r"]).reshape(B, H, K)
+    k = (lerp(pl["mu_k"]) @ pl["w_k"]).reshape(B, H, K)
+    v = (lerp(pl["mu_v"]) @ pl["w_v"]).reshape(B, H, K)
+    g = jax.nn.silu(lerp(pl["mu_g"]) @ pl["w_g"])
+    w = _decay(pl, lerp(pl["mu_w"])).reshape(B, H, K)             # f32
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = pl["bonus_u"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    y = jnp.einsum("bhk,bhkv->bhv", rf, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    y = _group_norm(y.reshape(B, D), pl["ln_x"], H, K)
+    return ((y * g.astype(jnp.float32)) @ pl["w_o"].astype(jnp.float32)
+            ).astype(x.dtype), S
+
+
+def time_mix_seq(pl, cfg: ModelConfig, x, S0=None, x_prev0=None,
+                 return_state: bool = False):
+    """Full sequence. x [B, T, D] -> [B, T, D].
+
+    TPU-structured: the token-shift lerps and ALL projections run as
+    full-sequence matmuls OUTSIDE the scan (MXU-sized work, correctly
+    counted by cost analysis); only the O(H·K²) recurrence stays
+    sequential."""
+    H, K = _heads(cfg)
+    B, T, D = x.shape
+    xp = _shift(x)
+    if x_prev0 is not None:                      # decode-state handoff
+        xp = xp.at[:, 0].set(x_prev0)
+    lerp = lambda mu: x + (xp - x) * mu
+    r = (lerp(pl["mu_r"]) @ pl["w_r"]).reshape(B, T, H, K)
+    k = (lerp(pl["mu_k"]) @ pl["w_k"]).reshape(B, T, H, K)
+    v = (lerp(pl["mu_v"]) @ pl["w_v"]).reshape(B, T, H, K)
+    g = jax.nn.silu(lerp(pl["mu_g"]) @ pl["w_g"])
+    w = _decay(pl, lerp(pl["mu_w"])).reshape(B, T, H, K)          # f32
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = pl["bonus_u"].astype(jnp.float32)
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                    # [B,H,K] each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.swapaxes(a, 0, 1) for a in (rf, kf, vf, w))
+    S, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, T, D)                   # f32
+    y = _group_norm(y, pl["ln_x"], H, K)
+    out = ((y * g.astype(jnp.float32))
+           @ pl["w_o"].astype(jnp.float32)).astype(x.dtype)
+    if return_state:
+        return out, S, x[:, -1]
+    return out
+
+
+def channel_mix(pl, cfg: ModelConfig, x, x_prev):
+    """x, x_prev [.., D] (x_prev = token-shifted input)."""
+    xk = x + (x_prev - x) * pl["mu_ck"]
+    xr = x + (x_prev - x) * pl["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ pl["cw_k"]))
+    return jax.nn.sigmoid(xr @ pl["cw_r"]) * (k @ pl["cw_v"])
+
+
+def _shift(x):
+    """[B, T, D] -> previous token (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def layer_seq(pl, cfg: ModelConfig, x):
+    h = rms_norm(x, pl["ln_att"], cfg.norm_eps)
+    x = x + time_mix_seq(pl, cfg, h)
+    h = rms_norm(x, pl["ln_ffn"], cfg.norm_eps)
+    return x + channel_mix(pl, cfg, h, _shift(h))
+
+
+def forward_full(p, cfg: ModelConfig, tokens, remat: bool = False):
+    x = p["embed"][tokens]
+
+    def body(x, pl):
+        x = maybe_shard_activations(x, cfg)
+        return layer_seq(pl, cfg, x), 0
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, p["layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["unembed"], None, jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# Decode: O(1) recurrent state per layer
+# --------------------------------------------------------------------------
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    H, K = _heads(cfg)
+    L, D = cfg.num_layers, cfg.d_model
+    return {
+        "S": jnp.zeros((L, batch, H, K, K), jnp.float32),
+        "att_prev": jnp.zeros((L, batch, D), cfg.dtype),
+        "ffn_prev": jnp.zeros((L, batch, D), cfg.dtype),
+    }
+
+
+def forward_decode(p, cfg: ModelConfig, token, state, pos=None):
+    """token [B] -> (logits [B, V], state')."""
+    x = p["embed"][token]
+
+    def body(x, layer):
+        pl, S, att_prev, ffn_prev = layer
+        h = rms_norm(x, pl["ln_att"], cfg.norm_eps)
+        y, S = time_mix_step(pl, cfg, h, att_prev, S)
+        x = x + y
+        h2 = rms_norm(x, pl["ln_ffn"], cfg.norm_eps)
+        x = x + channel_mix(pl, cfg, h2, ffn_prev)
+        return x, (S, h, h2)
+
+    x, (S, att_prev, ffn_prev) = jax.lax.scan(
+        body, x, (p["layers"], state["S"], state["att_prev"], state["ffn_prev"]))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return x @ p["unembed"], {"S": S, "att_prev": att_prev, "ffn_prev": ffn_prev}
+
+
+def prefill(p, cfg: ModelConfig, tokens):
+    """Run the prompt and return (last_logits, decode state)."""
+    x = p["embed"][tokens]
+
+    def body(x, pl):
+        h = rms_norm(x, pl["ln_att"], cfg.norm_eps)
+        y, S, att_prev = time_mix_seq(pl, cfg, h, return_state=True)
+        x = x + y
+        h2 = rms_norm(x, pl["ln_ffn"], cfg.norm_eps)
+        x = x + channel_mix(pl, cfg, h2, _shift(h2))
+        return x, (S, att_prev, h2[:, -1])
+
+    x, (S, att_prev, ffn_prev) = jax.lax.scan(body, x, p["layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    logits = x[:, -1] @ p["unembed"]
+    return logits, {"S": S, "att_prev": att_prev, "ffn_prev": ffn_prev}

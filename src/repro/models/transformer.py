@@ -1,0 +1,164 @@
+"""Decoder-only transformer stack (dense GQA / MoE / VLM flavors).
+
+Per-layer weights are stacked on a leading ``L`` axis and the layer loop is
+``jax.lax.scan`` — fast compiles at 48+ layers and remat-friendly. The same
+block code serves train (full-sequence), prefill (returns KV cache) and
+decode (one token against the cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.attention import KVCache
+from repro.models.common import (ModelConfig, embed_init, rms_norm,
+                                 dense_init, maybe_shard_activations)
+from repro.models.mlp import ffn, init_ffn, init_moe, moe
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln_attn": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_mlp": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": attn.init_attention(ks[0], cfg),
+    }
+    if cfg.num_experts:
+        p["moe"] = init_moe(ks[1], cfg)
+        if cfg.dense_residual:  # arctic: parallel dense FFN
+            p["ffn"] = init_ffn(ks[2], cfg)
+            p["ln_res"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg)
+    return p
+
+
+def init_decoder(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.num_layers + 3)
+    layers = [init_block(ks[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    p = {
+        "embed": embed_init(ks[-3], (cfg.vocab_size, cfg.d_model), cfg.dtype),
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[-2], (cfg.d_model, cfg.vocab_size), cfg.dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Block forward (shared by all modes)
+# --------------------------------------------------------------------------
+def _mlp_part(pl, cfg: ModelConfig, x):
+    """Returns (mlp_out, aux)."""
+    h = rms_norm(x, pl["ln_mlp"], cfg.norm_eps)
+    if cfg.num_experts:
+        out, aux = moe(pl["moe"], cfg, h, cfg.moe_impl)
+        if cfg.dense_residual:
+            out = out + ffn(pl["ffn"], cfg, rms_norm(x, pl["ln_res"], cfg.norm_eps))
+        return out, aux
+    return ffn(pl["ffn"], cfg, h), jnp.float32(0.0)
+
+
+def block_full(pl, cfg: ModelConfig, x, positions, mrope_positions=None):
+    """Full-sequence pass (train / prefill). Returns (x, cache_l, aux)."""
+    h = rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+    a, (k, v) = attn.attention_prefill(pl["attn"], cfg, h, positions,
+                                       mrope_positions=mrope_positions)
+    x = x + a
+    m, aux = _mlp_part(pl, cfg, x)
+    return x + m, KVCache(k, v), aux
+
+
+def block_decode(pl, cfg: ModelConfig, x, cache_l: KVCache, pos,
+                 mrope_positions=None):
+    h = rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+    a, new_cache = attn.attention_decode(pl["attn"], cfg, h, cache_l, pos,
+                                         mrope_positions=mrope_positions)
+    x = x + a
+    m, aux = _mlp_part(pl, cfg, x)
+    return x + m, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Embedding in/out
+# --------------------------------------------------------------------------
+def embed_tokens(p, cfg: ModelConfig, tokens, vision_embeds=None,
+                 vision_mask=None):
+    x = p["embed"][tokens]
+    if vision_embeds is not None and vision_mask is not None:
+        # place the precomputed patch embeddings (VLM stub frontend) at the
+        # masked positions, in order.
+        B, T, D = x.shape
+        idx = jnp.cumsum(vision_mask.astype(jnp.int32), axis=1) - 1
+        idx = jnp.clip(idx, 0, vision_embeds.shape[1] - 1)
+        gathered = jnp.take_along_axis(vision_embeds, idx[..., None], axis=1)
+        x = jnp.where(vision_mask[..., None], gathered.astype(x.dtype), x)
+    return x
+
+
+def unembed(p, cfg: ModelConfig, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    return x @ w
+
+
+# --------------------------------------------------------------------------
+# Full-stack passes
+# --------------------------------------------------------------------------
+def forward_full(p, cfg: ModelConfig, tokens, *, vision_embeds=None,
+                 vision_mask=None, mrope_positions=None, return_cache=False,
+                 remat: bool = False, last_only: bool = False):
+    """Train / prefill pass. Returns (logits, cache|None, aux)."""
+    x = embed_tokens(p, cfg, tokens, vision_embeds, vision_mask)
+    B, T = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if cfg.use_mrope and mrope_positions is None:
+        mrope_positions = jnp.broadcast_to(positions[..., None], (B, T, 3))
+
+    def body(carry, pl):
+        x, aux = carry
+        x = maybe_shard_activations(x, cfg)
+        x, cache_l, a = block_full(pl, cfg, x, positions, mrope_positions)
+        return (x, aux + a), cache_l if return_cache else 0
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), p["layers"])
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    if last_only:   # serving prefill needs next-token logits only
+        x = x[:, -1:]
+    logits = unembed(p, cfg, x)
+    return logits, (caches if return_cache else None), aux
+
+
+def forward_decode(p, cfg: ModelConfig, token, cache: KVCache, pos,
+                   *, mrope_positions=None):
+    """token [B] int32; cache leaves [L, B, S, Hkv, Dh]; pos [B] int32.
+    Returns (logits [B, V], new_cache)."""
+    x = embed_tokens(p, cfg, token[:, None])
+    if cfg.use_mrope and mrope_positions is None:
+        B = token.shape[0]
+        mrope_positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+
+    def body(x, layer):
+        pl, cache_l = layer
+        x, new_cache_l, _ = block_decode(pl, cfg, x, cache_l, pos,
+                                         mrope_positions)
+        return x, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (p["layers"], cache))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return unembed(p, cfg, x)[:, 0], new_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> KVCache:
+    S = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+    dt = dtype or cfg.dtype
+    shape = (cfg.num_layers, batch, S, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))

@@ -1,0 +1,185 @@
+"""Single-instance JAX inference engine: slot-granular paged KV cache +
+continuous batching (the vLLM-role component of DESIGN §3).
+
+The cache is a preallocated pytree with leaves [L, slots, S_max, ...]; a
+request owns one slot (slot-granular paging — block tables degenerate to
+one block per request; token-budget admission matches vLLM semantics).
+Every ``step()`` is one continuous-batching iteration: admit waiting
+requests into free slots (prefill), then advance all running slots by one
+token with a single batched ``decode_step``. Migration support exports /
+imports a slot's KV slice plus request metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.migration import kv_bytes
+from repro.models.model import Model
+from repro.serving.request import ServeRequest, State
+
+
+class Engine:
+    def __init__(self, engine_id: int, model: Model, params, *,
+                 max_slots: int = 8, max_seq: int = 512,
+                 token_budget: Optional[int] = None):
+        assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
+            "slot engine supports decoder-only families"
+        self.id = engine_id
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.token_budget = token_budget or max_slots * max_seq
+        self.cache = model.init_cache(max_slots, max_seq)
+        self.slot_len = np.zeros(max_slots, np.int32)       # tokens in slot
+        self.slots: List[Optional[ServeRequest]] = [None] * max_slots
+        self.waiting: Deque[ServeRequest] = deque()
+        self.steps = 0
+        self.tokens_out = 0
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=("cache_len",))
+
+    # ---- load views --------------------------------------------------------
+    def active(self) -> List[ServeRequest]:
+        return [r for r in self.slots if r is not None]
+
+    def used_tokens(self) -> int:
+        return int(self.slot_len.sum()
+                   + sum(len(r.prompt) for r in self.waiting))
+
+    def free_tokens(self) -> int:
+        return self.token_budget - self.used_tokens()
+
+    def load(self) -> float:
+        return float(self.used_tokens())
+
+    def has_idle_slot(self) -> bool:
+        return any(r is None for r in self.slots)
+
+    def request_view(self) -> List[Tuple[float, float]]:
+        return [(float(len(r.prompt)), float(r.length)) for r in self.active()]
+
+    # ---- intake -------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        req.state = State.WAITING
+        self.waiting.append(req)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self) -> List[ServeRequest]:
+        admitted = []
+        while self.waiting:
+            req = self.waiting[0]
+            slot = self._free_slot()
+            if slot is None or len(req.prompt) + 1 > self.max_seq:
+                break
+            if self.slot_len.sum() + req.length + 1 > self.token_budget:
+                break
+            self.waiting.popleft()
+            self._prefill_into_slot(req, slot)
+            admitted.append(req)
+        return admitted
+
+    def _prefill_into_slot(self, req: ServeRequest, slot: int) -> None:
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, piece = self._prefill(self.params, {"tokens": tokens},
+                                      cache_len=self.max_seq)
+        self.cache = _write_slot(self.cache, piece, slot)
+        vec = logits if logits.ndim == 1 else logits[0]
+        tok = int(jnp.argmax(vec))
+        req.generated.append(tok)
+        req.first_token_step = self.steps
+        req.state = State.RUNNING
+        req.engine_id = self.id
+        req.slot = slot
+        req.tokens_by_engine[self.id] = req.tokens_by_engine.get(self.id, 0) + 1
+        self.slots[slot] = req
+        self.slot_len[slot] = req.length
+        self.tokens_out += 1
+
+    # ---- one continuous-batching iteration ----------------------------------
+    def step(self) -> List[ServeRequest]:
+        """Returns requests that finished this step."""
+        self.steps += 1
+        self._admit()
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        finished: List[ServeRequest] = []
+        if live:
+            last_tok = jnp.asarray(
+                [r.generated[-1] if r.generated else r.prompt[-1]
+                 for _, r in live], jnp.int32)
+            pos = jnp.asarray([self.slot_len[i] - 1 for i, _ in live],
+                              jnp.int32)
+            sub_cache = jax.tree.map(
+                lambda a: a[:, np.asarray([i for i, _ in live])], self.cache)
+            logits, new_sub = self._decode(self.params, sub_cache, last_tok,
+                                           pos)
+            for j, (i, r) in enumerate(live):
+                self.cache = _write_slot(
+                    self.cache, jax.tree.map(lambda a: a[:, j:j + 1], new_sub),
+                    i)
+                tok = int(jnp.argmax(logits[j]))
+                r.generated.append(tok)
+                r.tokens_by_engine[self.id] = \
+                    r.tokens_by_engine.get(self.id, 0) + 1
+                self.tokens_out += 1
+                self.slot_len[i] += 1
+                if r.done or self.slot_len[i] >= self.max_seq:
+                    r.state = State.FINISHED
+                    r.finish_step = self.steps
+                    finished.append(r)
+                    self._release(i)
+        return finished
+
+    def _release(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.slot_len[slot] = 0
+
+    # ---- migration ----------------------------------------------------------
+    def export_slot(self, slot: int):
+        """(request, kv piece, kv bytes) for live migration."""
+        req = self.slots[slot]
+        assert req is not None
+        piece = jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+        return req, piece, kv_bytes(piece)
+
+    def evict_slot(self, slot: int) -> None:
+        self._release(slot)
+
+    def import_request(self, req: ServeRequest, piece) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.cache = _write_slot(self.cache, piece, slot)
+        req.engine_id = self.id
+        req.slot = slot
+        req.state = State.RUNNING
+        self.slots[slot] = req
+        self.slot_len[slot] = req.length
+        return True
+
+
+def _write_slot(cache, piece, slot: int):
+    """Write a [L, 1, ...] piece into batch index ``slot`` of the cache.
+    Leaves with a batch axis at position 1 are updated; piece S dim may be
+    shorter than the cache's (prefill pieces are sized to max_seq already
+    by Model.prefill)."""
+    def put(a, p):
+        p = p.astype(a.dtype)
+        if p.shape[2:] != a.shape[2:]:
+            pad = [(0, 0)] * p.ndim
+            pad[2] = (0, a.shape[2] - p.shape[2])
+            p = jnp.pad(p, pad)
+        return jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1)
+    return jax.tree.map(put, cache, piece)

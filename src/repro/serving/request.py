@@ -1,0 +1,43 @@
+"""Serving request lifecycle."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    MIGRATING = "migrating"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    req_id: int
+    prompt: np.ndarray                # int32 [T]
+    max_new_tokens: int
+    arrival_step: int = 0
+    state: State = State.WAITING
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    engine_id: Optional[int] = None
+    slot: Optional[int] = None
+    eos_token: Optional[int] = None
+    # per-engine token counts (load-balance accounting, Fig. 16)
+    tokens_by_engine: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(self.generated and self.eos_token is not None
+                    and self.generated[-1] == self.eos_token)

@@ -1,0 +1,210 @@
+"""Multi-instance serving cluster over real JAX engines.
+
+This is the control plane of DESIGN §3 running against actual model
+compute: N in-process Engine instances serving one model, grouped into
+length-specialized stages (PipelinePlan), with
+
+  * length-aware arrival routing (earliest covering stage, bid-ask pick),
+  * growth-triggered inter-stage handover with REAL KV-slice migration,
+  * intra-stage bid-ask rebalancing on overload,
+  * periodic adaptive boundary refinement,
+  * round-robin / least-loaded baselines for comparison.
+
+Time is step-synchronous (every engine advances one continuous-batching
+iteration per tick) — the discrete-event simulator covers asynchronous
+timing; this server proves the control plane works on real state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bidask import Bid, is_overloaded, select_receiver
+from repro.core.partition import PipelinePlan
+from repro.core.qoe import QoEModel
+from repro.core.refinement import BoundaryRefiner
+from repro.models.model import Model
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest, State
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    policy: str = "cascade"            # cascade | round-robin | least-loaded
+    refine_every: int = 16             # steps
+    balance_every: int = 8
+    max_migrations_per_step: int = 3   # §5 concurrency cap
+    seed: int = 0
+
+
+class MILSServer:
+    def __init__(self, model: Model, params, plan: PipelinePlan,
+                 qoe: Optional[QoEModel], cfg: ServerConfig, *,
+                 max_slots: int = 4, max_seq: int = 256):
+        self.model = model
+        self.cfg = cfg
+        self.plan = plan
+        self.rng = np.random.default_rng(cfg.seed)
+        E = plan.num_instances
+        self.engines = [Engine(i, model, params, max_slots=max_slots,
+                               max_seq=max_seq) for i in range(E)]
+        # stage bookkeeping
+        self.stage_bounds: List[Tuple[float, float]] = [
+            (s.lo, s.hi) for s in plan.stages]
+        self.stage_engines: List[List[int]] = []
+        nxt = 0
+        for s in plan.stages:
+            self.stage_engines.append(list(range(nxt, nxt + s.num_instances)))
+            nxt += s.num_instances
+        self.stage_of_engine = {e: si for si, ids in
+                                enumerate(self.stage_engines) for e in ids}
+        self.refiners = ([BoundaryRefiner(qoe, boundary=s.hi)
+                          for s in plan.stages[:-1]] if qoe else [])
+        self._rr = 0
+        self.steps = 0
+        self.finished: List[ServeRequest] = []
+        self.migrations = 0
+
+    # ---- routing -------------------------------------------------------------
+    def _stage_for(self, length: float) -> int:
+        for i, (_, hi) in enumerate(self.stage_bounds):
+            if length < hi:
+                return i
+        return len(self.stage_bounds) - 1
+
+    def submit(self, req: ServeRequest) -> None:
+        req.arrival_step = self.steps
+        if self.cfg.policy == "round-robin":
+            eng = self.engines[self._rr % len(self.engines)]
+            self._rr += 1
+        elif self.cfg.policy == "least-loaded":
+            eng = max(self.engines, key=lambda e: e.free_tokens())
+        else:
+            si = self._stage_for(len(req.prompt))
+            cands = [self.engines[i] for i in self.stage_engines[si]]
+            bids = [Bid(e.id, e.load(), e.used_tokens() / 1e4,
+                        int(self.rng.integers(0, 1 << 30))) for e in cands]
+            eng = self.engines[select_receiver(bids)]
+        eng.submit(req)
+
+    # ---- main loop -------------------------------------------------------------
+    def step(self) -> List[ServeRequest]:
+        self.steps += 1
+        done: List[ServeRequest] = []
+        for eng in self.engines:
+            done.extend(eng.step())
+        self.finished.extend(done)
+        if self.cfg.policy == "cascade":
+            self._handover()
+            if self.steps % self.cfg.balance_every == 0:
+                self._balance()
+            if self.refiners and self.steps % self.cfg.refine_every == 0:
+                self._refine()
+        return done
+
+    def run(self, requests: Sequence[ServeRequest],
+            max_steps: int = 2000) -> List[ServeRequest]:
+        for r in requests:
+            self.submit(r)
+        n = len(requests)
+        while len(self.finished) < n and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    # ---- CascadeInfer mechanisms -------------------------------------------------
+    def _pick_receiver(self, cand_ids: Sequence[int],
+                       need_tokens: int) -> Optional[Engine]:
+        cands = [self.engines[i] for i in cand_ids
+                 if self.engines[i].has_idle_slot()
+                 and self.engines[i].free_tokens() >= need_tokens]
+        if not cands:
+            return None
+        bids = [Bid(e.id, e.load(), e.used_tokens() / 1e4,
+                    int(self.rng.integers(0, 1 << 30))) for e in cands]
+        rid = select_receiver(bids)
+        return self.engines[rid] if rid is not None else None
+
+    def _migrate(self, src: Engine, slot: int, dst: Engine) -> bool:
+        req, piece, _ = src.export_slot(slot)
+        if not dst.import_request(req, piece):
+            return False
+        src.evict_slot(slot)
+        self.migrations += 1
+        return True
+
+    def _handover(self) -> None:
+        """Growth-triggered inter-stage migration (§3.2)."""
+        moved = 0
+        for eng in self.engines:
+            si = self.stage_of_engine[eng.id]
+            _, hi = self.stage_bounds[si]
+            if hi == float("inf"):
+                continue
+            for slot, req in enumerate(list(eng.slots)):
+                if req is None or req.length < hi:
+                    continue
+                if moved >= self.cfg.max_migrations_per_step:
+                    return
+                nxt = min(si + 1, len(self.stage_bounds) - 1)
+                dst = self._pick_receiver(self.stage_engines[nxt], req.length)
+                if dst is None:
+                    continue       # §5 flow control: stay on source
+                if self._migrate(eng, slot, dst):
+                    moved += 1
+
+    def _balance(self) -> None:
+        """Intra-stage bid-ask rebalancing on overload (§4.4)."""
+        for si, ids in enumerate(self.stage_engines):
+            if len(ids) < 2:
+                continue
+            loads = {i: self.engines[i].load() for i in ids}
+            for i in ids:
+                peers = [l for j, l in loads.items() if j != i]
+                if not is_overloaded(loads[i], peers):
+                    continue
+                eng = self.engines[i]
+                occupied = [(s, r) for s, r in enumerate(eng.slots)
+                            if r is not None]
+                if not occupied:
+                    continue
+                slot, req = max(occupied, key=lambda sr: sr[1].length)
+                dst = self._pick_receiver([j for j in ids if j != i],
+                                          req.length)
+                if dst is not None:
+                    self._migrate(eng, slot, dst)
+
+    def _refine(self) -> None:
+        """Adaptive range refinement (§4.3) on live request lengths."""
+        for bi in range(len(self.stage_bounds) - 1):
+            own = [rv for i in self.stage_engines[bi]
+                   for rv in self.engines[i].request_view()]
+            succ = [self.engines[i].request_view()
+                    for i in self.stage_engines[bi + 1]]
+            b = self.refiners[bi].refine(own, succ)
+            lo, _ = self.stage_bounds[bi]
+            _, hi_next = self.stage_bounds[bi + 1]
+            b = max(b, lo + 1.0)
+            if hi_next != float("inf"):
+                b = min(b, hi_next - 1.0)
+            self.stage_bounds[bi] = (lo, b)
+            self.stage_bounds[bi + 1] = (b, hi_next)
+
+    # ---- metrics -------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        fin = self.finished
+        if not fin:
+            return {"finished": 0}
+        ttft = np.asarray([r.first_token_step - r.arrival_step for r in fin],
+                          np.float64)
+        e2e = np.asarray([r.finish_step - r.arrival_step for r in fin],
+                         np.float64)
+        return {
+            "finished": len(fin),
+            "steps": self.steps,
+            "migrations": self.migrations,
+            "ttft_steps_mean": float(ttft.mean()),
+            "e2e_steps_mean": float(e2e.mean()),
+            "tokens_out": int(sum(e.tokens_out for e in self.engines)),
+        }

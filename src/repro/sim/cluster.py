@@ -1,0 +1,451 @@
+"""MILS cluster simulator: policies (round-robin / Llumnix-like /
+CascadeInfer) over simulated instances with live KV migration.
+
+CascadePolicy composes the paper's mechanisms end to end: offline pipeline
+plan -> length routing -> growth-triggered inter-stage handover with
+bid-ask receiver selection -> intra-stage bid-ask rebalancing -> periodic
+adaptive range refinement -> live migration with concurrency caps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bidask import (Bid, MigRequest, ReceiverState, SenderState,
+                               is_overloaded, select_receiver)
+from repro.core.migration import plan_live_migration
+from repro.core.partition import PipelinePlan, Stage
+from repro.core.qoe import QoEModel
+from repro.core.refinement import (BoundaryRefiner, memory_based_split,
+                                   quantity_based_split)
+from repro.sim.costmodel import HardwareProfile, decode_rate
+from repro.sim.events import EventQueue
+from repro.sim.instance import Instance, SimRequest
+from repro.sim.workload import Request
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    num_instances: int = 16
+    capacity_tokens: float = 400_000.0
+    bandwidth: float = 25e9            # inter-instance KV path
+    # hand-off disruption: final stop-and-copy stall + scheduler/alloc
+    # coordination on both ends (Llumnix reports tens of ms per migration);
+    # the request decodes nowhere during this window.
+    migration_pause_s: float = 0.05
+    refine_interval: float = 10.0
+    balance_interval: float = 2.0
+    pump_interval: float = 0.5
+    drain_factor: float = 20.0         # max extra sim time to drain
+    seed: int = 0
+
+
+class Policy:
+    name = "base"
+
+    def attach(self, cluster: "Cluster") -> None:
+        self.cluster = cluster
+
+    def route(self, sr: SimRequest, t: float) -> Instance:
+        raise NotImplementedError
+
+    def on_iteration_end(self, inst: Instance, t: float) -> None:
+        pass
+
+    def timers(self) -> List[Tuple[float, Callable[[float], None]]]:
+        return []
+
+
+class Cluster:
+    def __init__(self, profile: HardwareProfile, policy: Policy,
+                 cfg: ClusterConfig):
+        self.cfg = cfg
+        self.profile = profile
+        self.events = EventQueue()
+        self.rng = np.random.default_rng(cfg.seed)
+        self.instances = [
+            Instance(i, profile, cfg.capacity_tokens, self.events)
+            for i in range(cfg.num_instances)]
+        self.completed: List[SimRequest] = []
+        self.policy = policy
+        policy.attach(self)
+        for inst in self.instances:
+            inst.on_iteration_end = policy.on_iteration_end
+            inst.on_request_done = self._on_done
+
+    def _on_done(self, inst: Instance, sr: SimRequest, t: float) -> None:
+        self.completed.append(sr)
+
+    def submit(self, req: Request) -> None:
+        def arrive():
+            sr = SimRequest(req=req, length=req.input_len)
+            inst = self.policy.route(sr, self.events.now)
+            inst.enqueue(sr, self.events.now)
+        self.events.push(req.arrival, arrive)
+
+    def run(self, requests: Sequence[Request], duration: float) -> "SimResult":
+        for r in requests:
+            self.submit(r)
+        for interval, fn in self.policy.timers():
+            self._periodic(interval, fn)
+        self.events.run_until(duration)
+        # drain: keep going until every submitted request completes
+        t_max = duration * self.cfg.drain_factor
+        while (len(self.completed) < len(requests)
+               and self.events.now < t_max and len(self.events)):
+            self.events.run_until(min(self.events.now + duration, t_max))
+        from repro.sim.metrics import SimResult
+        return SimResult(completed=list(self.completed),
+                         duration=self.events.now,
+                         num_submitted=len(requests),
+                         instances=self.instances,
+                         policy_name=self.policy.name,
+                         stage_of_instance=getattr(
+                             self.policy, "stage_of_instance", None))
+
+    def _periodic(self, interval: float, fn: Callable[[float], None]) -> None:
+        def tick():
+            fn(self.events.now)
+            self.events.push(self.events.now + interval, tick)
+        self.events.push(interval, tick)
+
+
+# --------------------------------------------------------------------------
+# Baseline policies
+# --------------------------------------------------------------------------
+class RoundRobinPolicy(Policy):
+    """vLLM/SGLang deployment baseline (§6.1): stateless round-robin LB."""
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, sr, t):
+        inst = self.cluster.instances[self._next % len(self.cluster.instances)]
+        self._next += 1
+        return inst
+
+
+class LlumnixLikePolicy(Policy):
+    """Length-agnostic load/memory-aware inter-instance scheduling with
+    live migration on overload (Llumnix's core heuristics, §2.4)."""
+    name = "llumnix-like"
+
+    def __init__(self, migration: bool = True):
+        self.migration = migration
+
+    def attach(self, cluster):
+        super().attach(cluster)
+        self._mover = TransferFabric(cluster)
+
+    def route(self, sr, t):
+        # least total load (KV + queued work) — Llumnix routes on load and
+        # free memory; queue-blind routing herds onto backlogged instances
+        return min(self.cluster.instances, key=lambda i: i.load())
+
+    def timers(self):
+        return [(self.cluster.cfg.balance_interval, self._balance)]
+
+    def _balance(self, t):
+        if not self.migration:
+            return
+        insts = self.cluster.instances
+        loads = [i.load() for i in insts]
+        for inst in insts:
+            peers = [l for j, l in enumerate(loads) if j != inst.id]
+            if not is_overloaded(inst.load(), peers):
+                continue
+            target = max(insts, key=lambda i: i.free_tokens())
+            if target.id == inst.id:
+                continue
+            cands = [r for r in inst.running if not r.migrating]
+            if not cands:
+                continue
+            victim = max(cands, key=lambda r: r.length)   # memory-aware
+            self._mover.direct_transfer(inst, target, victim, t)
+
+
+# --------------------------------------------------------------------------
+# Transfer fabric: live migration with concurrency + flow control
+# --------------------------------------------------------------------------
+class TransferFabric:
+    """Shared KV-migration machinery (used by Llumnix-like and Cascade)."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+
+    def direct_transfer(self, src: Instance, dst: Instance,
+                        sr: SimRequest, t: float) -> bool:
+        if sr.migrating or sr.done:
+            return False
+        if not src.migrations.can_start(dst.free_tokens() >= sr.length):
+            return False
+        sr.migrating = True
+        dst.inbound_reserved += sr.length
+        rate = decode_rate([r.length for r in src.running], src.profile)
+        timing = plan_live_migration(sr.length, rate,
+                                     src.profile.kv_bytes_per_token or 2e5,
+                                     self.cluster.cfg.bandwidth)
+        src.migrations.start(sr.req.req_id, t + timing.total_s)
+
+        pause = self.cluster.cfg.migration_pause_s + timing.stall_s
+
+        def finish():
+            now = self.cluster.events.now
+            src.migrations.finish(sr.req.req_id)
+            if sr.done or sr not in src.running:
+                dst.inbound_reserved -= sr.length
+                sr.migrating = False
+                return        # completed mid-flight: drop the move
+            src.running.remove(sr)
+            src.kick(now)
+
+            def adopt():     # stop-and-copy + scheduler hand-off pause
+                dst.inbound_reserved -= sr.length
+                sr.migrating = False
+                dst.adopt_running(sr, self.cluster.events.now)
+
+            self.cluster.events.push(now + pause, adopt)
+
+        self.cluster.events.push(t + timing.total_s, finish)
+        return True
+
+
+# --------------------------------------------------------------------------
+# CascadeInfer
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class StageState:
+    lo: float
+    hi: float
+    instance_ids: List[int]
+
+
+class CascadePolicy(Policy):
+    """The paper's system. Ablation knobs:
+      refinement ∈ {adaptive, quantity, memory, none}   (Fig. 15)
+      balancing  ∈ {full, inter-stage, rr}              (Fig. 16)
+      plan layout chain/no-pipeline comes from the plan (Fig. 14)
+    """
+    name = "cascade"
+
+    def __init__(self, plan: PipelinePlan, qoe: QoEModel, *,
+                 refinement: str = "adaptive", balancing: str = "full",
+                 kv_bytes_per_token: Optional[float] = None):
+        self.plan = plan
+        self.qoe = qoe
+        self.refinement = refinement
+        self.balancing = balancing
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self._rr_counters: Dict[int, int] = {}
+
+    def attach(self, cluster):
+        super().attach(cluster)
+        self.fabric = TransferFabric(cluster)
+        self.senders = {i.id: SenderState(i.id) for i in cluster.instances}
+        self.receivers = {i.id: ReceiverState(i.id) for i in cluster.instances}
+        self._pending: Dict[int, Tuple[SimRequest, int]] = {}  # req -> (sr, src)
+        # assign instances to stages
+        self.stages: List[StageState] = []
+        self.stage_of_instance: List[int] = [0] * len(cluster.instances)
+        nxt = 0
+        for si, st in enumerate(self.plan.stages):
+            ids = list(range(nxt, nxt + st.num_instances))
+            nxt += st.num_instances
+            self.stages.append(StageState(st.lo, st.hi, ids))
+            for i in ids:
+                self.stage_of_instance[i] = si
+        assert nxt == len(cluster.instances), \
+            f"plan uses {nxt} instances, cluster has {len(cluster.instances)}"
+        self.refiners = [
+            BoundaryRefiner(self.qoe, boundary=s.hi)
+            for s in self.stages[:-1]]
+
+    # ---- routing -----------------------------------------------------------
+    def _stage_for(self, length: float) -> int:
+        for i, s in enumerate(self.stages):
+            if length < s.hi:
+                return i
+        return len(self.stages) - 1
+
+    def route(self, sr, t):
+        """Arrivals go round-robin within the covering stage (§3.2 —
+        bid-ask governs *migrations*, not dispatch)."""
+        si = self._stage_for(sr.length)
+        ids = self.stages[si].instance_ids
+        c = self._rr_counters.get(si, 0)
+        self._rr_counters[si] = c + 1
+        return self.cluster.instances[ids[c % len(ids)]]
+
+    # ---- growth-triggered handover (inter-stage) ----------------------------
+    def on_iteration_end(self, inst, t):
+        si = self.stage_of_instance[inst.id]
+        hi = self.stages[si].hi
+        if hi == float("inf"):
+            return
+        for sr in list(inst.running):
+            if sr.length >= hi and not sr.migrating \
+                    and sr.req.req_id not in self._pending:
+                nxt = min(si + 1, len(self.stages) - 1)
+                self._offer(inst, sr, self.stages[nxt].instance_ids, t)
+
+    def _offer(self, src: Instance, sr: SimRequest,
+               candidate_ids: Sequence[int], t: float) -> None:
+        sender = self.senders[src.id]
+        mig = MigRequest(sr.req.req_id, sr.length, src.id)
+        sender.offer(mig)
+        self._pending[sr.req.req_id] = (sr, src.id)
+        cands = [self.cluster.instances[i] for i in candidate_ids
+                 if i != src.id]
+        if self.balancing == "rr":
+            # Fig.-16 ablation: hand over round-robin, no negotiation
+            c = self._rr_counters.get(-1, 0)
+            self._rr_counters[-1] = c + 1
+            rid = cands[c % len(cands)].id if cands else None
+        else:
+            bids = [Bid(c.id, c.load(),
+                        self.receivers[c.id].earliest_start(),
+                        int(self.cluster.rng.integers(0, 1 << 30)))
+                    for c in cands]
+            rid = select_receiver(bids)
+        if rid is None:
+            sender.buffer.pop(mig.req_id, None)
+            self._pending.pop(sr.req.req_id, None)
+            return
+        self.receivers[rid].win(mig)
+        self._pump(rid, t)
+
+    # ---- receiver pull loop -------------------------------------------------
+    def _sender_busy(self, src_id: int) -> bool:
+        return self.senders[src_id].transmitting is not None
+
+    def _pump(self, rid: int, t: float) -> None:
+        recv = self.receivers[rid]
+        dst = self.cluster.instances[rid]
+        while True:
+            mig, starved = recv.next_pull(self._sender_busy)
+            if starved is not None:
+                self.senders[
+                    self._pending[starved][1]].mark_starved(starved)
+            if mig is None:
+                return
+            if not self._begin_transfer(mig, dst, t):
+                recv.win(mig)          # put back; retry on next pump
+                return
+
+    def _begin_transfer(self, mig: MigRequest, dst: Instance,
+                        t: float) -> bool:
+        entry = self._pending.get(mig.req_id)
+        if entry is None:
+            return True                # stale (request finished)
+        sr, src_id = entry
+        src = self.cluster.instances[src_id]
+        sender = self.senders[src_id]
+        if sr.done or sr not in src.running:
+            sender.buffer.pop(mig.req_id, None)
+            self._pending.pop(mig.req_id, None)
+            return True
+        if not sender.can_transmit(mig.req_id):
+            return False
+        if not src.migrations.can_start(dst.free_tokens() >= sr.length):
+            return False               # §5 flow control: stay on source
+        sender.begin(mig.req_id)
+        sr.migrating = True
+        dst.inbound_reserved += sr.length
+        rate = decode_rate([r.length for r in src.running], src.profile)
+        kvb = self.kv_bytes_per_token or src.profile.kv_bytes_per_token or 2e5
+        timing = plan_live_migration(sr.length, rate, kvb,
+                                     self.cluster.cfg.bandwidth)
+        src.migrations.start(mig.req_id, t + timing.total_s)
+
+        pause = self.cluster.cfg.migration_pause_s + timing.stall_s
+
+        def finish():
+            now = self.cluster.events.now
+            src.migrations.finish(mig.req_id)
+            sender.finish(mig.req_id)
+            self.receivers[dst.id].complete(mig.req_id)
+            self._pending.pop(mig.req_id, None)
+            if sr.done or sr not in src.running:
+                dst.inbound_reserved -= sr.length
+                sr.migrating = False
+                self._pump(dst.id, now)
+                return
+            src.running.remove(sr)
+            src.kick(now)
+
+            def adopt():     # stop-and-copy + scheduler hand-off pause
+                dst.inbound_reserved -= sr.length
+                sr.migrating = False
+                dst.adopt_running(sr, self.cluster.events.now)
+
+            self.cluster.events.push(now + pause, adopt)
+            self._pump(dst.id, now)
+
+        self.cluster.events.push(t + timing.total_s, finish)
+        return True
+
+    # ---- timers: pump / intra-stage balance / refinement ---------------------
+    def timers(self):
+        out = [(self.cluster.cfg.pump_interval, self._pump_all)]
+        if self.balancing == "full":
+            out.append((self.cluster.cfg.balance_interval, self._balance))
+        if self.refinement != "none":
+            out.append((self.cluster.cfg.refine_interval, self._refine))
+        return out
+
+    def _pump_all(self, t):
+        for rid in self.receivers:
+            if len(self.receivers[rid]):
+                self._pump(rid, t)
+
+    def _balance(self, t):
+        for si, stage in enumerate(self.stages):
+            insts = [self.cluster.instances[i] for i in stage.instance_ids]
+            if len(insts) < 2:
+                continue
+            loads = {i.id: i.load() for i in insts}
+            for inst in insts:
+                peers = [l for j, l in loads.items() if j != inst.id]
+                if not is_overloaded(inst.load(), peers):
+                    continue
+                cands = [r for r in inst.running
+                         if not r.migrating
+                         and r.req.req_id not in self._pending]
+                if not cands:
+                    continue
+                victim = max(cands, key=lambda r: r.length)
+                self._offer(inst, victim,
+                            [i.id for i in insts if i.id != inst.id], t)
+
+    def _refine(self, t):
+        for bi in range(len(self.stages) - 1):
+            own_ids = self.stages[bi].instance_ids
+            succ_ids = self.stages[bi + 1].instance_ids
+            own = [rv for i in own_ids
+                   for rv in self.cluster.instances[i].request_view()]
+            succ = [self.cluster.instances[i].request_view()
+                    for i in succ_ids]
+            if self.refinement == "adaptive":
+                b = self.refiners[bi].refine(own, succ)
+            else:
+                merged = own + [r for s in succ for r in s]
+                if len(merged) < self.refiners[bi].min_requests:
+                    continue
+                if self.refinement == "quantity":
+                    b = quantity_based_split(merged)
+                elif self.refinement == "memory":
+                    b = memory_based_split(merged)
+                else:
+                    continue
+                self.refiners[bi].boundary = b
+            # keep boundaries monotone across stages
+            lo = self.stages[bi].lo
+            hi_next = self.stages[bi + 1].hi
+            b = float(np.clip(b, lo + 1.0,
+                              hi_next - 1.0 if hi_next != float("inf")
+                              else b))
+            self.stages[bi].hi = b
+            self.stages[bi + 1].lo = b

@@ -1,0 +1,116 @@
+"""Ground-truth hardware cost model for the simulator.
+
+Iteration latency of a simulated instance, derived from the Pallas-kernel
+block model (repro.kernels.cost) plus weight-access and per-token terms:
+
+  decode iteration:  t_weights + n·t_tok + attn(lengths)        (memory-bound)
+  prefill:           t_weights share + 2·N·I/peak + I² attention (compute-bound)
+
+``attn(lengths)`` carries the heterogeneity tax: a padded backend pays
+ceil(maxL/BS) KV blocks for *every* request. This is the physics that the
+QoE model (deliberately) does not see and that CascadeInfer's scheduling
+exploits — mirroring the paper's fitted-model vs. real-GPU separation.
+
+Constants default to the assignment's TPU v5e (197 TF bf16, 819 GB/s HBM);
+per-model terms come from the arch configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
+                                decode_attn_time_s)
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    attn_spec: AttnSpec
+    params: float                  # parameter count (active for MoE)
+    params_total: float            # full parameter count (weight streaming)
+    kv_bytes_per_token: float      # all layers, K+V
+    num_layers: int
+    t_fixed: float = 2e-4          # per-iteration framework overhead
+    weight_bytes: float = 0.0      # bf16 weights
+    peak: float = PEAK_FLOPS
+    hbm: float = HBM_BW
+    attn_frac: float = 1.0         # hybrid archs: fraction of layers w/ attn
+    ragged_backend: bool = False   # beyond-paper kernel flag
+
+    @property
+    def t_weights(self) -> float:
+        """Weight-streaming floor of one decode iteration (memory-bound)."""
+        return self.weight_bytes / self.hbm
+
+
+def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
+                        ragged_backend: bool = False) -> HardwareProfile:
+    """Build a per-instance hardware profile from a model config.
+    ``tp``: tensor-parallel ways (divides weights + KV per chip)."""
+    d, L = cfg.d_model, cfg.num_layers
+    if cfg.num_experts:
+        ffn_p = 3 * d * cfg.d_ff
+        dense_p = ffn_p * (cfg.num_experts + (1 if cfg.dense_residual else 0))
+        active_p = ffn_p * (cfg.experts_per_token
+                            + (1 if cfg.dense_residual else 0))
+    else:
+        mult = 3 if cfg.act == "swiglu" else 2
+        dense_p = active_p = mult * d * cfg.d_ff
+    if cfg.num_heads:
+        attn_p = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
+            + cfg.num_heads * cfg.head_dim * d
+        spec = AttnSpec(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+        kv_tok = 2 * cfg.num_kv_heads * cfg.head_dim * 2  # K+V bf16
+        attn_layers = (L // cfg.attn_every) if cfg.attn_every else L
+    else:  # attention-free (rwkv): state is O(1); no per-token KV
+        attn_p = 4 * d * d
+        spec = AttnSpec(1, 1, 128)
+        kv_tok = 0.0
+        attn_layers = 0
+    embed_p = 2 * cfg.vocab_size * d
+    n_total = L * (attn_p + dense_p) + embed_p
+    n_active = L * (attn_p + active_p) + embed_p
+    return HardwareProfile(
+        attn_spec=spec,
+        params=n_active / tp,
+        params_total=n_total / tp,
+        kv_bytes_per_token=kv_tok * attn_layers / tp,
+        num_layers=L,
+        weight_bytes=2.0 * n_total / tp,
+        attn_frac=attn_layers / max(L, 1),
+        ragged_backend=ragged_backend,
+    )
+
+
+def decode_iter_time(lengths: Sequence[int], prof: HardwareProfile) -> float:
+    """One continuous-batching decode iteration over ``lengths``."""
+    n = len(lengths)
+    if n == 0:
+        return 0.0
+    t_tok = 2.0 * prof.params / prof.peak                 # per-request MXU
+    attn_layers = round(prof.num_layers * prof.attn_frac)
+    t_attn = (decode_attn_time_s(lengths, prof.attn_spec,
+                                 ragged=prof.ragged_backend) * attn_layers
+              if attn_layers else 0.0)
+    return prof.t_fixed + prof.t_weights + n * t_tok + t_attn
+
+
+def prefill_time(input_len: int, prof: HardwareProfile) -> float:
+    """Dedicated prefill iteration for one request (compute-bound)."""
+    I = float(input_len)
+    t_linear = 2.0 * prof.params * I / prof.peak
+    # causal attention FLOPs: Σ 2·2·H·Dh·i ≈ 2·H·Dh·I² per layer
+    spec = prof.attn_spec
+    attn_layers = round(prof.num_layers * prof.attn_frac)
+    t_quad = (2.0 * spec.num_q_heads * spec.head_dim * I * I
+              * attn_layers / prof.peak)
+    return prof.t_fixed + t_linear + t_quad
+
+
+def decode_rate(lengths: Sequence[int], prof: HardwareProfile) -> float:
+    """Tokens/s one request sees inside the current batch (for live-
+    migration round planning)."""
+    t = decode_iter_time(lengths, prof)
+    return 1.0 / max(t, 1e-9)

@@ -1,0 +1,110 @@
+"""End-to-end experiment driver: profile -> fit QoE -> plan pipeline ->
+run all policies on the same workload. This is what the benchmarks call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.partition import PipelinePlan, Stage, full_dp, two_phase
+from repro.core.qoe import QoEModel
+from repro.core.workload_stats import build_stats, exp_bucket_edges
+from repro.sim.cluster import (CascadePolicy, Cluster, ClusterConfig,
+                               LlumnixLikePolicy, Policy, RoundRobinPolicy)
+from repro.sim.costmodel import HardwareProfile, profile_from_config
+from repro.sim.metrics import SimResult
+from repro.sim.profiler import profile_and_fit
+from repro.sim.workload import Request, WorkloadSpec, generate, sample_lengths
+
+
+@functools.lru_cache(maxsize=8)
+def fitted_qoe(arch: str, tp: int = 1, horizon_s: float = 8.0) -> QoEModel:
+    """Profile-and-fit, cached per arch (deterministic)."""
+    prof = profile_from_config(get_config(arch), tp=tp)
+    return profile_and_fit(prof, horizon_s=horizon_s)
+
+
+def plan_pipeline(arch: str, qoe: QoEModel, E: int, *,
+                  planning_requests: Optional[Sequence] = None,
+                  seed: int = 1, solver: str = "two_phase",
+                  bandwidth: float = 25e9) -> PipelinePlan:
+    """Offline pipeline planning from historical workload statistics."""
+    cfg = get_config(arch)
+    prof = profile_from_config(cfg)
+    if planning_requests is None:
+        spec = WorkloadSpec(rate=1.0, duration=1.0, seed=seed)
+        rng = np.random.default_rng(seed)
+        ins, outs = sample_lengths(spec, 2000, rng)
+        planning_requests = list(zip(ins.tolist(), outs.tolist()))
+    stats = build_stats(planning_requests, exp_bucket_edges(131_072))
+    kvb = prof.kv_bytes_per_token or 2e5
+    solve = two_phase if solver == "two_phase" else full_dp
+    return solve(stats, E, qoe, kv_bytes_per_token=kvb, bandwidth=bandwidth)
+
+
+def chain_plan(arch: str, qoe: QoEModel, E: int, *,
+               seed: int = 1) -> PipelinePlan:
+    """Fig.-14 'chain' ablation: one instance per pipeline stage — the
+    paper's phase-1 DP without the merge phase."""
+    from repro.core.partition import _chain_dp
+    cfg = get_config(arch)
+    prof = profile_from_config(cfg)
+    spec = WorkloadSpec(rate=1.0, duration=1.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    ins, outs = sample_lengths(spec, 2000, rng)
+    stats = build_stats(list(zip(ins.tolist(), outs.tolist())),
+                        exp_bucket_edges(131_072))
+    stages = _chain_dp(stats, E, qoe, prof.kv_bytes_per_token or 2e5, 25e9)
+    stages[-1] = Stage(stages[-1].lo, float("inf"), 1)
+    return PipelinePlan(stages=stages, quality=float("nan"))
+
+
+def no_pipeline_plan(E: int) -> PipelinePlan:
+    """Fig.-14 'no-pipeline' ablation: all instances in one stage."""
+    return PipelinePlan(stages=[Stage(0.0, float("inf"), E)],
+                        quality=float("nan"))
+
+
+def make_policy(kind: str, arch: str, E: int, *, qoe=None, plan=None,
+                **kw) -> Policy:
+    if kind == "round-robin":
+        return RoundRobinPolicy()
+    if kind == "llumnix":
+        return LlumnixLikePolicy()
+    qoe = qoe or fitted_qoe(arch)
+    plan = plan or plan_pipeline(arch, qoe, E)
+    return CascadePolicy(plan, qoe, **kw)
+
+
+def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
+               duration: float, *, E: int = 16,
+               capacity_tokens: float = 400_000.0, seed: int = 0,
+               tp: int = 1, ragged_backend: bool = False,
+               bandwidth: float = 25e9) -> SimResult:
+    prof = profile_from_config(get_config(arch), tp=tp,
+                               ragged_backend=ragged_backend)
+    cfg = ClusterConfig(num_instances=E, capacity_tokens=capacity_tokens,
+                        seed=seed, bandwidth=bandwidth)
+    cluster = Cluster(prof, policy, cfg)
+    return cluster.run(requests, duration)
+
+
+def compare_policies(arch: str, rate: float, duration: float, *,
+                     E: int = 16, seed: int = 0,
+                     capacity_tokens: float = 400_000.0,
+                     kinds: Sequence[str] = ("round-robin", "llumnix",
+                                             "cascade")) -> Dict[str, SimResult]:
+    """Same workload, all policies — the Fig. 6/7/10 experiment."""
+    spec = WorkloadSpec(rate=rate, duration=duration, seed=seed)
+    requests = generate(spec)
+    out = {}
+    for kind in kinds:
+        pol = make_policy(kind if kind != "cascade" else "cascade",
+                          arch, E)
+        out[kind] = run_policy(arch, pol, requests, duration, E=E,
+                               capacity_tokens=capacity_tokens, seed=seed)
+    return out

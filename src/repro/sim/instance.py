@@ -1,0 +1,194 @@
+"""Simulated inference instance: iteration-level continuous batching.
+
+Mirrors the vLLM execution model the paper builds on (§2.2): at each
+iteration the instance admits waiting requests under its token-memory
+budget (prefill prioritized, batch cap 1024), then advances every running
+request by one token. Iteration duration comes from the ground-truth
+hardware cost model — including the kernel-level heterogeneity tax.
+
+Simplifications vs. vLLM (noted in DESIGN.md): admission reserves the
+prompt only (no preemption/swap on overflow — outputs are finite and the
+budget check keeps overflow marginal), prefill shares the iteration with
+decode rather than occupying dedicated iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.core.migration import MigrationManager
+from repro.sim.costmodel import HardwareProfile, decode_iter_time, prefill_time
+from repro.sim.workload import Request
+
+BATCH_CAP = 1024   # vLLM official default (paper §6.1)
+
+
+@dataclasses.dataclass
+class SimRequest:
+    req: Request
+    length: int                      # current sequence length
+    generated: int = 0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    migrating: bool = False
+    rejected: bool = False           # oversized for any instance: failed
+    # per-instance output-token counts (paper Fig. 16 CV metric)
+    tokens_by_instance: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # batch-feature accumulators for QoE profiling (avg loads over lifetime)
+    feat_sum: List[float] = dataclasses.field(
+        default_factory=lambda: [0.0] * 5)
+    feat_iters: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.req.output_len
+
+    @property
+    def normalized_latency(self) -> float:
+        assert self.finish_t is not None
+        return (self.finish_t - self.req.arrival) / max(self.req.output_len, 1)
+
+    @property
+    def ttft(self) -> float:
+        assert self.first_token_t is not None
+        return self.first_token_t - self.req.arrival
+
+    @property
+    def tpot(self) -> float:
+        assert self.finish_t is not None and self.first_token_t is not None
+        return ((self.finish_t - self.first_token_t)
+                / max(self.req.output_len - 1, 1))
+
+
+class Instance:
+    def __init__(self, inst_id: int, profile: HardwareProfile,
+                 capacity_tokens: float, events, *,
+                 batch_cap: int = BATCH_CAP):
+        self.id = inst_id
+        self.profile = profile
+        self.capacity = capacity_tokens
+        self.events = events
+        self.batch_cap = batch_cap
+        self.waiting: Deque[SimRequest] = deque()
+        self.running: List[SimRequest] = []
+        self.iterating = False
+        self.migrations = MigrationManager()
+        self.inbound_reserved = 0.0      # tokens reserved for inbound transfers
+        # hooks set by the cluster/policy
+        self.on_iteration_end: Optional[Callable] = None
+        self.on_request_done: Optional[Callable] = None
+        # accounting
+        self.busy_until = 0.0
+        self.tokens_out = 0
+        self.throughput_est = 1000.0     # tokens/s EMA (bid payloads)
+
+    # ---- load views -------------------------------------------------------
+    def kv_tokens(self) -> float:
+        """Tokens actually holding KV memory (running + inbound transfers).
+        Waiting requests hold NO cache (vLLM semantics) — counting them
+        against the budget deadlocks admission under tight memory."""
+        return (sum(r.length for r in self.running)
+                + self.inbound_reserved)
+
+    def mem_tokens(self) -> float:
+        return self.kv_tokens()
+
+    def free_tokens(self) -> float:
+        return self.capacity - self.kv_tokens()
+
+    def load(self) -> float:
+        """Token-level load (LoadTracker metric): KV pressure + queue."""
+        return self.kv_tokens() + sum(r.length for r in self.waiting)
+
+    def request_view(self) -> List:
+        """(input_len, current_len) pairs for refinement exchanges."""
+        return [(float(r.req.input_len), float(r.length))
+                for r in self.running]
+
+    # ---- request intake ---------------------------------------------------
+    def enqueue(self, sr: SimRequest, t: float) -> None:
+        self.waiting.append(sr)
+        self.kick(t)
+
+    def adopt_running(self, sr: SimRequest, t: float) -> None:
+        """Receive a migrated (still-decoding) request."""
+        self.running.append(sr)
+        self.kick(t)
+
+    # ---- iteration machinery ----------------------------------------------
+    def kick(self, t: float) -> None:
+        if self.iterating or (not self.waiting and not self.running):
+            return
+        self.iterating = True
+        self._start_iteration(t)
+
+    def _start_iteration(self, t: float) -> None:
+        admitted: List[SimRequest] = []
+        while self.waiting and len(self.running) < self.batch_cap:
+            if self.waiting[0].length + 1 > self.capacity:
+                # request can never fit this instance: reject (real
+                # engines fail such requests instead of wedging FCFS)
+                sr = self.waiting.popleft()
+                sr.rejected = True
+                sr.finish_t = t
+                sr.first_token_t = t
+                if self.on_request_done:
+                    self.on_request_done(self, sr, t)
+                continue
+            if self.free_tokens() < self.waiting[0].length:
+                break
+            sr = self.waiting.popleft()
+            self.running.append(sr)
+            admitted.append(sr)
+        decoding = [r for r in self.running if r not in admitted]
+        dur = sum(prefill_time(r.length, self.profile) for r in admitted)
+        if decoding:
+            dur += decode_iter_time([r.length for r in decoding], self.profile)
+        if not self.running:
+            self.iterating = False
+            return
+        self._iter_start = t
+        self.busy_until = t + dur
+        self.events.push(t + dur, lambda: self._end_iteration(t + dur,
+                                                              admitted))
+
+    def _end_iteration(self, t: float, admitted: List[SimRequest]) -> None:
+        n = len(self.running)
+        sumI = sum(r.req.input_len for r in self.running)
+        sumI2 = sum(r.req.input_len ** 2 for r in self.running)
+        sumL = sum(r.length for r in self.running)
+        finished: List[SimRequest] = []
+        produced = 0
+        for r in self.running:
+            if r.first_token_t is None:
+                r.first_token_t = t
+            r.generated += 1
+            r.length += 1
+            produced += 1
+            r.tokens_by_instance[self.id] = \
+                r.tokens_by_instance.get(self.id, 0) + 1
+            # batch-load features for QoE profiling
+            r.feat_sum[0] += 1.0
+            r.feat_sum[1] += n
+            r.feat_sum[2] += sumI
+            r.feat_sum[3] += sumI2
+            r.feat_sum[4] += sumL
+            r.feat_iters += 1
+            if r.done:
+                r.finish_t = t
+                finished.append(r)
+        self.tokens_out += produced
+        for r in finished:
+            self.running.remove(r)
+            if self.on_request_done:
+                self.on_request_done(self, r, t)
+        dur = max(t - self._iter_start, 1e-9)
+        if produced:
+            # EMA throughput estimate (bid-ask earliest_start payload)
+            self.throughput_est = (0.8 * self.throughput_est
+                                   + 0.2 * produced / dur)
+        if self.on_iteration_end:
+            self.on_iteration_end(self, t)
+        self.iterating = False
+        self.kick(t)

@@ -1,0 +1,93 @@
+"""Metrics over a simulation run (paper §6.1: TTFT, TPOT, throughput,
+SLO attainment; Fig. 16: per-stage output-token CV)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.sim.instance import Instance, SimRequest
+
+
+@dataclasses.dataclass
+class SimResult:
+    completed: List[SimRequest]
+    duration: float
+    num_submitted: int
+    instances: List[Instance]
+    policy_name: str
+    stage_of_instance: Optional[List[int]] = None
+
+    # ---- latency ----------------------------------------------------------
+    @property
+    def served(self):
+        return [r for r in self.completed if not r.rejected]
+
+    def _arr(self, fn) -> np.ndarray:
+        return np.asarray([fn(r) for r in self.served], np.float64)
+
+    def ttft(self) -> np.ndarray:
+        return self._arr(lambda r: r.ttft)
+
+    def tpot(self) -> np.ndarray:
+        return self._arr(lambda r: r.tpot)
+
+    def normalized_latency(self) -> np.ndarray:
+        return self._arr(lambda r: r.normalized_latency)
+
+    def summary(self) -> Dict[str, float]:
+        ttft, tpot = self.ttft(), self.tpot()
+        nl = self.normalized_latency()
+        return {
+            "policy": self.policy_name,
+            "completed": len(self.served),
+            "rejected": len(self.completed) - len(self.served),
+            "submitted": self.num_submitted,
+            "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
+            "ttft_p95": float(np.percentile(ttft, 95)) if len(ttft) else float("nan"),
+            "tpot_mean": float(tpot.mean()) if len(tpot) else float("nan"),
+            "tpot_p95": float(np.percentile(tpot, 95)) if len(tpot) else float("nan"),
+            "norm_latency_mean": float(nl.mean()) if len(nl) else float("nan"),
+            "throughput_tok_s": self.throughput(),
+        }
+
+    # ---- throughput -------------------------------------------------------
+    def throughput(self) -> float:
+        toks = sum(r.req.output_len for r in self.served)
+        return toks / max(self.duration, 1e-9)
+
+    # ---- SLO (paper §6.4) --------------------------------------------------
+    def slo_attainment(self, ttft_slo: float, tpot_slo: float,
+                       scale: float = 1.0) -> float:
+        if not self.served:
+            return 0.0
+        ok = sum(1 for r in self.served
+                 if r.ttft <= scale * ttft_slo and r.tpot <= scale * tpot_slo)
+        return ok / len(self.served)
+
+    # ---- load balance (paper Fig. 16) ---------------------------------------
+    def output_tokens_by_instance(self) -> np.ndarray:
+        n = len(self.instances)
+        out = np.zeros(n)
+        for r in self.completed:
+            for iid, cnt in r.tokens_by_instance.items():
+                out[iid] += cnt
+        return out
+
+    def stage_cv(self) -> List[float]:
+        """Coefficient of variation of per-instance output tokens, per stage
+        (lower = better balanced). Falls back to one global stage."""
+        toks = self.output_tokens_by_instance()
+        if self.stage_of_instance is None:
+            groups = {0: list(range(len(self.instances)))}
+        else:
+            groups = {}
+            for iid, si in enumerate(self.stage_of_instance):
+                groups.setdefault(si, []).append(iid)
+        cvs = []
+        for si in sorted(groups):
+            vals = toks[groups[si]]
+            mu = vals.mean()
+            cvs.append(float(vals.std() / mu) if mu > 0 else 0.0)
+        return cvs

@@ -1,0 +1,59 @@
+"""Checkpointing: pytree <-> .npz with slash-joined key paths.
+
+Restores onto the existing tree structure (shape/dtype checked), so it
+round-trips params, optimizer state, and caches alike.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree: Any, step: int | None = None) -> None:
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, int | None]:
+    """Restore into the structure of ``like``; returns (tree, step)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+    paths_leaves, tdef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(tdef, leaves), step

@@ -1,0 +1,71 @@
+"""Training loop: jit-compiled AdamW step, periodic checkpointing,
+loss/metric logging. Used by the end-to-end example (train a ~100M model
+for a few hundred steps) and by the per-arch train smoke tests; the
+distributed variant lives in launch/train.py (same step function under
+pjit shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    log_every: int = 20
+    ckpt_every: int = 0              # 0 = only at end
+    ckpt_path: Optional[str] = None
+    remat: bool = False
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    remat: bool = False) -> Callable:
+    def train_step(params, opt_state: AdamWState, batch):
+        def loss_fn(p):
+            loss, aux = model.loss(p, batch, remat=remat)
+            return loss, aux
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, info = adamw_update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = {"loss": loss, **info}
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(model: Model, params, data: TokenStream,
+          cfg: TrainConfig) -> Dict[str, List[float]]:
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(model, cfg.opt, cfg.remat))
+    history: Dict[str, List[float]] = {"loss": [], "lr": [], "grad_norm": []}
+    it = iter(data)
+    t0 = time.time()
+    for step in range(1, cfg.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % cfg.log_every == 0 or step == cfg.steps:
+            loss = float(m["loss"])
+            history["loss"].append(loss)
+            history["lr"].append(float(m["lr"]))
+            history["grad_norm"].append(float(m["grad_norm"]))
+            rate = step / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lr {float(m['lr']):.2e}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  {rate:.2f} it/s")
+        if cfg.ckpt_path and cfg.ckpt_every and step % cfg.ckpt_every == 0:
+            save_checkpoint(cfg.ckpt_path, params, step)
+    if cfg.ckpt_path:
+        save_checkpoint(cfg.ckpt_path, params, cfg.steps)
+    history["params"] = params          # type: ignore[assignment]
+    return history

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# src-layout import path (tests runnable without install)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def qoe_linear():
+    """A hand-built QoE model with plausible positive coefficients."""
+    from repro.core.qoe import QoEModel
+    return QoEModel(np.array([5e-3, 5e-4, 2e-7, 1e-12, 3e-7]))

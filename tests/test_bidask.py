@@ -1,0 +1,97 @@
+"""Decentralized bid-ask protocol (§4.4)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bidask import (Bid, MigRequest, ReceiverState, SenderState,
+                               STARVATION_THRESHOLD, is_overloaded,
+                               select_receiver)
+
+
+def test_select_receiver_filters_high_load():
+    bids = [Bid(0, 100.0, 0.0, 0),   # lowest start but high load -> filtered
+            Bid(1, 1.0, 5.0, 1),
+            Bid(2, 2.0, 4.0, 2),
+            Bid(3, 90.0, 0.1, 3)]
+    # low-load half = {1, 2}; earliest starts keep both; first reply = 1
+    assert select_receiver(bids) == 1
+
+
+def test_select_receiver_first_reply_among_finalists():
+    bids = [Bid(0, 1.0, 1.0, 5), Bid(1, 1.0, 1.0, 2), Bid(2, 1.0, 1.0, 9)]
+    assert select_receiver(bids) == 1
+
+
+def test_select_receiver_empty():
+    assert select_receiver([]) is None
+
+
+def test_overload_factor():
+    assert is_overloaded(140, [100, 100, 100])        # 140 >= 1.25*110
+    assert not is_overloaded(110, [100, 100, 100])
+    assert not is_overloaded(0, [0, 0])
+
+
+def test_sender_single_transmission():
+    s = SenderState(0)
+    a = s.offer(MigRequest(1, 100, 0))
+    b = s.offer(MigRequest(2, 50, 0))
+    assert s.load() == 150.0
+    assert s.can_transmit(1)
+    s.begin(1)
+    assert not s.can_transmit(2)       # one transfer at a time
+    s.finish(1)
+    assert s.can_transmit(2)
+    assert s.load() == 50.0
+
+
+def test_receiver_priority_order():
+    r = ReceiverState(9)
+    lo = MigRequest(1, 10, 0, priority=5.0)
+    hi = MigRequest(2, 10, 0, priority=50.0)
+    r.win(lo)
+    r.win(hi)
+    got, starved = r.next_pull(lambda src: False)
+    assert got.req_id == 2            # higher sender load first
+    assert starved is None
+
+
+def test_receiver_starvation_backpressure():
+    r = ReceiverState(9)
+    req = MigRequest(1, 10, 0, priority=5.0)
+    r.win(req)
+    starved = None
+    for _ in range(STARVATION_THRESHOLD + 1):
+        got, starved = r.next_pull(lambda src: True)   # sender always busy
+        assert got is None
+        if starved is not None:
+            break
+    assert starved == 1
+    # receiver now blocks until the starved request arrives
+    got, _ = r.next_pull(lambda src: False)
+    assert got is None
+    assert r.take(1).req_id == 1
+    got, _ = r.next_pull(lambda src: False)
+    assert got is None                 # queue empty
+
+
+def test_sender_starved_priority():
+    s = SenderState(0)
+    s.offer(MigRequest(1, 10, 0))
+    s.offer(MigRequest(2, 10, 0))
+    s.mark_starved(2)
+    assert not s.can_transmit(1)       # starved request jumps the line
+    assert s.can_transmit(2)
+
+
+@given(st.lists(st.tuples(st.floats(0, 1e6), st.floats(0, 1e6)),
+                min_size=1, max_size=20))
+@settings(max_examples=60, deadline=None)
+def test_select_receiver_properties(loads_starts):
+    bids = [Bid(i, l, s, i) for i, (l, s) in enumerate(loads_starts)]
+    rid = select_receiver(bids)
+    assert rid is not None
+    # winner's load must be within the kept (lower-load) half
+    loads = sorted(b.load for b in bids)
+    keep = loads[:max(1, (len(loads) + 1) // 2)]
+    assert bids[rid].load <= keep[-1] + 1e-9

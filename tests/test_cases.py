@@ -1,0 +1,72 @@
+"""Launch-layer case construction + analytic roofline formulas."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.cases import (SHAPES, adjusted_config, shape_kind,
+                                skip_reason)
+from repro.launch.roofline import (analytic_flops_global,
+                                   analytic_min_bytes, model_flops)
+
+ASSIGNED = [a for a in ARCHS if a != "llama3.2-3b"]
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"]["global_batch"] == 256
+    assert SHAPES["long_500k"]["seq_len"] == 524_288
+    assert shape_kind("decode_32k") == "decode"
+    assert shape_kind("prefill_32k") == "prefill"
+
+
+def test_skip_matrix():
+    skips = [(a, s) for a in ASSIGNED for s in SHAPES
+             if skip_reason(a, s)]
+    assert skips == [("whisper-large-v3", "long_500k")]
+
+
+def test_adjusted_config_long_context():
+    for arch in ("qwen2.5-14b", "arctic-480b", "qwen2-vl-7b"):
+        cfg = adjusted_config(arch, "long_500k")
+        assert cfg.sliding_window == 8192, "dense/MoE/VLM need sub-quadratic"
+    assert adjusted_config("rwkv6-7b", "long_500k").sliding_window == 0
+    assert adjusted_config("zamba2-2.7b", "long_500k").sliding_window == 0
+
+
+def test_adjusted_config_moe_uses_gshard():
+    assert adjusted_config("qwen3-moe-30b-a3b", "train_4k").moe_impl == \
+        "gshard"
+    assert get_config("qwen3-moe-30b-a3b").moe_impl == "dense"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_analytic_flops_positive_and_ordered(arch):
+    cfg = adjusted_config(arch, "train_4k")
+    f_train = analytic_flops_global(cfg, "train_4k", 4096, 256)
+    cfg_d = adjusted_config(arch, "decode_32k")
+    f_dec = analytic_flops_global(cfg_d, "decode_32k", 32768, 128)
+    assert f_train > f_dec > 0
+    # executed >= matmul-core model flops
+    assert f_train >= model_flops(cfg, "train_4k", 4096, 256) * 0.99
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "arctic-480b", "rwkv6-7b"])
+def test_analytic_bytes_floor(arch):
+    cfg = adjusted_config(arch, "decode_32k")
+    b16 = analytic_min_bytes(cfg, "decode_32k", 32768, 128,
+                             {"data": 16, "model": 16})
+    b32 = analytic_min_bytes(cfg, "decode_32k", 32768, 128,
+                             {"pod": 2, "data": 16, "model": 16})
+    assert b16 > 0
+    assert b32 <= b16  # more chips -> less per chip
+    train = analytic_min_bytes(cfg, "train_4k", 4096, 256,
+                               {"data": 16, "model": 16})
+    assert train > b16  # optimizer traffic dominates
+
+
+def test_sliding_window_shrinks_decode_flops():
+    full = adjusted_config("qwen2.5-14b", "decode_32k")
+    win = adjusted_config("qwen2.5-14b", "long_500k")
+    f_full = analytic_flops_global(full, "decode_32k", 32768, 1)
+    f_win = analytic_flops_global(win, "long_500k", 524_288, 1)
+    # 500k with window 8192 does LESS attention than 32k full
+    assert f_win < f_full

@@ -1,0 +1,65 @@
+"""Live KV migration (§5) and real KV slice/merge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.migration import (MAX_CONCURRENT, MigrationManager, kv_bytes,
+                                  merge_kv_batch, plan_live_migration,
+                                  slice_kv_batch)
+
+
+def test_live_migration_converges():
+    t = plan_live_migration(tokens=50_000, decode_tok_per_s=30,
+                            bytes_per_token=2e5, bandwidth=25e9)
+    assert t.total_s > 0
+    assert t.stall_s <= t.total_s
+    assert t.rounds >= 1
+    assert t.bytes_moved >= 50_000 * 2e5
+
+
+def test_more_bandwidth_is_faster():
+    slow = plan_live_migration(50_000, 30, 2e5, 10e9)
+    fast = plan_live_migration(50_000, 30, 2e5, 100e9)
+    assert fast.total_s < slow.total_s
+    assert fast.stall_s <= slow.stall_s + 1e-12
+
+
+def test_stall_is_small_fraction():
+    # live migration's whole point: stop-and-copy residual is tiny
+    t = plan_live_migration(100_000, 20, 2e5, 25e9)
+    assert t.stall_s < 0.05 * t.total_s + 1e-6
+
+
+def test_manager_concurrency_cap():
+    m = MigrationManager()
+    for i in range(MAX_CONCURRENT):
+        assert m.can_start(True)
+        m.start(i, 1.0)
+    assert not m.can_start(True)           # cap reached
+    m.finish(0)
+    assert m.can_start(True)
+    assert not m.can_start(False)          # no idle slot on target
+
+
+def test_kv_slice_merge_roundtrip(rng):
+    cache = {"k": jnp.asarray(rng.normal(0, 1, (2, 4, 8, 3, 16)),
+                              jnp.float32),
+             "v": jnp.asarray(rng.normal(0, 1, (2, 4, 8, 3, 16)),
+                              jnp.float32)}
+    piece = slice_kv_batch(cache, 2)
+    assert piece["k"].shape == (2, 1, 8, 3, 16)
+    target = jax.tree.map(jnp.zeros_like, cache)
+    merged = merge_kv_batch(target, piece, 0)
+    assert jnp.allclose(merged["k"][:, 0], cache["k"][:, 2])
+    assert kv_bytes(piece) == 2 * 2 * 8 * 3 * 16 * 4
+
+
+@given(st.integers(100, 10**6), st.floats(1, 1000), st.floats(1e9, 1e11))
+@settings(max_examples=40, deadline=None)
+def test_migration_properties(tokens, rate, bw):
+    t = plan_live_migration(tokens, rate, 2e5, bw)
+    assert t.total_s >= t.stall_s >= 0
+    assert t.rounds <= 9

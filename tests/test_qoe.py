@@ -1,0 +1,69 @@
+"""QoE model (§4.1): features, fitting, prediction error."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.qoe import (QoEModel, batch_features, fit_qoe,
+                            relative_errors, static_baseline_errors)
+
+
+def test_batch_features_values():
+    F = batch_features([100, 200], [150, 400])
+    assert np.allclose(F, [1.0, 2.0, 300.0, 100**2 + 200**2, 550.0])
+
+
+def test_batch_features_weighted():
+    F = batch_features([100], [150], weights=[0.5])
+    assert np.allclose(F, [1.0, 0.5, 50.0, 5000.0, 75.0])
+
+
+def test_fit_recovers_ground_truth(rng):
+    D_true = np.array([5.0, 0.4, 1e-3, 1e-8, 2e-3])
+    F = np.stack([batch_features(rng.integers(50, 2000, 16),
+                                 rng.integers(100, 60000, 16))
+                  for _ in range(500)])
+    Q = F @ D_true
+    m = fit_qoe(F, Q)
+    pred = F @ m.D
+    assert np.abs((pred - Q) / Q).max() < 1e-6
+
+
+def test_fit_nonneg_projection(rng):
+    # construct data where unconstrained LS goes negative on one column
+    F = np.stack([batch_features(rng.integers(50, 200, 4),
+                                 rng.integers(60, 260, 4))
+                  for _ in range(200)])
+    Q = F @ np.array([1.0, 0.1, 1e-4, 0.0, 1e-4]) + rng.normal(0, 5, 200)
+    m = fit_qoe(F, Q, nonneg=True)
+    assert (m.D >= 0).all()
+
+
+def test_batch_q_scaling(qoe_linear):
+    # Q^B = n·Q1: doubling the set should more than double batch QoE
+    q1 = qoe_linear.batch_q([100] * 4, [200] * 4)
+    q2 = qoe_linear.batch_q([100] * 8, [200] * 8)
+    assert q2 > 2 * q1
+    assert qoe_linear.batch_q([], []) == 0.0
+
+
+def test_model_beats_static_baseline(rng):
+    D_true = np.array([1e-2, 1e-3, 1e-6, 1e-11, 1e-6])
+    F = np.stack([batch_features(rng.integers(50, 5000, 8),
+                                 rng.integers(60, 30000, 8))
+                  for _ in range(300)])
+    Q = F @ D_true * rng.normal(1.0, 0.05, 300)
+    m = fit_qoe(F, Q)
+    err = np.abs(relative_errors(m, F, Q)).mean()
+    base = np.abs(static_baseline_errors(F, Q)).mean()
+    assert err < base / 3  # paper: 8.9% vs 64%
+
+
+@given(st.lists(st.tuples(st.integers(1, 10_000), st.integers(1, 10_000)),
+                min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_batch_q_nonnegative_property(pairs):
+    m = QoEModel(np.array([5e-3, 5e-4, 2e-7, 1e-12, 3e-7]))
+    I = [p[0] for p in pairs]
+    L = [p[0] + p[1] for p in pairs]
+    assert m.batch_q(I, L) >= 0.0

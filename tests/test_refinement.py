@@ -1,0 +1,70 @@
+"""Adaptive range refinement (§4.3)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.qoe import QoEModel
+from repro.core.refinement import (BoundaryRefiner, divide_evenly,
+                                   memory_based_split, optimal_split,
+                                   quantity_based_split)
+
+
+def test_optimal_split_matches_bruteforce(rng, qoe_linear):
+    reqs = [(float(i), float(l)) for i, l in
+            zip(rng.integers(10, 500, 20), rng.integers(20, 5000, 20))]
+    b_idx, boundary = optimal_split(reqs, qoe_linear)
+    # brute force over the sorted list
+    arr = sorted(reqs, key=lambda r: r[1])
+    best = np.inf
+    best_i = None
+    for i in range(len(arr) + 1):
+        left, right = arr[:i], arr[i:]
+        q = (qoe_linear.batch_q([r[0] for r in left], [r[1] for r in left])
+             + qoe_linear.batch_q([r[0] for r in right],
+                                  [r[1] for r in right]))
+        if q < best:
+            best, best_i = q, i
+    assert b_idx == best_i
+
+
+def test_divide_evenly():
+    vals = np.arange(100)
+    sub = divide_evenly(vals, 4)
+    assert len(sub) == 25
+    assert sub[0] == 2           # starts at n/2-th element
+    assert np.all(np.diff(sub) == 4)
+
+
+def test_low_traffic_freeze(qoe_linear):
+    r = BoundaryRefiner(qoe_linear, boundary=1000.0, min_requests=5)
+    out = r.refine([(100.0, 200.0)], [])       # 1 request < 5 -> freeze
+    assert out == 1000.0
+
+
+def test_ema_smoothing(qoe_linear):
+    r = BoundaryRefiner(qoe_linear, boundary=1000.0, ema=0.5)
+    own = [(10.0, float(l)) for l in range(100, 120)]
+    succ = [[(10.0, float(l)) for l in range(5000, 5020)]]
+    out = r.refine(own, succ)
+    # new raw boundary is far from 1000; EMA keeps it between
+    assert out != 1000.0
+    assert 100.0 < out < 5020.0
+
+
+def test_quantity_and_memory_splits():
+    reqs = [(10.0, float(l)) for l in [10, 20, 30, 40, 1000]]
+    qs = quantity_based_split(reqs)
+    ms = memory_based_split(reqs)
+    assert qs == 30.0                  # median count split
+    assert ms >= qs                    # memory split skews toward the long one
+
+
+@given(st.lists(st.tuples(st.floats(1, 1e4), st.floats(1, 1e5)),
+                min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_optimal_split_in_range(reqs):
+    qoe = QoEModel(np.array([5e-3, 5e-4, 2e-7, 1e-12, 3e-7]))
+    b_idx, boundary = optimal_split(reqs, qoe)
+    assert 0 <= b_idx <= len(reqs)
+    lens = [r[1] for r in reqs]
+    assert min(lens) <= boundary <= max(lens)

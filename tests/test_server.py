@@ -1,0 +1,88 @@
+"""Multi-engine CascadeInfer server over real model state."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.partition import PipelinePlan, Stage
+from repro.core.qoe import QoEModel
+from repro.models import build_model
+from repro.serving.request import ServeRequest
+from repro.serving.server import MILSServer, ServerConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _plan(E, boundary=48.0):
+    lo = E // 2
+    return PipelinePlan([Stage(0.0, boundary, E - lo),
+                         Stage(boundary, float("inf"), lo)], 0.0)
+
+
+def _qoe():
+    return QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+
+
+def _reqs(rng, cfg, n, plen=20, new=(8, 50)):
+    return [ServeRequest(i, rng.integers(0, cfg.vocab_size, plen)
+                         .astype(np.int32), int(rng.integers(*new)))
+            for i in range(n)]
+
+
+def test_cascade_server_completes_and_migrates(setup, rng):
+    cfg, model, params = setup
+    srv = MILSServer(model, params, _plan(4), _qoe(),
+                     ServerConfig(policy="cascade", seed=0),
+                     max_slots=3, max_seq=96)
+    reqs = _reqs(rng, cfg, 8)
+    fin = srv.run(reqs, max_steps=400)
+    assert len(fin) == 8
+    assert srv.migrations > 0, "long requests must cross the stage boundary"
+
+
+def test_migrated_decode_identical_to_single_engine(setup, rng):
+    cfg, model, params = setup
+    srv = MILSServer(model, params, _plan(4), _qoe(),
+                     ServerConfig(policy="cascade", seed=0),
+                     max_slots=3, max_seq=96)
+    reqs = _reqs(rng, cfg, 6, new=(30, 60))
+    fin = srv.run(reqs, max_steps=400)
+    for r in fin[:3]:
+        single = MILSServer(model, params,
+                            PipelinePlan([Stage(0.0, float("inf"), 1)], 0.0),
+                            _qoe(), ServerConfig(policy="round-robin"),
+                            max_slots=3, max_seq=96)
+        ref = ServeRequest(100 + r.req_id, r.prompt.copy(),
+                           r.max_new_tokens)
+        single.run([ref], max_steps=400)
+        assert r.generated == ref.generated, \
+            f"req {r.req_id}: migration changed greedy decode"
+
+
+def test_round_robin_and_least_loaded_policies(setup, rng):
+    cfg, model, params = setup
+    for policy in ("round-robin", "least-loaded"):
+        srv = MILSServer(model, params, _plan(2), _qoe(),
+                         ServerConfig(policy=policy), max_slots=3,
+                         max_seq=96)
+        fin = srv.run(_reqs(rng, cfg, 4), max_steps=300)
+        assert len(fin) == 4
+
+
+def test_boundaries_stay_monotone_under_refinement(setup, rng):
+    cfg, model, params = setup
+    srv = MILSServer(model, params, _plan(4), _qoe(),
+                     ServerConfig(policy="cascade", refine_every=4, seed=1),
+                     max_slots=3, max_seq=96)
+    srv.run(_reqs(rng, cfg, 10), max_steps=400)
+    bounds = srv.stage_bounds
+    assert bounds[0][0] == 0.0
+    assert bounds[-1][1] == float("inf")
+    for (lo, hi), (lo2, hi2) in zip(bounds, bounds[1:]):
+        assert hi == lo2 and lo < hi

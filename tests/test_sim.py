@@ -1,0 +1,120 @@
+"""Discrete-event MILS simulator: conservation, policies, paper claims."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.partition import PipelinePlan, Stage
+from repro.core.qoe import QoEModel
+from repro.sim.cluster import (CascadePolicy, Cluster, ClusterConfig,
+                               LlumnixLikePolicy, RoundRobinPolicy)
+from repro.sim.costmodel import (decode_iter_time, prefill_time,
+                                 profile_from_config)
+from repro.sim.profiler import profile_point
+from repro.sim.workload import Request, WorkloadSpec, generate
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile_from_config(get_config("llama3.2-3b"))
+
+
+@pytest.fixture(scope="module")
+def qoe():
+    return QoEModel(np.array([5e-3, 5e-4, 2e-7, 1e-12, 3e-7]))
+
+
+def _plan(E):
+    return PipelinePlan(
+        [Stage(0.0, 1024.0, E // 2), Stage(1024.0, float("inf"), E - E // 2)],
+        0.0)
+
+
+def _run(policy, prof, requests, duration=20.0, E=4):
+    cfg = ClusterConfig(num_instances=E, capacity_tokens=200_000.0, seed=0)
+    return Cluster(prof, policy, cfg).run(requests, duration)
+
+
+def test_workload_generator_deterministic():
+    spec = WorkloadSpec(rate=5, duration=10, seed=3)
+    a, b = generate(spec), generate(spec)
+    assert [r.input_len for r in a] == [r.input_len for r in b]
+    assert all(r.input_len + r.output_len <= spec.max_context for r in a)
+
+
+def test_cost_model_monotonicity(prof):
+    t_small = decode_iter_time([100] * 4, prof)
+    t_big = decode_iter_time([100] * 64, prof)
+    assert t_big > t_small
+    assert prefill_time(10_000, prof) > prefill_time(100, prof)
+    # heterogeneity tax: same tokens, mixed lengths is slower
+    homog = decode_iter_time([5000] * 16, prof)
+    hetero = decode_iter_time([100] * 15 + [5000 * 16 - 1500], prof)
+    assert hetero > homog
+
+
+def test_all_requests_complete_rr(prof):
+    reqs = generate(WorkloadSpec(rate=3, duration=10, seed=1))
+    res = _run(RoundRobinPolicy(), prof, reqs)
+    assert len(res.completed) == len(reqs)
+    # token conservation: every request generated exactly output_len tokens
+    for r in res.completed:
+        assert r.generated == r.req.output_len
+        assert sum(r.tokens_by_instance.values()) == r.req.output_len
+
+
+def test_all_requests_complete_cascade(prof, qoe):
+    reqs = generate(WorkloadSpec(rate=3, duration=10, seed=1))
+    res = _run(CascadePolicy(_plan(4), qoe), prof, reqs)
+    assert len(res.completed) == len(reqs)
+    for r in res.completed:
+        assert sum(r.tokens_by_instance.values()) == r.req.output_len
+
+
+def test_cascade_migrates_growing_requests(prof, qoe):
+    # one long request must cross the 1024 boundary and land downstream
+    reqs = [Request(0, 0.0, 900, 600)]
+    res = _run(CascadePolicy(_plan(4), qoe,
+                             refinement="none"), prof, reqs)
+    r = res.completed[0]
+    assert len(r.tokens_by_instance) >= 2, "request should have migrated"
+
+
+def test_cascade_beats_baselines_under_heavy_load(prof, qoe):
+    """The paper's headline claim, at mini scale."""
+    reqs = generate(WorkloadSpec(rate=14, duration=15, seed=2))
+    rr = _run(RoundRobinPolicy(), prof, reqs, E=4)
+    ca = _run(CascadePolicy(_plan(4), qoe), prof, reqs, E=4)
+    assert np.mean(ca.tpot()) < np.mean(rr.tpot())
+    assert np.mean(ca.ttft()) < np.mean(rr.ttft()) * 1.5
+
+
+def test_llumnix_like_completes(prof):
+    reqs = generate(WorkloadSpec(rate=5, duration=10, seed=4))
+    res = _run(LlumnixLikePolicy(), prof, reqs)
+    assert len(res.completed) == len(reqs)
+
+
+def test_metrics_shapes(prof, qoe):
+    reqs = generate(WorkloadSpec(rate=3, duration=8, seed=5))
+    res = _run(CascadePolicy(_plan(4), qoe), prof, reqs)
+    s = res.summary()
+    assert s["completed"] == len(reqs)
+    assert s["throughput_tok_s"] > 0
+    assert 0.0 <= res.slo_attainment(1.0, 0.1) <= 1.0
+    assert len(res.stage_cv()) == 2
+
+
+def test_profiler_keeps_batch_in_flight(prof):
+    F, Q = profile_point(prof, (256, 512), batch_size=8, horizon_s=3.0)
+    assert len(Q) > 4
+    # average batch size seen by requests ~ 8
+    assert 4.0 <= F[:, 1].mean() <= 9.0
+
+
+def test_ragged_backend_profile_is_faster():
+    cfg = get_config("llama3.2-3b")
+    padded = profile_from_config(cfg, ragged_backend=False)
+    ragged = profile_from_config(cfg, ragged_backend=True)
+    lengths = [200] * 31 + [40_000]
+    assert (decode_iter_time(lengths, ragged)
+            < decode_iter_time(lengths, padded))

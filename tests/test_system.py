@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the whole system: the paper's claims
+reproduced at test scale (simulator), and the real-engine control plane
+exercising every CascadeInfer mechanism in one run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.partition import two_phase
+from repro.core.qoe import QoEModel, relative_errors, static_baseline_errors
+from repro.core.workload_stats import build_stats, exp_bucket_edges
+from repro.models import build_model
+from repro.sim.cluster import (CascadePolicy, Cluster, ClusterConfig,
+                               RoundRobinPolicy)
+from repro.sim.costmodel import profile_from_config
+from repro.sim.profiler import profile_and_fit
+from repro.sim.workload import WorkloadSpec, generate, sample_lengths
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """Profile -> fit -> plan, the full §4 pipeline at small scale."""
+    prof = profile_from_config(get_config("llama3.2-3b"))
+    qoe, F, Q = profile_and_fit(
+        prof, buckets=((128, 512), (512, 2048), (2048, 8192),
+                       (8192, 32768)),
+        batch_sizes=(1, 4, 16, 48), horizon_s=4.0, return_samples=True)
+    return prof, qoe, F, Q
+
+
+def test_qoe_fit_beats_static_predictor(fitted):
+    """Paper Fig. 13: fitted model ≪ static mean predictor."""
+    _, qoe, F, Q = fitted
+    model_err = np.abs(relative_errors(qoe, F, Q)).mean()
+    static_err = np.abs(static_baseline_errors(F, Q)).mean()
+    assert model_err < static_err / 3
+    assert (qoe.D >= 0).all()
+
+
+def test_full_pipeline_plan_and_serve(fitted):
+    """profile -> fit -> DP plan -> simulate: cascade completes everything
+    and improves latency vs round-robin under load."""
+    prof, qoe, _, _ = fitted
+    rng = np.random.default_rng(0)
+    spec = WorkloadSpec(rate=1, duration=1)
+    ins, outs = sample_lengths(spec, 800, rng)
+    stats = build_stats(list(zip(ins.tolist(), outs.tolist())),
+                        exp_bucket_edges(131_072))
+    plan = two_phase(stats, 4, qoe,
+                     kv_bytes_per_token=prof.kv_bytes_per_token)
+    assert plan.num_instances == 4
+
+    reqs = generate(WorkloadSpec(rate=12, duration=15, seed=7))
+    cfg = ClusterConfig(num_instances=4, capacity_tokens=200_000, seed=0)
+    rr = Cluster(prof, RoundRobinPolicy(), cfg).run(reqs, 15.0)
+    ca = Cluster(prof, CascadePolicy(plan, qoe),
+                 ClusterConfig(num_instances=4, capacity_tokens=200_000,
+                               seed=0)).run(reqs, 15.0)
+    assert len(ca.completed) == len(reqs)
+    assert np.mean(ca.tpot()) < np.mean(rr.tpot())
+
+
+def test_real_engine_cluster_end_to_end(rng):
+    """Real JAX engines: routing, migration, refinement, completion."""
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.serving.request import ServeRequest
+    from repro.serving.server import MILSServer, ServerConfig
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = PipelinePlan([Stage(0.0, 40.0, 2), Stage(40.0, float("inf"), 2)],
+                        0.0)
+    qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+    srv = MILSServer(model, params, plan, qoe,
+                     ServerConfig(policy="cascade", refine_every=8, seed=0),
+                     max_slots=3, max_seq=96)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size, 16)
+                         .astype(np.int32), int(rng.integers(10, 55)))
+            for i in range(10)]
+    fin = srv.run(reqs, max_steps=500)
+    assert len(fin) == 10
+    assert srv.migrations > 0
+    out_tokens = sum(len(r.generated) for r in fin)
+    assert out_tokens == sum(r.max_new_tokens for r in fin)

@@ -1,0 +1,86 @@
+"""Training substrate: optimizer, schedule, data, checkpoint, loop."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, TokenStream
+from repro.training.optimizer import (AdamWConfig, adamw_update, global_norm,
+                                      init_adamw, schedule)
+from repro.training.trainer import TrainConfig, train
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    st = init_adamw(params)
+    cfg = AdamWConfig(grad_clip=1.0, weight_decay=0.0)
+    _, _, info = adamw_update(cfg, grads, st, params)
+    assert float(info["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray(5.0).reshape(1)}
+    st = init_adamw(params)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                      weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}        # d/dw w²
+        params, st, _ = adamw_update(cfg, grads, st, params)
+    assert abs(float(params["w"][0])) < 0.5
+
+
+def test_data_stream_deterministic():
+    cfg = get_config("smollm-360m").reduced()
+    a = next(iter(TokenStream(cfg, DataConfig(seed=7))))
+    b = next(iter(TokenStream(cfg, DataConfig(seed=7))))
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (8, 128)
+
+
+def test_train_loss_decreases_and_checkpoints():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(cfg, DataConfig(batch_size=4, seq_len=32))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        hist = train(model, params, stream,
+                     TrainConfig(steps=40, log_every=10, ckpt_path=path,
+                                 opt=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                                 total_steps=40)))
+        assert hist["loss"][-1] < hist["loss"][0]
+        restored, step = load_checkpoint(path, hist["params"])
+        assert step == 40
+        for a, b in zip(jax.tree.leaves(hist["params"]),
+                        jax.tree.leaves(restored)):
+            assert np.allclose(a, b)
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.zeros((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        save_checkpoint(path, tree)
+        with pytest.raises(ValueError):
+            load_checkpoint(path, {"a": jnp.zeros((3, 3))})
+        with pytest.raises(KeyError):
+            load_checkpoint(path, {"b": jnp.zeros((2, 2))})
