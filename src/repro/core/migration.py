@@ -96,6 +96,28 @@ def merge_kv_batch(cache, piece, index: int):
     return jax.tree.map(put, cache, piece)
 
 
+def gather_kv_blocks(pool, block_ids):
+    """Extract a request's physical blocks from a paged pool.
+
+    Pool leaves are [L, NB, BS, ...]; ``block_ids`` is the request's block
+    table (ordered logical->physical). Returns leaves [L, nb, BS, ...] —
+    the migration wire format for the paged engine (DESIGN.md §Migration):
+    bytes moved scale with ceil(length/BS)·BS, not max_seq.
+    """
+    idx = jnp.asarray(block_ids, jnp.int32)
+    return jax.tree.map(lambda a: a[:, idx], pool)
+
+
+def scatter_kv_blocks(pool, piece, block_ids):
+    """Write a gathered piece (leaves [L, nb, BS, ...]) into freshly
+    allocated blocks of the destination pool."""
+    idx = jnp.asarray(block_ids, jnp.int32)
+
+    def put(a, p):
+        return a.at[:, idx].set(p.astype(a.dtype))
+    return jax.tree.map(put, pool, piece)
+
+
 def kv_bytes(cache) -> float:
     return float(sum(a.size * a.dtype.itemsize
                      for a in jax.tree.leaves(cache)))

@@ -8,12 +8,16 @@ TPU adaptation of the paper's SM-block analysis (DESIGN.md §2): the grid is
 batch padded to its longest member burns ``Σ_b (ceil(maxL/BS) − ceil(L_b/BS))``
 wasted block iterations — the TPU restatement of inter-SM imbalance.
 
-Two modes, same numerics:
+Two layouts, three modes, same numerics:
   * ``ragged=False`` (paper-faithful backend): every KV block is fetched and
     computed, out-of-range positions masked — cost ∝ B · ceil(S/BS).
   * ``ragged=True`` (beyond-paper): per-request length scalars are prefetched
     (SMEM) and fully-masked blocks skip the MXU work via ``pl.when`` —
     cost ∝ Σ_b ceil(L_b/BS) plus a small per-skipped-block grid overhead.
+  * ``paged_decode_attention``: same ragged skip, but KV lives in a global
+    block *pool* ``[NB, BS, Hkv, Dh]`` and each request's blocks are chased
+    through a prefetched block table — the serving engine's layout
+    (DESIGN.md §Block pool), no per-request padding or copies at all.
 
 Block design for v5e: BS=512 KV rows × Dh=128 lanes (bf16 tile 16×128
 aligned, MXU contraction dim 128); the per-(b,hkv) working set is
@@ -84,6 +88,119 @@ def _decode_kernel(lengths_ref,          # scalar prefetch [B]
         l = l_ref[:, 0]
         safe = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def _paged_decode_kernel(lengths_ref,        # scalar prefetch [B]
+                         bt_ref,             # scalar prefetch [B, NBT]
+                         q_ref,              # [1, 1, G, Dh]
+                         k_ref, v_ref,       # [1, BS, 1, Dh] (one phys block)
+                         o_ref,              # [1, 1, G, Dh]
+                         m_ref, l_ref, acc_ref,  # VMEM scratch
+                         *, block_s: int):
+    """Block-table decode attention: grid step (b, h, j) DMAs *physical*
+    block ``bt_ref[b, j]`` (resolved by the index maps below, before the
+    body runs — scalar prefetch) holding logical KV rows
+    ``[j·BS, (j+1)·BS)`` of request ``b``. Blocks at or beyond the request's
+    length are pure padding (tables are padded with block 0) and skip the
+    MXU work entirely, so cost is ∝ Σ_b ceil(L_b/BS) — the paged engine
+    never pays for another request's length (DESIGN.md §Kernel grid)."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    start = j * block_s
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
+        s = s / math.sqrt(q.shape[-1])
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(idx < length, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                            # [G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])                 # [G, BS]
+        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    pl.when(start < length)(_compute)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           interpret: bool = False):
+    """Decode attention over a paged KV pool.
+
+    q            [B, H, Dh]              — one query token per request
+    k/v_pool     [NB, BS, Hkv, Dh]       — global physical block pool
+    block_tables [B, NBT] int32          — physical block id per logical
+                                           block; rows past a request's
+                                           ceil(L_b/BS) blocks are padding
+    lengths      [B] int32               — valid tokens per request
+    returns      [B, H, Dh]
+
+    TPU mapping: both scalars are prefetched (SMEM) so the KV BlockSpec
+    index maps can chase the block table — grid step (b, h, j) DMAs
+    physical block ``block_tables[b, j]`` from HBM while step j−1 computes
+    (standard double-buffered sequential grid). Fully padded steps skip
+    the MXU via ``pl.when``; the paged pool means no request is ever
+    padded to another's length, so the grid cost is Σ_b ceil(L_b/BS).
+    """
+    B, H, Dh = q.shape
+    NB, BS, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    G = H // Hkv
+    NBT = block_tables.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    grid = (B, Hkv, NBT)
+    kernel = functools.partial(_paged_decode_kernel, block_s=BS)
+
+    def kv_map(b, h, j, lens, bt):
+        del lens
+        return (bt[b, j], 0, h, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, *pf: (b, h, 0, 0)),
+                pl.BlockSpec((1, BS, 1, Dh), kv_map),
+                pl.BlockSpec((1, BS, 1, Dh), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dh),
+                                   lambda b, h, j, *pf: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 128), jnp.float32),   # m (lane-replicated)
+                pltpu.VMEM((G, 128), jnp.float32),   # l
+                pltpu.VMEM((G, Dh), jnp.float32),    # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(lengths, block_tables, qg, k_pool, v_pool)
+    return out.reshape(B, H, Dh)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "ragged", "interpret"))

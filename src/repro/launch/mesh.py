@@ -9,14 +9,18 @@ from __future__ import annotations
 import jax
 
 
+def _axis_types_kwarg(n: int) -> dict:
+    # jax.sharding.AxisType landed after 0.4.x; Auto is that era's default
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (data=16, model=16) = 256 chips.
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kwarg(len(axes)))
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
@@ -24,8 +28,7 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (n // model, model), ("data", "model"), **_axis_types_kwarg(2))
 
 
 def batch_axes(mesh: jax.sharding.Mesh):

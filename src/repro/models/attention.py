@@ -288,6 +288,68 @@ def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos,
 
 
 # --------------------------------------------------------------------------
+# Paged decode: one token vs. a global block pool + per-request block table.
+# --------------------------------------------------------------------------
+def paged_gather(pool, block_tables):
+    """pool [NB, BS, Hkv, Dh]; block_tables [B, NBT] int32 ->
+    contiguous per-request view [B, NBT*BS, Hkv, Dh]. Rows past a
+    request's length come from padding table entries and must be masked
+    by the caller."""
+    B, NBT = block_tables.shape
+    g = pool[block_tables]                       # [B, NBT, BS, Hkv, Dh]
+    return g.reshape(B, NBT * pool.shape[1], *pool.shape[2:])
+
+
+def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
+                           block_tables, pos, *, mrope_positions=None):
+    """Block-table variant of :func:`attention_decode`.
+
+    x [B, 1, D]; pool_l leaves [NB, BS, Hkv, Dh] — ONE layer's slice of the
+    engine's global block pool; block_tables [B, NBT] int32 physical block
+    ids (padded rows arbitrary); pos [B] int32 tokens already cached.
+
+    Writes the new token's K/V at physical ``(table[pos//BS], pos%BS)``
+    and attends over the request's blocks only. Requests never share
+    blocks, so the batched scatter has no duplicate indices. Full
+    attention only — the sliding-window ring layout keeps the monolithic
+    path (as do ssm/rwkv recurrent states).
+    """
+    assert not cfg.sliding_window, "paged decode is full-attention only"
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)           # q [B,1,H,Dh]; k,v [B,1,Hkv,Dh]
+    if cfg.use_mrope:
+        mp = (mrope_positions if mrope_positions is not None
+              else jnp.broadcast_to(pos[:, None, None], (B, 1, 3)))
+        q = apply_mrope(q, mp, cfg.rope_theta)
+        k = apply_mrope(k, mp, cfg.rope_theta)
+    elif not cfg.learned_pos:
+        pp = pos[:, None]
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k = apply_rope(k, pp, cfg.rope_theta)
+
+    BS = pool_l.k.shape[1]
+    blk = jnp.take_along_axis(block_tables, (pos // BS)[:, None], axis=1)[:, 0]
+    off = pos % BS
+    new_k = pool_l.k.at[blk, off].set(k[:, 0].astype(pool_l.k.dtype))
+    new_v = pool_l.v.at[blk, off].set(v[:, 0].astype(pool_l.v.dtype))
+
+    k_seq = paged_gather(new_k, block_tables)    # [B, NBT*BS, Hkv, Dh]
+    v_seq = paged_gather(new_v, block_tables)
+    kpos = jnp.arange(k_seq.shape[1])[None, :]
+    mask = (kpos <= pos[:, None])[:, None, None, None, :]
+    out = _gqa_sdpa(q, k_seq, v_seq, mask)
+    return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
+
+
+def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    dtype=None) -> KVCache:
+    """Zeroed global block pool for ONE layer: [NB, BS, Hkv, Dh]."""
+    dt = dtype or cfg.dtype
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+# --------------------------------------------------------------------------
 # Cross-attention (whisper decoder): KV precomputed from encoder output.
 # --------------------------------------------------------------------------
 def cross_attention(p, cfg: ModelConfig, x, enc_kv: KVCache):

@@ -33,6 +33,18 @@ class Model:
     prefill: Callable[..., Any]         # (params, batch, cache_len) -> (logits, cache)
     decode_step: Callable[..., Any]     # (params, cache, token, pos) -> (logits, cache)
     init_cache: Callable[..., Any]      # (batch_size, seq) -> cache
+    # Paged (block-table) serving path — decoder-only full-attention
+    # families; None elsewhere (ssm/rwkv recurrent state and sliding-window
+    # ring buffers keep the monolithic layout).
+    #   init_paged_cache(num_blocks, block_size) -> pool [L, NB, BS, Hkv, Dh]
+    #   decode_step_paged(params, pool, token, block_tables, pos)
+    #       -> (logits, pool)
+    init_paged_cache: Optional[Callable[..., Any]] = None
+    decode_step_paged: Optional[Callable[..., Any]] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.decode_step_paged is not None
 
 
 def _relay_kv(cache_pref: KVCache, cfg: ModelConfig, cache_len: int) -> KVCache:
@@ -88,7 +100,21 @@ def _decoder_model(cfg: ModelConfig) -> Model:
     def init_cache(batch_size: int, seq: int):
         return transformer.init_cache(cfg, batch_size, seq)
 
-    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+    if cfg.sliding_window:
+        # ring-buffer cache layout is incompatible with block tables;
+        # such configs serve through the monolithic fallback
+        return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+    def decode_step_paged(params, pool, token, block_tables, pos, **extras):
+        return transformer.forward_decode_paged(params, cfg, token, pool,
+                                                block_tables, pos, **extras)
+
+    def init_paged_cache(num_blocks: int, block_size: int):
+        return transformer.init_paged_cache(cfg, num_blocks, block_size)
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache,
+                 init_paged_cache=init_paged_cache,
+                 decode_step_paged=decode_step_paged)
 
 
 # --------------------------------------------------------------------------

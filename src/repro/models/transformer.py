@@ -157,6 +157,51 @@ def forward_decode(p, cfg: ModelConfig, token, cache: KVCache, pos,
     return unembed(p, cfg, x)[:, 0], new_cache
 
 
+def block_decode_paged(pl, cfg: ModelConfig, x, pool_l: KVCache,
+                       block_tables, pos, mrope_positions=None):
+    h = rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+    a, new_pool = attn.attention_decode_paged(pl["attn"], cfg, h, pool_l,
+                                              block_tables, pos,
+                                              mrope_positions=mrope_positions)
+    x = x + a
+    m, aux = _mlp_part(pl, cfg, x)
+    return x + m, new_pool, aux
+
+
+def forward_decode_paged(p, cfg: ModelConfig, token, pool: KVCache,
+                         block_tables, pos, *, mrope_positions=None):
+    """token [B] int32; pool leaves [L, NB, BS, Hkv, Dh] (global block
+    pool); block_tables [B, NBT] int32; pos [B] int32.
+    Returns (logits [B, V], new_pool)."""
+    x = embed_tokens(p, cfg, token[:, None])
+    if cfg.use_mrope and mrope_positions is None:
+        B = token.shape[0]
+        mrope_positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+
+    def body(x, layer):
+        pl, pool_l = layer
+        x, new_pool_l, _ = block_decode_paged(pl, cfg, x, pool_l,
+                                              block_tables, pos,
+                                              mrope_positions)
+        return x, new_pool_l
+
+    x, new_pool = jax.lax.scan(body, x, (p["layers"], pool))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    return unembed(p, cfg, x)[:, 0], new_pool
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None) -> KVCache:
+    """Global paged KV pool: leaves [L, NB, BS, Hkv, Dh] (DESIGN.md
+    §Block pool). Blocks are owned by requests via the engine's
+    BlockAllocator; the model never sees ownership, only block tables."""
+    assert not cfg.sliding_window, "paged cache is full-attention only"
+    dt = dtype or cfg.dtype
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
 def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=None) -> KVCache:
     S = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
     dt = dtype or cfg.dtype

@@ -1,0 +1,90 @@
+"""Block-granular KV-cache allocator (the vLLM PagedAttention role).
+
+The engine owns one global KV *pool* per model — a pytree whose leaves are
+``[L, num_blocks, block_size, Hkv, Dh]`` — and every running request owns an
+ordered list of physical block ids (its *block table*). Logical token
+position ``t`` of a request lives at ``(table[t // BS], t % BS)``.
+
+``BlockAllocator`` hands out physical blocks and tracks two quantities:
+
+  * **allocated** blocks — physically backing written KV (true memory
+    pressure; what load/bid accounting reports), and
+  * **reserved** blocks — the worst-case footprint of every admitted
+    request, ``ceil(min(prompt + max_new_tokens, max_seq) / BS)``.
+
+Admission gates on *reservations*, growth allocates *incrementally*; since
+``allocated <= reserved <= num_blocks`` is an invariant, a mid-decode
+allocation can never fail and ``free_tokens()`` can never go negative —
+this replaces the slot engine's inconsistent token-budget check (see
+DESIGN.md §Allocator invariants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``tokens`` KV rows (>=0)."""
+    return max(0, -(-int(tokens) // block_size))
+
+
+@dataclasses.dataclass
+class BlockAllocator:
+    num_blocks: int
+    block_size: int
+
+    def __post_init__(self) -> None:
+        assert self.num_blocks > 0 and self.block_size > 0
+        # LIFO free list: recently-freed (still-warm) blocks are reused first
+        self._free: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self._reserved = 0
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return self._reserved
+
+    def allocated_tokens(self) -> int:
+        return self.allocated_blocks * self.block_size
+
+    def free_tokens(self) -> int:
+        return self.free_blocks * self.block_size
+
+    # ---- admission reservation ----------------------------------------------
+    def can_reserve(self, n_blocks: int) -> bool:
+        return self._reserved + n_blocks <= self.num_blocks
+
+    def reserve(self, n_blocks: int) -> None:
+        assert self.can_reserve(n_blocks), \
+            f"reserve({n_blocks}) over capacity ({self._reserved}/{self.num_blocks})"
+        self._reserved += n_blocks
+
+    def unreserve(self, n_blocks: int) -> None:
+        self._reserved -= n_blocks
+        assert self._reserved >= 0
+
+    # ---- physical blocks -----------------------------------------------------
+    def allocate(self, n_blocks: int) -> List[int]:
+        """Pop ``n_blocks`` physical block ids. Caller must hold a covering
+        reservation — under the invariant this cannot fail."""
+        assert n_blocks <= len(self._free), \
+            f"allocator invariant broken: want {n_blocks}, free {len(self._free)}"
+        out = [self._free.pop() for _ in range(n_blocks)]
+        assert self.allocated_blocks <= self._reserved, \
+            "allocated blocks exceeded reservations"
+        return out
+
+    def free(self, block_ids: List[int]) -> None:
+        for b in block_ids:
+            assert 0 <= b < self.num_blocks and b not in self._free, \
+                f"double free / bad block id {b}"
+            self._free.append(b)

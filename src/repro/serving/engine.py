@@ -1,13 +1,26 @@
-"""Single-instance JAX inference engine: slot-granular paged KV cache +
-continuous batching (the vLLM-role component of DESIGN §3).
+"""Single-instance JAX inference engine: block-granular paged KV cache +
+continuous batching (the vLLM-role component of DESIGN §3; layouts and
+invariants in DESIGN.md).
 
-The cache is a preallocated pytree with leaves [L, slots, S_max, ...]; a
-request owns one slot (slot-granular paging — block tables degenerate to
-one block per request; token-budget admission matches vLLM semantics).
+Two cache layouts behind one scheduling surface:
+
+  * **paged** (default for full-attention decoder families): a global block
+    pool with leaves ``[L, num_blocks, block_size, Hkv, Dh]`` plus a
+    per-request block table, managed by ``BlockAllocator``. Admission gates
+    on worst-case *block reservations* (``ceil(min(prompt+max_new,
+    max_seq)/BS)``), physical blocks are allocated incrementally as the
+    sequence grows, and a 16-token request pins 16 tokens of cache — not a
+    ``max_seq`` slab. ``free_tokens()`` can never go negative.
+  * **monolithic** fallback (ssm/rwkv recurrent state, sliding-window ring
+    buffers): preallocated ``[L, slots, S_max, ...]`` slab, one slot per
+    request, with the same reservation-based admission accounting.
+
 Every ``step()`` is one continuous-batching iteration: admit waiting
-requests into free slots (prefill), then advance all running slots by one
-token with a single batched ``decode_step``. Migration support exports /
-imports a slot's KV slice plus request metadata.
+requests (prefill), then advance all running requests by one token with a
+single batched decode. Migration exports a request's KV trimmed to its
+actual length (paged: a gather of its blocks) — the wire format is the
+same contiguous ``[L, 1, length, ...]`` piece for both layouts, so mixed
+clusters interoperate (DESIGN.md §Migration wire format).
 """
 from __future__ import annotations
 
@@ -19,30 +32,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.migration import kv_bytes
+from repro.core.migration import (gather_kv_blocks, kv_bytes,
+                                  scatter_kv_blocks)
 from repro.models.model import Model
+from repro.serving.block_pool import BlockAllocator, blocks_for
 from repro.serving.request import ServeRequest, State
+
+DEFAULT_BLOCK_SIZE = 16
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class Engine:
     def __init__(self, engine_id: int, model: Model, params, *,
                  max_slots: int = 8, max_seq: int = 512,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 paged: Optional[bool] = None,
+                 block_size: int = DEFAULT_BLOCK_SIZE):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
-            "slot engine supports decoder-only families"
+            "engine supports decoder-only families"
         self.id = engine_id
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.token_budget = token_budget or max_slots * max_seq
-        self.cache = model.init_cache(max_slots, max_seq)
-        self.slot_len = np.zeros(max_slots, np.int32)       # tokens in slot
+        self.paged = model.supports_paged if paged is None else paged
+        if self.paged:
+            assert model.supports_paged, \
+                f"{model.cfg.name} ({model.cfg.family}) has no paged path"
+            self.block_size = block_size
+            self.num_blocks = self.token_budget // block_size
+            assert self.num_blocks > 0, \
+                f"token_budget {self.token_budget} < one block ({block_size})"
+            # capacity is block-granular: tokens that don't fill a block
+            # can't back any request (mirrors sim.Instance)
+            self.token_budget = self.num_blocks * block_size
+            self.allocator = BlockAllocator(self.num_blocks, block_size)
+            self.cache = model.init_paged_cache(self.num_blocks, block_size)
+            self.block_tables: List[List[int]] = [[] for _ in range(max_slots)]
+            self._bytes_per_block = kv_bytes(self.cache) / self.num_blocks
+            self._decode_paged = jax.jit(model.decode_step_paged)
+        else:
+            self.block_size = 0
+            self.cache = model.init_cache(max_slots, max_seq)
+            self._bytes_per_slot = kv_bytes(self.cache) / max_slots
+            self._decode = jax.jit(model.decode_step)
+        self.slot_len = np.zeros(max_slots, np.int32)       # tokens in cache
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
+        self.slot_reserved = np.zeros(max_slots, np.int64)  # worst-case tokens
         self.waiting: Deque[ServeRequest] = deque()
         self.steps = 0
         self.tokens_out = 0
-        self._decode = jax.jit(model.decode_step)
+        self.peak_kv_bytes = 0.0
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("cache_len",))
 
@@ -51,14 +98,40 @@ class Engine:
         return [r for r in self.slots if r is not None]
 
     def used_tokens(self) -> int:
-        return int(self.slot_len.sum()
-                   + sum(len(r.prompt) for r in self.waiting))
+        """Tokens of cache memory actually pinned by running requests.
+        Paged: allocated blocks × block size; monolithic: live cache rows.
+        (Waiting prompts hold no cache — they are reported by
+        ``queued_tokens``/``load`` instead, so admission and the free
+        budget agree on one definition.)"""
+        if self.paged:
+            return self.allocator.allocated_tokens()
+        return int(self.slot_len.sum())
+
+    def reserved_tokens(self) -> int:
+        """Worst-case committed footprint of all admitted requests —
+        what admission gates on (never exceeds the budget)."""
+        if self.paged:
+            return self.allocator.reserved_blocks * self.block_size
+        return int(self.slot_reserved.sum())
+
+    def queued_tokens(self) -> int:
+        return int(sum(len(r.prompt) for r in self.waiting))
 
     def free_tokens(self) -> int:
+        """Unpinned cache budget; the admission invariant keeps this >= 0."""
         return self.token_budget - self.used_tokens()
 
     def load(self) -> float:
-        return float(self.used_tokens())
+        """Scheduling pressure: pinned cache + queued prompt tokens."""
+        return float(self.used_tokens() + self.queued_tokens())
+
+    def kv_bytes_pinned(self) -> float:
+        """Cache bytes pinned right now (paged: allocated blocks;
+        monolithic: occupied max_seq slabs)."""
+        if self.paged:
+            return self.allocator.allocated_blocks * self._bytes_per_block
+        return sum(1 for r in self.slots if r is not None) \
+            * self._bytes_per_slot
 
     def has_idle_slot(self) -> bool:
         return any(r is None for r in self.slots)
@@ -77,25 +150,77 @@ class Engine:
                 return i
         return None
 
+    def _worst_tokens(self, req: ServeRequest) -> int:
+        """Upper bound on this request's final cache length: generation
+        stops at max_new_tokens or when the cache hits max_seq."""
+        return min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+
+    def can_accept(self, req: ServeRequest) -> bool:
+        """Slot + worst-case budget check (used for admission AND inbound
+        migration, so both paths — and the server's receiver picking —
+        share one accounting definition)."""
+        if self._free_slot() is None or len(req.prompt) + 1 > self.max_seq:
+            return False
+        if req.state is State.RUNNING:
+            # inbound migration: the remaining generation must fit this
+            # engine's max_seq — rejecting here (and not only in
+            # import_request) keeps _pick_receiver from choosing a
+            # receiver that would refuse the import after the KV gather
+            remaining = max(req.max_new_tokens - len(req.generated), 0)
+            if req.length + remaining > self.max_seq:
+                return False
+        if self.paged:
+            return self.allocator.can_reserve(
+                blocks_for(self._worst_tokens(req), self.block_size))
+        return self.reserved_tokens() + self._worst_tokens(req) \
+            <= self.token_budget
+
     def _admit(self) -> List[ServeRequest]:
+        """Admit FCFS while capacity lasts. Prompts that can NEVER fit this
+        engine are failed (rejected=True) instead of wedging the queue —
+        matching sim.Instance's documented semantics."""
         admitted = []
         while self.waiting:
             req = self.waiting[0]
+            if len(req.prompt) + 1 > self.max_seq:
+                self.waiting.popleft()
+                req.rejected = True
+                req.state = State.FINISHED
+                req.first_token_step = self.steps
+                req.finish_step = self.steps
+                admitted.append(req)
+                continue
+            if not self.can_accept(req):
+                break
             slot = self._free_slot()
-            if slot is None or len(req.prompt) + 1 > self.max_seq:
-                break
-            if self.slot_len.sum() + req.length + 1 > self.token_budget:
-                break
             self.waiting.popleft()
             self._prefill_into_slot(req, slot)
             admitted.append(req)
         return admitted
 
+    def _reserve(self, req: ServeRequest, slot: int) -> None:
+        worst = self._worst_tokens(req)
+        if self.paged:
+            self.allocator.reserve(blocks_for(worst, self.block_size))
+        self.slot_reserved[slot] = worst
+
     def _prefill_into_slot(self, req: ServeRequest, slot: int) -> None:
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, piece = self._prefill(self.params, {"tokens": tokens},
-                                      cache_len=self.max_seq)
-        self.cache = _write_slot(self.cache, piece, slot)
+        self._reserve(req, slot)
+        if self.paged:
+            # prompt-length cache piece [L, 1, T, ...] scattered into
+            # freshly allocated blocks — no max_seq padding anywhere
+            logits, piece = self._prefill(self.params, {"tokens": tokens},
+                                          cache_len=None)
+            ids = self.allocator.allocate(
+                blocks_for(len(req.prompt), self.block_size))
+            self.block_tables[slot] = ids
+            self.cache = _write_prompt_blocks(self.cache, piece, ids,
+                                              self.block_size)
+        else:
+            logits, piece = self._prefill(self.params, {"tokens": tokens},
+                                          cache_len=self.max_seq)
+            self.cache = _write_slot(self.cache, piece, slot)
         vec = logits if logits.ndim == 1 else logits[0]
         tok = int(jnp.argmax(vec))
         req.generated.append(tok)
@@ -112,23 +237,27 @@ class Engine:
     def step(self) -> List[ServeRequest]:
         """Returns requests that finished this step."""
         self.steps += 1
-        self._admit()
-        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
         finished: List[ServeRequest] = []
+        for r in self._admit():
+            if r.rejected:                      # prompt can never fit
+                finished.append(r)
+            elif r.done:        # max_new_tokens == 1: prefill already
+                r.state = State.FINISHED        # produced the only token
+                r.finish_step = self.steps
+                finished.append(r)
+                self._release(r.slot)
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
         if live:
             last_tok = jnp.asarray(
                 [r.generated[-1] if r.generated else r.prompt[-1]
                  for _, r in live], jnp.int32)
             pos = jnp.asarray([self.slot_len[i] - 1 for i, _ in live],
                               jnp.int32)
-            sub_cache = jax.tree.map(
-                lambda a: a[:, np.asarray([i for i, _ in live])], self.cache)
-            logits, new_sub = self._decode(self.params, sub_cache, last_tok,
-                                           pos)
+            if self.paged:
+                logits = self._decode_paged_live(live, last_tok, pos)
+            else:
+                logits = self._decode_mono_live(live, last_tok, pos)
             for j, (i, r) in enumerate(live):
-                self.cache = _write_slot(
-                    self.cache, jax.tree.map(lambda a: a[:, j:j + 1], new_sub),
-                    i)
                 tok = int(jnp.argmax(logits[j]))
                 r.generated.append(tok)
                 r.tokens_by_engine[self.id] = \
@@ -140,31 +269,106 @@ class Engine:
                     r.finish_step = self.steps
                     finished.append(r)
                     self._release(i)
+        self.peak_kv_bytes = max(self.peak_kv_bytes, self.kv_bytes_pinned())
+        assert self.free_tokens() >= 0, "admission let the budget go negative"
         return finished
 
+    def _decode_mono_live(self, live, last_tok, pos):
+        sub_cache = jax.tree.map(
+            lambda a: a[:, np.asarray([i for i, _ in live])], self.cache)
+        logits, new_sub = self._decode(self.params, sub_cache, last_tok, pos)
+        for j, (i, _) in enumerate(live):
+            self.cache = _write_slot(
+                self.cache, jax.tree.map(lambda a: a[:, j:j + 1], new_sub), i)
+        return logits
+
+    def _decode_paged_live(self, live, last_tok, pos):
+        # grow block tables so every request's write position is backed
+        # (covered by its admission reservation — cannot fail)
+        for i, _ in live:
+            need = blocks_for(int(self.slot_len[i]), self.block_size)
+            table = self.block_tables[i]
+            if need > len(table):
+                table.extend(self.allocator.allocate(need - len(table)))
+        # bucketed table width: length-adaptive (max live blocks rounded to
+        # a power of two) so short batches don't pay max_seq-wide gathers
+        # but jit recompiles stay O(log) in sequence length
+        nbt = max(len(self.block_tables[i]) for i, _ in live)
+        nbt = min(_next_pow2(nbt), blocks_for(self.max_seq, self.block_size))
+        bt = np.zeros((len(live), nbt), np.int32)
+        for j, (i, _) in enumerate(live):
+            ids = self.block_tables[i]
+            bt[j, :len(ids)] = ids
+        logits, self.cache = self._decode_paged(
+            self.params, self.cache, last_tok, jnp.asarray(bt), pos)
+        return logits
+
     def _release(self, slot: int) -> None:
+        if self.paged:
+            self.allocator.free(self.block_tables[slot])
+            self.block_tables[slot] = []
+            self.allocator.unreserve(
+                blocks_for(int(self.slot_reserved[slot]), self.block_size))
+        self.slot_reserved[slot] = 0
         self.slots[slot] = None
         self.slot_len[slot] = 0
 
     # ---- migration ----------------------------------------------------------
     def export_slot(self, slot: int):
-        """(request, kv piece, kv bytes) for live migration."""
+        """(request, kv piece, kv bytes) for live migration.
+
+        The piece is the wire format of DESIGN.md §Migration: contiguous
+        ``[L, 1, written, ...]`` — a gather over the request's blocks on
+        the paged path, a trimmed slab slice on the monolithic one — so
+        bytes moved scale with the request's actual length, and paged and
+        monolithic engines interoperate. ``written = slot_len - 1``: the
+        latest sampled token's KV is produced by the *next* decode step
+        (on whichever engine runs it), so both layouts export exactly the
+        rows that exist — the paged block count always covers them.
+        """
         req = self.slots[slot]
         assert req is not None
-        piece = jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+        length = int(self.slot_len[slot]) - 1
+        if self.paged:
+            gathered = gather_kv_blocks(self.cache, self.block_tables[slot])
+            # [L, nb, BS, ...] -> [L, 1, nb*BS, ...] -> trim to length
+            piece = jax.tree.map(
+                lambda a: a.reshape(a.shape[0], 1, -1, *a.shape[3:])[:, :, :length],
+                gathered)
+        else:
+            piece = jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+            if self.model.cfg.family != "ssm" \
+                    and not self.model.cfg.sliding_window:
+                piece = jax.tree.map(lambda a: a[:, :, :length], piece)
         return req, piece, kv_bytes(piece)
 
     def evict_slot(self, slot: int) -> None:
         self._release(slot)
 
     def import_request(self, req: ServeRequest, piece) -> bool:
-        slot = self._free_slot()
-        if slot is None:
+        """Adopt a migrated (still-decoding) request plus its KV piece.
+        Rejects (via ``can_accept``) when no slot is free, the remaining
+        generation cannot fit ``max_seq``, or the worst-case footprint
+        exceeds the free budget."""
+        if not self.can_accept(req):
             return False
-        self.cache = _write_slot(self.cache, piece, slot)
+        slot = self._free_slot()
+        self._reserve(req, slot)
+        if self.paged:
+            length = req.length
+            nb = blocks_for(length, self.block_size)
+            ids = self.allocator.allocate(nb)
+            self.block_tables[slot] = ids
+            self.cache = _write_prompt_blocks(self.cache, piece, ids,
+                                              self.block_size)
+        else:
+            self.cache = _write_slot(self.cache, piece, slot)
         req.engine_id = self.id
         req.slot = slot
         req.state = State.RUNNING
+        # load-balance accounting (Fig. 16): the adopting engine must
+        # appear in the per-engine token ledger even before its first token
+        req.tokens_by_engine.setdefault(self.id, 0)
         self.slots[slot] = req
         self.slot_len[slot] = req.length
         return True
@@ -173,8 +377,8 @@ class Engine:
 def _write_slot(cache, piece, slot: int):
     """Write a [L, 1, ...] piece into batch index ``slot`` of the cache.
     Leaves with a batch axis at position 1 are updated; piece S dim may be
-    shorter than the cache's (prefill pieces are sized to max_seq already
-    by Model.prefill)."""
+    shorter than the cache's (trimmed migration pieces, prompt-length
+    prefill pieces) — the remainder is zero-filled."""
     def put(a, p):
         p = p.astype(a.dtype)
         if p.shape[2:] != a.shape[2:]:
@@ -183,3 +387,17 @@ def _write_slot(cache, piece, slot: int):
             p = jnp.pad(p, pad)
         return jax.lax.dynamic_update_slice_in_dim(a, p, slot, axis=1)
     return jax.tree.map(put, cache, piece)
+
+
+def _write_prompt_blocks(pool, piece, block_ids, block_size: int):
+    """Scatter a contiguous KV piece (leaves [L, 1, T, ...]) into physical
+    blocks ``block_ids`` of a paged pool (leaves [L, NB, BS, ...])."""
+    nb = len(block_ids)
+
+    def pack(p):
+        T = p.shape[2]
+        pad = [(0, 0)] * p.ndim
+        pad[2] = (0, nb * block_size - T)
+        return jnp.pad(p, pad)[:, 0].reshape(
+            p.shape[0], nb, block_size, *p.shape[3:])
+    return scatter_kv_blocks(pool, jax.tree.map(pack, piece), block_ids)

@@ -28,6 +28,7 @@ class ServeRequest:
     engine_id: Optional[int] = None
     slot: Optional[int] = None
     eos_token: Optional[int] = None
+    rejected: bool = False            # prompt can never fit the engine
     # per-engine token counts (load-balance accounting, Fig. 16)
     tokens_by_engine: Dict[int, int] = dataclasses.field(default_factory=dict)
 

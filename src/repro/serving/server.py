@@ -42,14 +42,16 @@ class ServerConfig:
 class MILSServer:
     def __init__(self, model: Model, params, plan: PipelinePlan,
                  qoe: Optional[QoEModel], cfg: ServerConfig, *,
-                 max_slots: int = 4, max_seq: int = 256):
+                 max_slots: int = 4, max_seq: int = 256,
+                 paged: Optional[bool] = None, block_size: int = 16):
         self.model = model
         self.cfg = cfg
         self.plan = plan
         self.rng = np.random.default_rng(cfg.seed)
         E = plan.num_instances
         self.engines = [Engine(i, model, params, max_slots=max_slots,
-                               max_seq=max_seq) for i in range(E)]
+                               max_seq=max_seq, paged=paged,
+                               block_size=block_size) for i in range(E)]
         # stage bookkeeping
         self.stage_bounds: List[Tuple[float, float]] = [
             (s.lo, s.hi) for s in plan.stages]
@@ -80,7 +82,9 @@ class MILSServer:
             eng = self.engines[self._rr % len(self.engines)]
             self._rr += 1
         elif self.cfg.policy == "least-loaded":
-            eng = max(self.engines, key=lambda e: e.free_tokens())
+            # load() = pinned cache + queued prompts; free_tokens() alone
+            # is blind to a queue that hasn't been admitted yet
+            eng = min(self.engines, key=lambda e: e.load())
         else:
             si = self._stage_for(len(req.prompt))
             cands = [self.engines[i] for i in self.stage_engines[si]]
@@ -115,10 +119,12 @@ class MILSServer:
 
     # ---- CascadeInfer mechanisms -------------------------------------------------
     def _pick_receiver(self, cand_ids: Sequence[int],
-                       need_tokens: int) -> Optional[Engine]:
+                       req: ServeRequest) -> Optional[Engine]:
+        """Receivers must pass the engine's own admission check (block/slot
+        reservation headroom) so bid-ask never selects an engine that would
+        reject the import."""
         cands = [self.engines[i] for i in cand_ids
-                 if self.engines[i].has_idle_slot()
-                 and self.engines[i].free_tokens() >= need_tokens]
+                 if self.engines[i].can_accept(req)]
         if not cands:
             return None
         bids = [Bid(e.id, e.load(), e.used_tokens() / 1e4,
@@ -148,7 +154,7 @@ class MILSServer:
                 if moved >= self.cfg.max_migrations_per_step:
                     return
                 nxt = min(si + 1, len(self.stage_bounds) - 1)
-                dst = self._pick_receiver(self.stage_engines[nxt], req.length)
+                dst = self._pick_receiver(self.stage_engines[nxt], req)
                 if dst is None:
                     continue       # §5 flow control: stay on source
                 if self._migrate(eng, slot, dst):
@@ -170,8 +176,7 @@ class MILSServer:
                 if not occupied:
                     continue
                 slot, req = max(occupied, key=lambda sr: sr[1].length)
-                dst = self._pick_receiver([j for j in ids if j != i],
-                                          req.length)
+                dst = self._pick_receiver([j for j in ids if j != i], req)
                 if dst is not None:
                     self._migrate(eng, slot, dst)
 
@@ -196,15 +201,21 @@ class MILSServer:
         fin = self.finished
         if not fin:
             return {"finished": 0}
-        ttft = np.asarray([r.first_token_step - r.arrival_step for r in fin],
-                          np.float64)
-        e2e = np.asarray([r.finish_step - r.arrival_step for r in fin],
-                         np.float64)
-        return {
+        # rejected requests never produced a token — folding their
+        # fabricated timestamps into the means would fake instant service
+        served = [r for r in fin if not r.rejected]
+        out = {
             "finished": len(fin),
+            "rejected": sum(1 for r in fin if r.rejected),
             "steps": self.steps,
             "migrations": self.migrations,
-            "ttft_steps_mean": float(ttft.mean()),
-            "e2e_steps_mean": float(e2e.mean()),
             "tokens_out": int(sum(e.tokens_out for e in self.engines)),
         }
+        if served:
+            ttft = np.asarray([r.first_token_step - r.arrival_step
+                               for r in served], np.float64)
+            e2e = np.asarray([r.finish_step - r.arrival_step
+                              for r in served], np.float64)
+            out["ttft_steps_mean"] = float(ttft.mean())
+            out["e2e_steps_mean"] = float(e2e.mean())
+        return out

@@ -30,6 +30,7 @@ from repro.sim.workload import Request
 class ClusterConfig:
     num_instances: int = 16
     capacity_tokens: float = 400_000.0
+    kv_block_size: int = 16            # paged-cache allocation granularity
     bandwidth: float = 25e9            # inter-instance KV path
     # hand-off disruption: final stop-and-copy stall + scheduler/alloc
     # coordination on both ends (Llumnix reports tens of ms per migration);
@@ -66,7 +67,8 @@ class Cluster:
         self.events = EventQueue()
         self.rng = np.random.default_rng(cfg.seed)
         self.instances = [
-            Instance(i, profile, cfg.capacity_tokens, self.events)
+            Instance(i, profile, cfg.capacity_tokens, self.events,
+                     block_size=cfg.kv_block_size)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
         self.policy = policy
@@ -180,12 +182,15 @@ class TransferFabric:
                         sr: SimRequest, t: float) -> bool:
         if sr.migrating or sr.done:
             return False
-        if not src.migrations.can_start(dst.free_tokens() >= sr.length):
+        # flow control + wire volume are block-granular: the receiver must
+        # have whole free blocks, and we move whole blocks (gather→scatter)
+        need = dst.block_tokens(sr.length)
+        if not src.migrations.can_start(dst.free_tokens() >= need):
             return False
         sr.migrating = True
-        dst.inbound_reserved += sr.length
+        dst.inbound_reserved += need
         rate = decode_rate([r.length for r in src.running], src.profile)
-        timing = plan_live_migration(sr.length, rate,
+        timing = plan_live_migration(need, rate,
                                      src.profile.kv_bytes_per_token or 2e5,
                                      self.cluster.cfg.bandwidth)
         src.migrations.start(sr.req.req_id, t + timing.total_s)
@@ -196,14 +201,14 @@ class TransferFabric:
             now = self.cluster.events.now
             src.migrations.finish(sr.req.req_id)
             if sr.done or sr not in src.running:
-                dst.inbound_reserved -= sr.length
+                dst.inbound_reserved -= need
                 sr.migrating = False
                 return        # completed mid-flight: drop the move
             src.running.remove(sr)
             src.kick(now)
 
             def adopt():     # stop-and-copy + scheduler hand-off pause
-                dst.inbound_reserved -= sr.length
+                dst.inbound_reserved -= need
                 sr.migrating = False
                 dst.adopt_running(sr, self.cluster.events.now)
 
@@ -349,14 +354,15 @@ class CascadePolicy(Policy):
             return True
         if not sender.can_transmit(mig.req_id):
             return False
-        if not src.migrations.can_start(dst.free_tokens() >= sr.length):
+        need = dst.block_tokens(sr.length)
+        if not src.migrations.can_start(dst.free_tokens() >= need):
             return False               # §5 flow control: stay on source
         sender.begin(mig.req_id)
         sr.migrating = True
-        dst.inbound_reserved += sr.length
+        dst.inbound_reserved += need
         rate = decode_rate([r.length for r in src.running], src.profile)
         kvb = self.kv_bytes_per_token or src.profile.kv_bytes_per_token or 2e5
-        timing = plan_live_migration(sr.length, rate, kvb,
+        timing = plan_live_migration(need, rate, kvb,
                                      self.cluster.cfg.bandwidth)
         src.migrations.start(mig.req_id, t + timing.total_s)
 
@@ -369,7 +375,7 @@ class CascadePolicy(Policy):
             self.receivers[dst.id].complete(mig.req_id)
             self._pending.pop(mig.req_id, None)
             if sr.done or sr not in src.running:
-                dst.inbound_reserved -= sr.length
+                dst.inbound_reserved -= need
                 sr.migrating = False
                 self._pump(dst.id, now)
                 return
@@ -377,7 +383,7 @@ class CascadePolicy(Policy):
             src.kick(now)
 
             def adopt():     # stop-and-copy + scheduler hand-off pause
-                dst.inbound_reserved -= sr.length
+                dst.inbound_reserved -= need
                 sr.migrating = False
                 dst.adopt_running(sr, self.cluster.events.now)
 

@@ -109,6 +109,21 @@ def prefill_time(input_len: int, prof: HardwareProfile) -> float:
     return prof.t_fixed + t_linear + t_quad
 
 
+def kv_block_bytes(prof: HardwareProfile, block_size: int) -> float:
+    """Bytes of one paged-cache block (all layers, K+V) — the allocation
+    unit the serving engine's BlockAllocator hands out; capacity planning
+    and migration volume accounting are multiples of this."""
+    return prof.kv_bytes_per_token * block_size
+
+
+def capacity_blocks(hbm_bytes_free: float, prof: HardwareProfile,
+                    block_size: int) -> int:
+    """How many KV blocks fit in the HBM left after weights — the paged
+    engine's ``num_blocks`` for a given chip."""
+    bb = kv_block_bytes(prof, block_size)
+    return int(hbm_bytes_free // max(bb, 1e-9))
+
+
 def decode_rate(lengths: Sequence[int], prof: HardwareProfile) -> float:
     """Tokens/s one request sees inside the current batch (for live-
     migration round planning)."""

@@ -18,10 +18,12 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.migration import MigrationManager
+from repro.serving.block_pool import blocks_for
 from repro.sim.costmodel import HardwareProfile, decode_iter_time, prefill_time
 from repro.sim.workload import Request
 
 BATCH_CAP = 1024   # vLLM official default (paper §6.1)
+KV_BLOCK_SIZE = 16  # paged-cache allocation unit (mirrors serving.Engine)
 
 
 @dataclasses.dataclass
@@ -64,10 +66,15 @@ class SimRequest:
 class Instance:
     def __init__(self, inst_id: int, profile: HardwareProfile,
                  capacity_tokens: float, events, *,
-                 batch_cap: int = BATCH_CAP):
+                 batch_cap: int = BATCH_CAP,
+                 block_size: int = KV_BLOCK_SIZE):
         self.id = inst_id
         self.profile = profile
-        self.capacity = capacity_tokens
+        self.block_size = block_size
+        # capacity is block-granular: what a paged allocator can actually
+        # hand out (tokens that don't fill a block can't back any request)
+        self.capacity_blocks = int(capacity_tokens // block_size)
+        self.capacity = float(self.capacity_blocks * block_size)
         self.events = events
         self.batch_cap = batch_cap
         self.waiting: Deque[SimRequest] = deque()
@@ -84,18 +91,35 @@ class Instance:
         self.throughput_est = 1000.0     # tokens/s EMA (bid payloads)
 
     # ---- load views -------------------------------------------------------
+    def kv_blocks(self) -> int:
+        """Physical cache blocks allocated to running requests + inbound
+        transfers: each request pins ceil(length/BS) blocks — the paged
+        allocator's true memory pressure (matches serving.Engine), which is
+        what bid-ask and refinement accounting see. Waiting requests hold
+        NO cache (vLLM semantics) — counting them against the budget
+        deadlocks admission under tight memory."""
+        bs = self.block_size
+        # inbound_reserved is a sum of already block-rounded per-transfer
+        # amounts (cluster reserves block_tokens(length) per migration), so
+        # dividing the total keeps per-transfer granularity
+        return (sum(blocks_for(r.length, bs) for r in self.running)
+                + blocks_for(self.inbound_reserved, bs))
+
     def kv_tokens(self) -> float:
-        """Tokens actually holding KV memory (running + inbound transfers).
-        Waiting requests hold NO cache (vLLM semantics) — counting them
-        against the budget deadlocks admission under tight memory."""
-        return (sum(r.length for r in self.running)
-                + self.inbound_reserved)
+        """Block-rounded tokens of cache memory held (allocation
+        granularity, not raw sequence lengths)."""
+        return float(self.kv_blocks() * self.block_size)
+
+    def block_tokens(self, tokens: float) -> float:
+        """Round a token count up to the allocator's block granularity."""
+        return float(blocks_for(tokens, self.block_size) * self.block_size)
 
     def mem_tokens(self) -> float:
         return self.kv_tokens()
 
     def free_tokens(self) -> float:
-        return self.capacity - self.kv_tokens()
+        return float((self.capacity_blocks - self.kv_blocks())
+                     * self.block_size)
 
     def load(self) -> float:
         """Token-level load (LoadTracker metric): KV pressure + queue."""
@@ -136,7 +160,7 @@ class Instance:
                 if self.on_request_done:
                     self.on_request_done(self, sr, t)
                 continue
-            if self.free_tokens() < self.waiting[0].length:
+            if self.free_tokens() < self.block_tokens(self.waiting[0].length):
                 break
             sr = self.waiting.popleft()
             self.running.append(sr)

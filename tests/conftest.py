@@ -7,6 +7,51 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: ``hypothesis`` drives the property tests but is
+# not part of the core runtime. When it is missing, install a stub module
+# whose ``@given`` marks the test skipped (instead of failing collection of
+# the whole module). Real hypothesis, when installed, is used untouched.
+# ---------------------------------------------------------------------------
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import types
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements.txt)")(fn)
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategy:
+        """Inert placeholder: composable like a strategy, never executed."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "lists", "tuples", "booleans",
+                  "sampled_from", "text", "composite", "just", "one_of",
+                  "dictionaries", "fixed_dictionaries"):
+        setattr(_st, _name, _Strategy())
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = lambda *_a, **_k: True
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 @pytest.fixture(scope="session")
 def rng():

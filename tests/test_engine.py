@@ -103,3 +103,24 @@ def test_engine_token_budget(setup, rng):
     eng.step()
     running = sum(1 for r in reqs if r.state == State.RUNNING)
     assert running <= 2    # 3 × (16+..) would exceed the 40-token budget
+    assert eng.free_tokens() >= 0
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_engine_free_budget_never_negative(setup, rng, paged):
+    """Admission and used_tokens() share one definition (worst-case
+    reservations), so the free budget cannot go negative mid-decode —
+    the old engine admitted on prompt length and then grew past budget."""
+    cfg, model, params = setup
+    eng = Engine(0, model, params, max_slots=4, max_seq=64,
+                 token_budget=64, paged=paged)
+    reqs = [_req(rng, cfg, i, plen=8, new=24) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.step()
+        assert eng.free_tokens() >= 0
+        assert eng.used_tokens() <= eng.reserved_tokens() <= eng.token_budget
+        if all(r.state == State.FINISHED for r in reqs):
+            break
+    assert all(r.state == State.FINISHED for r in reqs)
