@@ -1,8 +1,12 @@
 """Serve a small model with batched requests across a CascadeInfer
 multi-engine cluster (end-to-end driver, deliverable b).
 
-Real JAX compute: paged-slot KV caches, continuous batching, length
-routing, growth-triggered live migration, adaptive boundaries.
+Real JAX compute: paged-slot KV caches, continuous batching, and the
+shared control plane (`repro.control`) doing length routing, growth-
+triggered live migration with bid-ask negotiation, and adaptive
+boundaries — the identical policy code the simulator runs. Arrivals are
+open-loop (`submit_at`) and every generated token streams through a
+callback.
 
     PYTHONPATH=src python examples/serve_cluster.py [--requests 24]
 """
@@ -22,6 +26,10 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=24)
 ap.add_argument("--engines", type=int, default=4)
 ap.add_argument("--policy", default="cascade")
+ap.add_argument("--refinement", default="adaptive",
+                choices=["adaptive", "quantity", "memory", "none"])
+ap.add_argument("--balancing", default="full",
+                choices=["full", "inter-stage", "rr"])
 args = ap.parse_args()
 
 cfg = get_config("smollm-360m").reduced()
@@ -31,23 +39,35 @@ E = args.engines
 plan = PipelinePlan([Stage(0.0, 48.0, E - E // 2),
                      Stage(48.0, float("inf"), E // 2)], 0.0)
 qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+
+streamed = [0]
 srv = MILSServer(model, params, plan, qoe,
-                 ServerConfig(policy=args.policy, refine_every=16),
-                 max_slots=3, max_seq=128)
+                 ServerConfig(policy=args.policy,
+                              refinement=args.refinement,
+                              balancing=args.balancing, refine_every=16),
+                 max_slots=3, max_seq=128,
+                 on_token=lambda req, tok: streamed.__setitem__(
+                     0, streamed[0] + 1))
 
 rng = np.random.default_rng(1)
-reqs = [ServeRequest(i,
-                     rng.integers(0, cfg.vocab_size,
-                                  int(rng.integers(8, 40))).astype(np.int32),
-                     int(rng.integers(8, 70)))
-        for i in range(args.requests)]
-fin = srv.run(reqs, max_steps=60 * args.requests)
+for i in range(args.requests):
+    req = ServeRequest(i,
+                       rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(8, 40))
+                                    ).astype(np.int32),
+                       int(rng.integers(8, 70)))
+    srv.submit_at(req, step=2 * i)        # open-loop Poisson-ish arrivals
+fin = srv.run(max_steps=60 * args.requests)
 s = srv.summary()
 print(f"policy={args.policy} finished={s['finished']} "
       f"steps={s['steps']} migrations={s['migrations']} "
-      f"mean-TTFT={s['ttft_steps_mean']:.1f} steps "
-      f"mean-E2E={s['e2e_steps_mean']:.1f} steps")
+      f"streamed-tokens={streamed[0]} "
+      f"TTFT mean/p95={s['ttft_steps_mean']:.1f}/{s['ttft_steps_p95']:.1f} "
+      f"E2E mean/p99={s['e2e_steps_mean']:.1f}/{s['e2e_steps_p99']:.1f}")
+print("per-stage migrations:",
+      {k: v for k, v in s.items() if k.startswith("migrations_s")})
 print("final stage bounds:", [(round(a), "inf" if b == float("inf")
                                else round(b)) for a, b in srv.stage_bounds])
 per_engine = {e.id: e.tokens_out for e in srv.engines}
 print("tokens per engine:", per_engine)
+assert streamed[0] == s["tokens_out"], "streaming missed tokens"

@@ -1,0 +1,29 @@
+"""Backend-agnostic CascadeInfer control plane (paper §3–§5).
+
+One implementation of the paper's scheduling mechanisms — length routing,
+growth-triggered handover with bid-ask negotiation, intra-stage
+rebalancing, boundary refinement, §5 flow control — driven by pluggable
+backends through a tiny protocol:
+
+  * :class:`~repro.control.protocol.InstanceView` — what the core reads
+    from a serving instance (load, free/used/queued tokens, live requests,
+    admission check);
+  * :class:`~repro.control.protocol.ClusterOps` — what the core asks the
+    backend to do (dispatch an arrival, move KV, observe boundary edits);
+  * :class:`~repro.control.plane.ControlPlane` — the scheduling core.
+
+Drivers: ``repro.sim.cluster.CascadePolicy`` (discrete-event timing,
+simulated transfers) and ``repro.serving.server.MILSServer``
+(step-synchronous ticks, real KV migration between JAX engines).
+"""
+from repro.control.bidask import (Bid, MigRequest, ReceiverState,  # noqa: F401
+                                  SenderState, is_overloaded,
+                                  select_receiver)
+from repro.control.plane import (ControlConfig, ControlPlane,  # noqa: F401
+                                 StageState)
+from repro.control.protocol import (MIG_COMPLETED, MIG_FAILED,  # noqa: F401
+                                    MIG_STARTED, ClusterOps, InstanceView,
+                                    ReqView)
+from repro.control.refinement import (BoundaryRefiner,  # noqa: F401
+                                      memory_based_split,
+                                      quantity_based_split)

@@ -1,0 +1,363 @@
+"""The CascadeInfer scheduling core (paper §3–§5), backend-agnostic.
+
+One `ControlPlane` owns every *decision* the paper's control plane makes:
+
+  * length routing — arrivals go round-robin within the earliest covering
+    stage (§3.2; bid-ask governs migrations, not dispatch);
+  * growth-triggered inter-stage handover with sender/receiver bid-ask
+    negotiation, priority pull loop and starvation backpressure (§4.4);
+  * intra-stage rebalancing of overloaded instances (§4.4);
+  * boundary refinement — adaptive (§4.3) plus the quantity/memory
+    ablations of Fig. 15, with monotone-boundary clipping;
+  * §5 flow control — a migration starts only if the receiver can admit
+    the request *now*, the source is under its concurrency cap, and (for
+    step-synchronous drivers) the per-tick budget allows it; otherwise
+    the request stays on the source and is retried.
+
+The core holds no clock and performs no I/O: drivers feed it events
+(`submit`, `on_instance_iteration`, timer-driven `balance`/`refine`/
+`pump_all`, `migration_finished`) and it calls back through `ClusterOps`
+(`dispatch`, `start_migration`, `set_boundary`). The discrete-event
+simulator and the real multi-engine JAX server are two such drivers —
+they execute identical policy code, so sim-validated behavior carries to
+the prototype unchanged (ISSUE 2; cf. Helix's sim-first methodology).
+
+Every decision is appended to ``decisions`` — the parity tests diff these
+logs across drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.control.bidask import (Bid, MigRequest, ReceiverState, SenderState,
+                                  is_overloaded, select_receiver)
+from repro.control.protocol import (MIG_COMPLETED, MIG_FAILED, MIG_STARTED,
+                                    ClusterOps, InstanceView, ReqView)
+from repro.control.refinement import (BoundaryRefiner, memory_based_split,
+                                      quantity_based_split)
+from repro.core.partition import PipelinePlan
+
+POLICIES = ("cascade", "round-robin", "least-loaded")
+REFINEMENTS = ("adaptive", "quantity", "memory", "none")   # Fig. 15
+BALANCINGS = ("full", "inter-stage", "rr")                 # Fig. 16
+
+_RR_GLOBAL = -2      # round-robin-policy arrival counter
+_RR_HANDOVER = -1    # balancing="rr" handover counter
+
+
+@dataclasses.dataclass
+class ControlConfig:
+    policy: str = "cascade"
+    refinement: str = "adaptive"
+    balancing: str = "full"
+    # §5 concurrency control: per-source transfers are serialized by the
+    # §4.4 sender state machine (at most one outbound in flight); step-
+    # synchronous drivers additionally bound moves per tick (begin_tick()).
+    max_migrations_per_tick: int = 0     # 0 = uncapped (async drivers)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class StageState:
+    lo: float
+    hi: float
+    instance_ids: List[int]
+
+
+class ControlPlane:
+    def __init__(self, plan: PipelinePlan, qoe, cfg: ControlConfig,
+                 ops: ClusterOps, instances: Sequence[InstanceView]):
+        assert cfg.policy in POLICIES, cfg.policy
+        assert cfg.refinement in REFINEMENTS, cfg.refinement
+        assert cfg.balancing in BALANCINGS, cfg.balancing
+        self.cfg = cfg
+        self.ops = ops
+        self.plan = plan
+        self.qoe = qoe
+        self.rng = np.random.default_rng(cfg.seed)
+        self.instances: Dict[int, InstanceView] = {v.id: v for v in instances}
+        self._order = [v.id for v in instances]
+        # stage assignment: the plan's stages claim instances in order
+        self.stages: List[StageState] = []
+        self.stage_of_instance: Dict[int, int] = {}
+        nxt = 0
+        for si, st in enumerate(plan.stages):
+            ids = self._order[nxt:nxt + st.num_instances]
+            nxt += st.num_instances
+            self.stages.append(StageState(st.lo, st.hi, ids))
+            for i in ids:
+                self.stage_of_instance[i] = si
+        assert nxt == len(self._order), \
+            f"plan uses {nxt} instances, backend has {len(self._order)}"
+        self.refiners = [BoundaryRefiner(qoe, boundary=s.hi)
+                         for s in self.stages[:-1]]
+        # negotiation state (§4.4)
+        self.senders = {i: SenderState(i) for i in self._order}
+        self.receivers = {i: ReceiverState(i) for i in self._order}
+        self._pending: Dict[int, Tuple[Any, int]] = {}   # req_id -> (ref, src)
+        self._dst_of: Dict[int, int] = {}                # in-flight transfers
+        self._rr: Dict[int, int] = {}
+        self._tick_started = 0
+        # telemetry
+        self.migrations = 0
+        self.migrations_by_stage: Dict[Tuple[int, int], int] = {}
+        self.decisions: List[Tuple] = []
+
+    # ---- observability ------------------------------------------------------
+    def bounds(self) -> List[Tuple[float, float]]:
+        return [(s.lo, s.hi) for s in self.stages]
+
+    def pending_ids(self) -> set:
+        return set(self._pending)
+
+    # ---- routing (§3.2) -----------------------------------------------------
+    def stage_for(self, length: float) -> int:
+        for i, s in enumerate(self.stages):
+            if length < s.hi:
+                return i
+        return len(self.stages) - 1
+
+    def route(self, req_id: int, length: float) -> int:
+        """Pure placement decision for one arrival."""
+        if self.cfg.policy == "round-robin":
+            c = self._rr.get(_RR_GLOBAL, 0)
+            self._rr[_RR_GLOBAL] = c + 1
+            iid = self._order[c % len(self._order)]
+        elif self.cfg.policy == "least-loaded":
+            iid = min(self._order, key=lambda i: self.instances[i].load())
+        else:
+            si = self.stage_for(length)
+            ids = self.stages[si].instance_ids
+            c = self._rr.get(si, 0)
+            self._rr[si] = c + 1
+            iid = ids[c % len(ids)]
+        self.decisions.append(("route", req_id, iid))
+        return iid
+
+    def submit(self, ref: Any, req_id: int, length: float) -> int:
+        """Route an arrival and hand it to the backend."""
+        iid = self.route(req_id, length)
+        self.ops.dispatch(ref, iid)
+        return iid
+
+    # ---- growth-triggered handover (§3.2) -----------------------------------
+    def on_instance_iteration(self, inst_id: int) -> None:
+        """Offer every request that outgrew its stage to the next stage."""
+        if self.cfg.policy != "cascade":
+            return
+        si = self.stage_of_instance[inst_id]
+        hi = self.stages[si].hi
+        if hi == float("inf"):
+            return
+        for rv in self.instances[inst_id].requests():
+            if rv.length >= hi and rv.req_id not in self._pending:
+                nxt = min(si + 1, len(self.stages) - 1)
+                self._offer(inst_id, rv, self.stages[nxt].instance_ids)
+
+    def handover_all(self) -> None:
+        for iid in self._order:
+            self.on_instance_iteration(iid)
+
+    def begin_tick(self) -> None:
+        """Step-synchronous drivers: reset the per-tick migration budget."""
+        self._tick_started = 0
+
+    def _tick_ok(self) -> bool:
+        return (self.cfg.max_migrations_per_tick <= 0
+                or self._tick_started < self.cfg.max_migrations_per_tick)
+
+    # ---- bid-ask negotiation (§4.4) -----------------------------------------
+    def _offer(self, src_id: int, rv: ReqView,
+               candidate_ids: Sequence[int]) -> None:
+        sender = self.senders[src_id]
+        mig = MigRequest(rv.req_id, int(rv.length), src_id)
+        sender.offer(mig)
+        self._pending[rv.req_id] = (rv.ref, src_id)
+        cands = [self.instances[i] for i in candidate_ids
+                 if i != src_id and self.instances[i].can_accept(rv.ref)]
+        if self.cfg.balancing == "rr":
+            # Fig.-16 ablation: hand over round-robin, no negotiation
+            c = self._rr.get(_RR_HANDOVER, 0)
+            self._rr[_RR_HANDOVER] = c + 1
+            rid = cands[c % len(cands)].id if cands else None
+        else:
+            bids = [Bid(c.id, c.load(),
+                        self.receivers[c.id].earliest_start(),
+                        int(self.rng.integers(0, 1 << 30)))
+                    for c in cands]
+            rid = select_receiver(bids)
+        if rid is None:
+            sender.drop(mig.req_id)
+            self._pending.pop(rv.req_id, None)
+            return
+        self.receivers[rid].win(mig)
+        self._pump(rid)
+
+    # ---- receiver pull loop -------------------------------------------------
+    def _sender_busy(self, src_id: int) -> bool:
+        return self.senders[src_id].transmitting is not None
+
+    def _pump(self, rid: int) -> None:
+        recv = self.receivers[rid]
+        self._unwedge(recv)
+        if recv.waiting_for is not None:
+            # §4.4 starvation: this receiver is committed to the starved
+            # request and next_pull stays blocked until it lands — so the
+            # pump must try that transfer directly (the sender's
+            # starved-first gate admits it as soon as it is free);
+            # otherwise sender and receiver deadlock on each other
+            req_id = recv.waiting_for
+            mig = recv.take(req_id)          # clears the block
+            if mig is None:
+                return
+            if not self._begin_transfer(mig, rid):
+                recv.win(mig)
+                recv.waiting_for = req_id    # still blocked: sender busy
+            return
+        while True:
+            mig, starved = recv.next_pull(self._sender_busy)
+            if starved is not None:
+                entry = self._pending.get(starved)
+                if entry is not None:
+                    self.senders[entry[1]].mark_starved(starved)
+            if mig is None:
+                return
+            if not self._begin_transfer(mig, rid):
+                recv.win(mig)          # put back; retry on next pump
+                return
+
+    def pump_all(self) -> None:
+        for rid in self._order:
+            if len(self.receivers[rid]):
+                self._pump(rid)
+
+    def _unwedge(self, recv: ReceiverState) -> None:
+        """A receiver blocked on a starved request stays blocked until that
+        request transfers — but the request may instead have *finished* on
+        its source. Drop such stale blocks so the pull loop keeps flowing."""
+        req_id = recv.waiting_for
+        if req_id is None:
+            return
+        entry = self._pending.get(req_id)
+        if entry is None:
+            recv.take(req_id)          # finalized elsewhere: drop the win
+            return
+        ref, src_id = entry
+        if not self.instances[src_id].has_request(ref):
+            self.senders[src_id].drop(req_id)
+            self._pending.pop(req_id, None)
+            recv.take(req_id)
+
+    def _begin_transfer(self, mig: MigRequest, dst_id: int) -> bool:
+        """Returns True when the pull was consumed (transfer started or the
+        offer was stale), False when the receiver should retry later."""
+        entry = self._pending.get(mig.req_id)
+        if entry is None:
+            return True                # already finalized elsewhere
+        ref, src_id = entry
+        src = self.instances[src_id]
+        dst = self.instances[dst_id]
+        sender = self.senders[src_id]
+        if not src.has_request(ref):   # finished before the transfer began
+            sender.drop(mig.req_id)
+            self._pending.pop(mig.req_id, None)
+            return True
+        if not sender.can_transmit(mig.req_id):
+            return False
+        # §5 flow control: stay on the source unless the receiver can admit
+        # the request right now and the migration budget allows the move
+        if not self._tick_ok() or not dst.can_accept(ref):
+            return False
+        sender.begin(mig.req_id)
+        self._tick_started += 1
+        status = self.ops.start_migration(ref, src_id, dst_id)
+        if status == MIG_FAILED:
+            sender.abort(mig.req_id)
+            self._tick_started -= 1
+            return False
+        assert status in (MIG_STARTED, MIG_COMPLETED), status
+        self.decisions.append(("migrate", mig.req_id, src_id, dst_id))
+        self._dst_of[mig.req_id] = dst_id
+        if status == MIG_COMPLETED:
+            self._finalize(mig.req_id, arrived=True)
+        return True
+
+    def migration_finished(self, req_id: int, arrived: bool = True) -> None:
+        """Async backends report a transfer's end here: ``arrived`` tells
+        whether the request landed on the receiver, or the move was
+        dropped because the request finished mid-flight."""
+        dst_id = self._finalize(req_id, arrived)
+        if dst_id is not None:
+            self._pump(dst_id)
+
+    def _finalize(self, req_id: int, arrived: bool) -> Optional[int]:
+        dst_id = self._dst_of.pop(req_id, None)
+        entry = self._pending.pop(req_id, None)
+        if entry is not None:
+            src_id = entry[1]
+            self.senders[src_id].finish(req_id)
+            if dst_id is not None and arrived:
+                key = (self.stage_of_instance[src_id],
+                       self.stage_of_instance[dst_id])
+                self.migrations += 1
+                self.migrations_by_stage[key] = \
+                    self.migrations_by_stage.get(key, 0) + 1
+        if dst_id is not None:
+            self.receivers[dst_id].complete(req_id)
+        return dst_id
+
+    # ---- intra-stage rebalancing (§4.4) -------------------------------------
+    def balance(self) -> None:
+        if self.cfg.policy != "cascade" or self.cfg.balancing != "full":
+            return
+        for stage in self.stages:
+            ids = stage.instance_ids
+            if len(ids) < 2:
+                continue
+            loads = {i: self.instances[i].load() for i in ids}
+            for i in ids:
+                peers = [l for j, l in loads.items() if j != i]
+                if not is_overloaded(loads[i], peers):
+                    continue
+                cands = [rv for rv in self.instances[i].requests()
+                         if rv.req_id not in self._pending]
+                if not cands:
+                    continue
+                victim = max(cands, key=lambda rv: rv.length)  # memory-aware
+                self._offer(i, victim, [j for j in ids if j != i])
+
+    # ---- boundary refinement (§4.3, Fig. 15) --------------------------------
+    def refine(self) -> None:
+        if self.cfg.policy != "cascade" or self.cfg.refinement == "none":
+            return
+        if self.cfg.refinement == "adaptive" and self.qoe is None:
+            return
+        for bi in range(len(self.stages) - 1):
+            own = [rv for i in self.stages[bi].instance_ids
+                   for rv in self.instances[i].request_view()]
+            succ = [self.instances[i].request_view()
+                    for i in self.stages[bi + 1].instance_ids]
+            if self.cfg.refinement == "adaptive":
+                b = self.refiners[bi].refine(own, succ)
+            else:
+                merged = own + [r for s in succ for r in s]
+                if len(merged) < self.refiners[bi].min_requests:
+                    continue
+                if self.cfg.refinement == "quantity":
+                    b = quantity_based_split(merged)
+                else:
+                    b = memory_based_split(merged)
+                self.refiners[bi].boundary = b
+            # keep boundaries monotone across stages
+            lo = self.stages[bi].lo
+            hi_next = self.stages[bi + 1].hi
+            b = max(float(b), lo + 1.0)
+            if hi_next != float("inf"):
+                b = min(b, hi_next - 1.0)
+            self.stages[bi].hi = b
+            self.stages[bi + 1].lo = b
+            self.decisions.append(("boundary", bi, b))
+            self.ops.set_boundary(bi, b)

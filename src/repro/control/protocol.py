@@ -1,0 +1,103 @@
+"""The control-plane ↔ backend contract.
+
+The :class:`~repro.control.plane.ControlPlane` makes every scheduling
+*decision* (where an arrival goes, which request migrates where, where a
+stage boundary sits); the backend owns every *mechanism* (queues, KV
+movement, clocks). The split is deliberately timing-free: the core never
+sleeps, schedules, or measures time — drivers call into it when their
+notion of time advances (a discrete event, a synchronous step) and
+execute its callbacks with whatever latency their world has.
+
+Backends supply one :class:`InstanceView` per serving instance and one
+:class:`ClusterOps` for cluster-wide actions. Request objects are opaque
+to the core: it only sees :class:`ReqView` snapshots the backend builds
+(identity + lengths) and hands the ``ref`` back unchanged in callbacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Protocol, Tuple, runtime_checkable
+
+# ``ClusterOps.start_migration`` outcomes
+MIG_STARTED = "started"      # async transfer in flight; backend will call
+                             # ControlPlane.migration_finished(req_id) later
+MIG_COMPLETED = "completed"  # synchronous transfer already landed
+MIG_FAILED = "failed"        # backend refused (e.g. admission re-check);
+                             # the core rolls the negotiation state back
+
+
+@dataclasses.dataclass(frozen=True)
+class ReqView:
+    """Point-in-time snapshot of a live request, built by the backend.
+
+    ``ref`` is the backend's own request object — the core treats it as
+    an opaque token and passes it back through ``ClusterOps`` calls.
+    """
+    ref: Any
+    req_id: int
+    input_len: float
+    length: float               # current sequence length
+
+
+@runtime_checkable
+class InstanceView(Protocol):
+    """Read-only window onto one serving instance."""
+
+    id: int
+
+    def load(self) -> float:
+        """Scheduling pressure: pinned KV tokens + queued prompt tokens."""
+        ...
+
+    def free_tokens(self) -> float:
+        """Unpinned KV budget (block-granular where the backend is)."""
+        ...
+
+    def used_tokens(self) -> float:
+        """KV tokens pinned by running requests."""
+        ...
+
+    def queued_tokens(self) -> float:
+        """Prompt tokens waiting for admission (hold no cache)."""
+        ...
+
+    def requests(self) -> List[ReqView]:
+        """Live, migratable requests (backends exclude ones already in a
+        backend-level transfer)."""
+        ...
+
+    def request_view(self) -> List[Tuple[float, float]]:
+        """(input_len, current_len) pairs for boundary refinement."""
+        ...
+
+    def has_request(self, ref: Any) -> bool:
+        """Is ``ref`` still resident (running, unfinished) here?"""
+        ...
+
+    def can_accept(self, ref: Any) -> bool:
+        """Admission/flow-control gate: could this instance adopt ``ref``
+        right now (slot + memory headroom)? §5: migrations that fail this
+        stay on the source."""
+        ...
+
+
+@runtime_checkable
+class ClusterOps(Protocol):
+    """Actions the control plane asks the backend to perform."""
+
+    def dispatch(self, ref: Any, instance_id: int) -> None:
+        """Place a new arrival on an instance (routing decision made)."""
+        ...
+
+    def start_migration(self, ref: Any, src_id: int, dst_id: int) -> str:
+        """Move ``ref``'s KV from ``src_id`` to ``dst_id``. Returns one of
+        MIG_STARTED (async; report completion via
+        ``ControlPlane.migration_finished``), MIG_COMPLETED (done
+        synchronously) or MIG_FAILED (refused; core rolls back)."""
+        ...
+
+    def set_boundary(self, stage_idx: int, hi: float) -> None:
+        """Observe a refined stage boundary (stage ``stage_idx`` now ends
+        at ``hi``). The core owns the authoritative bounds; this hook is
+        for backend-side mirrors/telemetry."""
+        ...

@@ -1,5 +1,9 @@
 """Serving launcher: a CascadeInfer MILS cluster over real JAX engines.
 
+Replays a `sim/workload.py` trace open-loop against the real engines —
+the same arrival process the discrete-event simulator consumes — through
+the shared control plane (`repro.control`).
+
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --engines 4 --requests 12
 """
@@ -14,8 +18,9 @@ from repro.configs import get_config
 from repro.core.partition import PipelinePlan, Stage
 from repro.core.qoe import QoEModel
 from repro.models import build_model
-from repro.serving.request import ServeRequest
-from repro.serving.server import MILSServer, ServerConfig
+from repro.serving.server import (MILSServer, ServerConfig,
+                                  requests_from_trace)
+from repro.sim.workload import WorkloadSpec, generate
 
 
 def default_plan(num_engines: int, max_seq: int) -> PipelinePlan:
@@ -36,8 +41,14 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--policy", default="cascade",
                     choices=["cascade", "round-robin", "least-loaded"])
+    ap.add_argument("--refinement", default="adaptive",
+                    choices=["adaptive", "quantity", "memory", "none"])
+    ap.add_argument("--balancing", default="full",
+                    choices=["full", "inter-stage", "rr"])
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-slots", type=int, default=3)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="workload arrivals/s, replayed at 1 step/s")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -47,17 +58,23 @@ def main() -> None:
     plan = default_plan(args.engines, args.max_seq)
     qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
     srv = MILSServer(model, params, plan, qoe,
-                     ServerConfig(policy=args.policy, seed=args.seed),
+                     ServerConfig(policy=args.policy,
+                                  refinement=args.refinement,
+                                  balancing=args.balancing, seed=args.seed),
                      max_slots=args.max_slots, max_seq=args.max_seq)
-    rng = np.random.default_rng(args.seed)
-    reqs = [ServeRequest(i,
-                         rng.integers(0, cfg.vocab_size,
-                                      int(rng.integers(8, args.max_seq // 3))
-                                      ).astype(np.int32),
-                         int(rng.integers(8, args.max_seq // 2)))
-            for i in range(args.requests)]
-    srv.run(reqs, max_steps=50 * args.requests)
-    print("summary:", srv.summary())
+    # the same ShareGPT-shaped trace the simulator runs, arrival times
+    # mapped to server steps, lengths capped to the reduced model
+    spec = WorkloadSpec(rate=args.arrival_rate,
+                        duration=args.requests / args.arrival_rate,
+                        seed=args.seed)
+    trace = generate(spec)[:args.requests]
+    for req, step in requests_from_trace(trace, vocab_size=cfg.vocab_size,
+                                         max_seq=args.max_seq,
+                                         seed=args.seed):
+        srv.submit_at(req, step)
+    srv.run(max_steps=100 * args.requests)
+    print("summary:", {k: round(v, 2) if isinstance(v, float) else v
+                       for k, v in srv.summary().items()})
     print("stage bounds:", srv.stage_bounds)
 
 

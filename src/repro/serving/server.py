@@ -2,199 +2,227 @@
 
 This is the control plane of DESIGN §3 running against actual model
 compute: N in-process Engine instances serving one model, grouped into
-length-specialized stages (PipelinePlan), with
+length-specialized stages (PipelinePlan). All scheduling decisions —
+round-robin-within-stage arrival routing (§3.2), growth-triggered
+handover with sender/receiver bid-ask negotiation, intra-stage
+rebalancing, boundary refinement (all Fig. 15/16 ablation modes), §5
+flow control — come from the shared, backend-agnostic core
+(`repro.control.plane.ControlPlane`), the same code the discrete-event
+simulator drives. This server only supplies the mechanisms: step-
+synchronous time (every engine advances one continuous-batching
+iteration per tick) and real KV-piece migration between engines.
 
-  * length-aware arrival routing (earliest covering stage, bid-ask pick),
-  * growth-triggered inter-stage handover with REAL KV-slice migration,
-  * intra-stage bid-ask rebalancing on overload,
-  * periodic adaptive boundary refinement,
-  * round-robin / least-loaded baselines for comparison.
-
-Time is step-synchronous (every engine advances one continuous-batching
-iteration per tick) — the discrete-event simulator covers asynchronous
-timing; this server proves the control plane works on real state.
+The serving API is open-loop: `submit_at(req, step)` builds an arrival
+schedule (e.g. replayed from a `sim/workload.py` trace via
+`requests_from_trace`), `step()`/`run()` advance it, an optional
+`on_token` callback streams every generated token, and `run(drain=True)`
+keeps stepping until everything submitted has finished.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import heapq
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
-from repro.core.bidask import Bid, is_overloaded, select_receiver
+from repro.control import (MIG_COMPLETED, MIG_FAILED, ControlConfig,
+                           ControlPlane, ReqView)
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
-from repro.core.refinement import BoundaryRefiner
-from repro.models.model import Model
 from repro.serving.engine import Engine
 from repro.serving.request import ServeRequest, State
+from repro.sim.workload import Request
+
+TokenCallback = Callable[[ServeRequest, int], None]
 
 
 @dataclasses.dataclass
 class ServerConfig:
     policy: str = "cascade"            # cascade | round-robin | least-loaded
+    refinement: str = "adaptive"       # adaptive | quantity | memory | none
+    balancing: str = "full"            # full | inter-stage | rr
     refine_every: int = 16             # steps
     balance_every: int = 8
     max_migrations_per_step: int = 3   # §5 concurrency cap
     seed: int = 0
 
 
+class EngineView:
+    """`repro.control.protocol.InstanceView` over a real engine."""
+
+    def __init__(self, eng):
+        self.eng = eng
+        self.id = eng.id
+
+    def load(self) -> float:
+        return self.eng.load()
+
+    def free_tokens(self) -> float:
+        return float(self.eng.free_tokens())
+
+    def used_tokens(self) -> float:
+        return float(self.eng.used_tokens())
+
+    def queued_tokens(self) -> float:
+        return float(self.eng.queued_tokens())
+
+    def requests(self) -> List[ReqView]:
+        return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length))
+                for r in self.eng.slots if r is not None]
+
+    def request_view(self):
+        return self.eng.request_view()
+
+    def has_request(self, req: ServeRequest) -> bool:
+        return (req.state is State.RUNNING and req.engine_id == self.id
+                and any(r is req for r in self.eng.slots))
+
+    def can_accept(self, req: ServeRequest) -> bool:
+        return self.eng.can_accept(req)
+
+
+class _ServerOps:
+    """`repro.control.protocol.ClusterOps` over the engine pool: dispatch
+    is an engine submit, migration is a synchronous export → import →
+    evict of the request's actual KV piece."""
+
+    def __init__(self, server: "MILSServer"):
+        self.server = server
+
+    def dispatch(self, req: ServeRequest, instance_id: int) -> None:
+        self.server.engines[instance_id].submit(req)
+
+    def start_migration(self, req: ServeRequest, src_id: int,
+                        dst_id: int) -> str:
+        src = self.server.engines[src_id]
+        dst = self.server.engines[dst_id]
+        slot = req.slot
+        if slot is None or src.slots[slot] is not req:
+            return MIG_FAILED
+        _, piece, _ = src.export_slot(slot)
+        if not dst.import_request(req, piece):
+            return MIG_FAILED
+        src.evict_slot(slot)
+        return MIG_COMPLETED
+
+    def set_boundary(self, stage_idx: int, hi: float) -> None:
+        pass                        # the core's bounds are authoritative
+
+
 class MILSServer:
-    def __init__(self, model: Model, params, plan: PipelinePlan,
+    def __init__(self, model, params, plan: PipelinePlan,
                  qoe: Optional[QoEModel], cfg: ServerConfig, *,
                  max_slots: int = 4, max_seq: int = 256,
-                 paged: Optional[bool] = None, block_size: int = 16):
-        self.model = model
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 engine_factory: Optional[Callable[[int], Any]] = None,
+                 on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
         self.plan = plan
-        self.rng = np.random.default_rng(cfg.seed)
-        E = plan.num_instances
-        self.engines = [Engine(i, model, params, max_slots=max_slots,
-                               max_seq=max_seq, paged=paged,
-                               block_size=block_size) for i in range(E)]
-        # stage bookkeeping
-        self.stage_bounds: List[Tuple[float, float]] = [
-            (s.lo, s.hi) for s in plan.stages]
-        self.stage_engines: List[List[int]] = []
-        nxt = 0
-        for s in plan.stages:
-            self.stage_engines.append(list(range(nxt, nxt + s.num_instances)))
-            nxt += s.num_instances
-        self.stage_of_engine = {e: si for si, ids in
-                                enumerate(self.stage_engines) for e in ids}
-        self.refiners = ([BoundaryRefiner(qoe, boundary=s.hi)
-                          for s in plan.stages[:-1]] if qoe else [])
-        self._rr = 0
+        self.on_token = on_token
+        if engine_factory is None:
+            def engine_factory(i):
+                return Engine(i, model, params, max_slots=max_slots,
+                              max_seq=max_seq, paged=paged,
+                              block_size=block_size)
+        self.engines = [engine_factory(i)
+                        for i in range(plan.num_instances)]
+        self.plane = ControlPlane(
+            plan, qoe,
+            ControlConfig(policy=cfg.policy, refinement=cfg.refinement,
+                          balancing=cfg.balancing,
+                          max_migrations_per_tick=cfg.max_migrations_per_step,
+                          seed=cfg.seed),
+            ops=_ServerOps(self),
+            instances=[EngineView(e) for e in self.engines])
         self.steps = 0
         self.finished: List[ServeRequest] = []
-        self.migrations = 0
+        self.submitted = 0
+        # open-loop arrival schedule: (step, seq, request)
+        self._schedule: List[Tuple[int, int, ServeRequest]] = []
+        self._seq = 0
+        self._emitted: Dict[int, int] = {}   # req_id -> tokens streamed
 
-    # ---- routing -------------------------------------------------------------
-    def _stage_for(self, length: float) -> int:
-        for i, (_, hi) in enumerate(self.stage_bounds):
-            if length < hi:
-                return i
-        return len(self.stage_bounds) - 1
+    # ---- observability -------------------------------------------------------
+    @property
+    def stage_bounds(self) -> List[Tuple[float, float]]:
+        return self.plane.bounds()
 
+    @property
+    def migrations(self) -> int:
+        return self.plane.migrations
+
+    # ---- intake --------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
+        """Closed-loop submission: the request arrives now."""
         req.arrival_step = self.steps
-        if self.cfg.policy == "round-robin":
-            eng = self.engines[self._rr % len(self.engines)]
-            self._rr += 1
-        elif self.cfg.policy == "least-loaded":
-            # load() = pinned cache + queued prompts; free_tokens() alone
-            # is blind to a queue that hasn't been admitted yet
-            eng = min(self.engines, key=lambda e: e.load())
-        else:
-            si = self._stage_for(len(req.prompt))
-            cands = [self.engines[i] for i in self.stage_engines[si]]
-            bids = [Bid(e.id, e.load(), e.used_tokens() / 1e4,
-                        int(self.rng.integers(0, 1 << 30))) for e in cands]
-            eng = self.engines[select_receiver(bids)]
-        eng.submit(req)
+        self.submitted += 1
+        self.plane.submit(req, req.req_id, float(len(req.prompt)))
 
-    # ---- main loop -------------------------------------------------------------
+    def submit_at(self, req: ServeRequest, step: int) -> None:
+        """Open-loop submission: the request arrives at ``step`` (replays
+        a workload trace's arrival process in server time)."""
+        self.submitted += 1
+        heapq.heappush(self._schedule, (int(step), self._seq, req))
+        self._seq += 1
+
+    def _release_arrivals(self) -> None:
+        while self._schedule and self._schedule[0][0] <= self.steps:
+            _, _, req = heapq.heappop(self._schedule)
+            req.arrival_step = self.steps
+            self.plane.submit(req, req.req_id, float(len(req.prompt)))
+
+    # ---- token streaming -----------------------------------------------------
+    def _stream(self, reqs: Sequence[ServeRequest]) -> None:
+        if self.on_token is None:
+            return
+        for r in reqs:
+            n = self._emitted.get(r.req_id, 0)
+            for tok in r.generated[n:]:
+                self.on_token(r, tok)
+            self._emitted[r.req_id] = len(r.generated)
+
+    # ---- main loop -----------------------------------------------------------
     def step(self) -> List[ServeRequest]:
+        self._release_arrivals()
         self.steps += 1
         done: List[ServeRequest] = []
         for eng in self.engines:
-            done.extend(eng.step())
+            fin = eng.step()
+            done.extend(fin)
+            self._stream(eng.active())
+            self._stream(fin)
         self.finished.extend(done)
+        for r in done:
+            self._emitted.pop(r.req_id, None)
         if self.cfg.policy == "cascade":
-            self._handover()
+            self.plane.begin_tick()
+            self.plane.handover_all()
             if self.steps % self.cfg.balance_every == 0:
-                self._balance()
-            if self.refiners and self.steps % self.cfg.refine_every == 0:
-                self._refine()
+                self.plane.balance()
+            if self.steps % self.cfg.refine_every == 0:
+                self.plane.refine()
+            # retry offers deferred by §5 flow control / the tick budget —
+            # without this an offer put back in a receiver queue would only
+            # be retried if a later offer happened to land on that receiver
+            self.plane.pump_all()
         return done
 
-    def run(self, requests: Sequence[ServeRequest],
-            max_steps: int = 2000) -> List[ServeRequest]:
+    def run(self, requests: Sequence[ServeRequest] = (),
+            max_steps: int = 2000, drain: bool = True) -> List[ServeRequest]:
+        """Drive the arrival schedule (plus any ``requests`` submitted
+        immediately). With ``drain`` (default) keep stepping until every
+        submitted request finished; otherwise stop once the schedule is
+        exhausted."""
         for r in requests:
             self.submit(r)
-        n = len(requests)
-        while len(self.finished) < n and self.steps < max_steps:
+        while self.steps < max_steps:
+            if not self._schedule and (not drain
+                                       or len(self.finished)
+                                       >= self.submitted):
+                break
             self.step()
         return self.finished
-
-    # ---- CascadeInfer mechanisms -------------------------------------------------
-    def _pick_receiver(self, cand_ids: Sequence[int],
-                       req: ServeRequest) -> Optional[Engine]:
-        """Receivers must pass the engine's own admission check (block/slot
-        reservation headroom) so bid-ask never selects an engine that would
-        reject the import."""
-        cands = [self.engines[i] for i in cand_ids
-                 if self.engines[i].can_accept(req)]
-        if not cands:
-            return None
-        bids = [Bid(e.id, e.load(), e.used_tokens() / 1e4,
-                    int(self.rng.integers(0, 1 << 30))) for e in cands]
-        rid = select_receiver(bids)
-        return self.engines[rid] if rid is not None else None
-
-    def _migrate(self, src: Engine, slot: int, dst: Engine) -> bool:
-        req, piece, _ = src.export_slot(slot)
-        if not dst.import_request(req, piece):
-            return False
-        src.evict_slot(slot)
-        self.migrations += 1
-        return True
-
-    def _handover(self) -> None:
-        """Growth-triggered inter-stage migration (§3.2)."""
-        moved = 0
-        for eng in self.engines:
-            si = self.stage_of_engine[eng.id]
-            _, hi = self.stage_bounds[si]
-            if hi == float("inf"):
-                continue
-            for slot, req in enumerate(list(eng.slots)):
-                if req is None or req.length < hi:
-                    continue
-                if moved >= self.cfg.max_migrations_per_step:
-                    return
-                nxt = min(si + 1, len(self.stage_bounds) - 1)
-                dst = self._pick_receiver(self.stage_engines[nxt], req)
-                if dst is None:
-                    continue       # §5 flow control: stay on source
-                if self._migrate(eng, slot, dst):
-                    moved += 1
-
-    def _balance(self) -> None:
-        """Intra-stage bid-ask rebalancing on overload (§4.4)."""
-        for si, ids in enumerate(self.stage_engines):
-            if len(ids) < 2:
-                continue
-            loads = {i: self.engines[i].load() for i in ids}
-            for i in ids:
-                peers = [l for j, l in loads.items() if j != i]
-                if not is_overloaded(loads[i], peers):
-                    continue
-                eng = self.engines[i]
-                occupied = [(s, r) for s, r in enumerate(eng.slots)
-                            if r is not None]
-                if not occupied:
-                    continue
-                slot, req = max(occupied, key=lambda sr: sr[1].length)
-                dst = self._pick_receiver([j for j in ids if j != i], req)
-                if dst is not None:
-                    self._migrate(eng, slot, dst)
-
-    def _refine(self) -> None:
-        """Adaptive range refinement (§4.3) on live request lengths."""
-        for bi in range(len(self.stage_bounds) - 1):
-            own = [rv for i in self.stage_engines[bi]
-                   for rv in self.engines[i].request_view()]
-            succ = [self.engines[i].request_view()
-                    for i in self.stage_engines[bi + 1]]
-            b = self.refiners[bi].refine(own, succ)
-            lo, _ = self.stage_bounds[bi]
-            _, hi_next = self.stage_bounds[bi + 1]
-            b = max(b, lo + 1.0)
-            if hi_next != float("inf"):
-                b = min(b, hi_next - 1.0)
-            self.stage_bounds[bi] = (lo, b)
-            self.stage_bounds[bi + 1] = (b, hi_next)
 
     # ---- metrics -------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -204,18 +232,48 @@ class MILSServer:
         # rejected requests never produced a token — folding their
         # fabricated timestamps into the means would fake instant service
         served = [r for r in fin if not r.rejected]
-        out = {
+        out: Dict[str, float] = {
             "finished": len(fin),
             "rejected": sum(1 for r in fin if r.rejected),
             "steps": self.steps,
             "migrations": self.migrations,
             "tokens_out": int(sum(e.tokens_out for e in self.engines)),
         }
+        # per-stage-pair migration counts (handover vs. rebalance visibility)
+        for (a, b), n in sorted(self.plane.migrations_by_stage.items()):
+            out[f"migrations_s{a}_to_s{b}"] = n
         if served:
             ttft = np.asarray([r.first_token_step - r.arrival_step
                                for r in served], np.float64)
             e2e = np.asarray([r.finish_step - r.arrival_step
                               for r in served], np.float64)
-            out["ttft_steps_mean"] = float(ttft.mean())
-            out["e2e_steps_mean"] = float(e2e.mean())
+            # tail latency is the paper's headline claim — report the
+            # distribution, not just the mean (mirrors sim/metrics.py)
+            for name, arr in (("ttft_steps", ttft), ("e2e_steps", e2e)):
+                out[f"{name}_mean"] = float(arr.mean())
+                for p in (50, 95, 99):
+                    out[f"{name}_p{p}"] = float(np.percentile(arr, p))
         return out
+
+
+def requests_from_trace(trace: Sequence[Request], *, vocab_size: int,
+                        steps_per_second: float = 1.0,
+                        max_seq: Optional[int] = None,
+                        seed: int = 0) -> List[Tuple[ServeRequest, int]]:
+    """Convert a `sim/workload.py` trace into (ServeRequest, arrival_step)
+    pairs so the server replays the exact workload the simulator consumes:
+    input_len becomes a random prompt of that length, output_len the token
+    budget, and Poisson arrival times map to steps at ``steps_per_second``.
+    ``max_seq`` caps lengths to what a small real engine can hold (the
+    sim's 128K-context tail does not fit a reduced test model)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in trace:
+        plen, new = int(r.input_len), int(r.output_len)
+        if max_seq is not None:
+            plen = max(1, min(plen, max_seq // 2))
+            new = max(1, min(new, max_seq - plen - 1))
+        prompt = rng.integers(0, vocab_size, plen).astype(np.int32)
+        out.append((ServeRequest(r.req_id, prompt, new),
+                    int(round(r.arrival * steps_per_second))))
+    return out

@@ -1,25 +1,25 @@
 """MILS cluster simulator: policies (round-robin / Llumnix-like /
 CascadeInfer) over simulated instances with live KV migration.
 
-CascadePolicy composes the paper's mechanisms end to end: offline pipeline
-plan -> length routing -> growth-triggered inter-stage handover with
-bid-ask receiver selection -> intra-stage bid-ask rebalancing -> periodic
-adaptive range refinement -> live migration with concurrency caps.
+CascadePolicy is a thin *driver* of the backend-agnostic scheduling core
+(`repro.control.plane.ControlPlane`): it supplies discrete-event timing,
+the cost-model transfer fabric, and `InstanceView`/`ClusterOps` adapters
+over simulated instances — every routing/handover/balance/refinement
+decision is made by the shared core, the same code the real multi-engine
+server (`repro.serving.server.MILSServer`) runs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.bidask import (Bid, MigRequest, ReceiverState, SenderState,
-                               is_overloaded, select_receiver)
+from repro.control import (MIG_STARTED, ControlConfig, ControlPlane, ReqView,
+                           is_overloaded)
 from repro.core.migration import plan_live_migration
-from repro.core.partition import PipelinePlan, Stage
+from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
-from repro.core.refinement import (BoundaryRefiner, memory_based_split,
-                                   quantity_based_split)
 from repro.sim.costmodel import HardwareProfile, decode_rate
 from repro.sim.events import EventQueue
 from repro.sim.instance import Instance, SimRequest
@@ -52,6 +52,9 @@ class Policy:
     def route(self, sr: SimRequest, t: float) -> Instance:
         raise NotImplementedError
 
+    def dispatch(self, sr: SimRequest, t: float) -> None:
+        self.route(sr, t).enqueue(sr, t)
+
     def on_iteration_end(self, inst: Instance, t: float) -> None:
         pass
 
@@ -83,8 +86,7 @@ class Cluster:
     def submit(self, req: Request) -> None:
         def arrive():
             sr = SimRequest(req=req, length=req.input_len)
-            inst = self.policy.route(sr, self.events.now)
-            inst.enqueue(sr, self.events.now)
+            self.policy.dispatch(sr, self.events.now)
         self.events.push(req.arrival, arrive)
 
     def run(self, requests: Sequence[Request], duration: float) -> "SimResult":
@@ -175,23 +177,36 @@ class LlumnixLikePolicy(Policy):
 class TransferFabric:
     """Shared KV-migration machinery (used by Llumnix-like and Cascade)."""
 
-    def __init__(self, cluster: Cluster):
+    def __init__(self, cluster: Cluster,
+                 kv_bytes_per_token: Optional[float] = None):
         self.cluster = cluster
+        self.kv_bytes_per_token = kv_bytes_per_token
 
     def direct_transfer(self, src: Instance, dst: Instance,
                         sr: SimRequest, t: float) -> bool:
+        """Llumnix path: gate on the receiver's room + source cap, then
+        move. (Cascade gates in the control plane and calls ``transfer``.)"""
         if sr.migrating or sr.done:
             return False
-        # flow control + wire volume are block-granular: the receiver must
-        # have whole free blocks, and we move whole blocks (gather→scatter)
         need = dst.block_tokens(sr.length)
         if not src.migrations.can_start(dst.free_tokens() >= need):
             return False
+        self.transfer(src, dst, sr, t)
+        return True
+
+    def transfer(self, src: Instance, dst: Instance, sr: SimRequest,
+                 t: float, on_finish: Optional[Callable] = None) -> None:
+        """Start a live migration: multi-round copy timing from the cost
+        model, block-granular reservation on the receiver, stop-and-copy
+        pause, then adoption. ``on_finish(arrived)`` fires when the
+        transfer leaves the wire (before the adoption pause)."""
+        need = dst.block_tokens(sr.length)
         sr.migrating = True
         dst.inbound_reserved += need
         rate = decode_rate([r.length for r in src.running], src.profile)
-        timing = plan_live_migration(need, rate,
-                                     src.profile.kv_bytes_per_token or 2e5,
+        kvb = (self.kv_bytes_per_token or src.profile.kv_bytes_per_token
+               or 2e5)
+        timing = plan_live_migration(need, rate, kvb,
                                      self.cluster.cfg.bandwidth)
         src.migrations.start(sr.req.req_id, t + timing.total_s)
 
@@ -203,7 +218,9 @@ class TransferFabric:
             if sr.done or sr not in src.running:
                 dst.inbound_reserved -= need
                 sr.migrating = False
-                return        # completed mid-flight: drop the move
+                if on_finish:
+                    on_finish(False)   # completed mid-flight: drop the move
+                return
             src.running.remove(sr)
             src.kick(now)
 
@@ -213,19 +230,74 @@ class TransferFabric:
                 dst.adopt_running(sr, self.cluster.events.now)
 
             self.cluster.events.push(now + pause, adopt)
+            if on_finish:
+                on_finish(True)
 
         self.cluster.events.push(t + timing.total_s, finish)
-        return True
 
 
 # --------------------------------------------------------------------------
-# CascadeInfer
+# CascadeInfer: discrete-event driver of the shared control plane
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
-class StageState:
-    lo: float
-    hi: float
-    instance_ids: List[int]
+class SimInstanceView:
+    """`repro.control.protocol.InstanceView` over a simulated instance."""
+
+    def __init__(self, inst: Instance):
+        self.inst = inst
+        self.id = inst.id
+
+    def load(self) -> float:
+        return self.inst.load()
+
+    def free_tokens(self) -> float:
+        return self.inst.free_tokens()
+
+    def used_tokens(self) -> float:
+        return self.inst.kv_tokens()
+
+    def queued_tokens(self) -> float:
+        return float(sum(r.length for r in self.inst.waiting))
+
+    def requests(self) -> List[ReqView]:
+        return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),
+                        float(sr.length))
+                for sr in self.inst.running if not sr.migrating]
+
+    def request_view(self):
+        return self.inst.request_view()
+
+    def has_request(self, sr: SimRequest) -> bool:
+        return not sr.done and sr in self.inst.running
+
+    def can_accept(self, sr: SimRequest) -> bool:
+        return self.inst.free_tokens() >= self.inst.block_tokens(sr.length)
+
+
+class _SimOps:
+    """`repro.control.protocol.ClusterOps` over the simulated cluster:
+    placements become queue pushes at the current event time, migrations
+    become `TransferFabric` live transfers with cost-model timing."""
+
+    def __init__(self, cluster: Cluster, fabric: TransferFabric):
+        self.cluster = cluster
+        self.fabric = fabric
+        self.plane: Optional[ControlPlane] = None   # set after construction
+
+    def dispatch(self, sr: SimRequest, instance_id: int) -> None:
+        self.cluster.instances[instance_id].enqueue(sr,
+                                                    self.cluster.events.now)
+
+    def start_migration(self, sr: SimRequest, src_id: int,
+                        dst_id: int) -> str:
+        self.fabric.transfer(
+            self.cluster.instances[src_id], self.cluster.instances[dst_id],
+            sr, self.cluster.events.now,
+            on_finish=lambda arrived: self.plane.migration_finished(
+                sr.req.req_id, arrived))
+        return MIG_STARTED
+
+    def set_boundary(self, stage_idx: int, hi: float) -> None:
+        pass                        # the core's bounds are authoritative
 
 
 class CascadePolicy(Policy):
@@ -233,6 +305,9 @@ class CascadePolicy(Policy):
       refinement ∈ {adaptive, quantity, memory, none}   (Fig. 15)
       balancing  ∈ {full, inter-stage, rr}              (Fig. 16)
       plan layout chain/no-pipeline comes from the plan (Fig. 14)
+
+    All knobs and mechanisms live in the shared `ControlPlane`; this class
+    only adapts them to discrete-event time and simulated KV transfers.
     """
     name = "cascade"
 
@@ -244,214 +319,38 @@ class CascadePolicy(Policy):
         self.refinement = refinement
         self.balancing = balancing
         self.kv_bytes_per_token = kv_bytes_per_token
-        self._rr_counters: Dict[int, int] = {}
 
     def attach(self, cluster):
         super().attach(cluster)
-        self.fabric = TransferFabric(cluster)
-        self.senders = {i.id: SenderState(i.id) for i in cluster.instances}
-        self.receivers = {i.id: ReceiverState(i.id) for i in cluster.instances}
-        self._pending: Dict[int, Tuple[SimRequest, int]] = {}  # req -> (sr, src)
-        # assign instances to stages
-        self.stages: List[StageState] = []
-        self.stage_of_instance: List[int] = [0] * len(cluster.instances)
-        nxt = 0
-        for si, st in enumerate(self.plan.stages):
-            ids = list(range(nxt, nxt + st.num_instances))
-            nxt += st.num_instances
-            self.stages.append(StageState(st.lo, st.hi, ids))
-            for i in ids:
-                self.stage_of_instance[i] = si
-        assert nxt == len(cluster.instances), \
-            f"plan uses {nxt} instances, cluster has {len(cluster.instances)}"
-        self.refiners = [
-            BoundaryRefiner(self.qoe, boundary=s.hi)
-            for s in self.stages[:-1]]
+        fabric = TransferFabric(cluster, self.kv_bytes_per_token)
+        ops = _SimOps(cluster, fabric)
+        self.plane = ControlPlane(
+            self.plan, self.qoe,
+            ControlConfig(policy="cascade", refinement=self.refinement,
+                          balancing=self.balancing, seed=cluster.cfg.seed),
+            ops=ops, instances=[SimInstanceView(i)
+                                for i in cluster.instances])
+        ops.plane = self.plane
 
-    # ---- routing -----------------------------------------------------------
-    def _stage_for(self, length: float) -> int:
-        for i, s in enumerate(self.stages):
-            if length < s.hi:
-                return i
-        return len(self.stages) - 1
+    @property
+    def stage_of_instance(self) -> List[int]:
+        return [self.plane.stage_of_instance[i.id]
+                for i in self.cluster.instances]
 
-    def route(self, sr, t):
-        """Arrivals go round-robin within the covering stage (§3.2 —
-        bid-ask governs *migrations*, not dispatch)."""
-        si = self._stage_for(sr.length)
-        ids = self.stages[si].instance_ids
-        c = self._rr_counters.get(si, 0)
-        self._rr_counters[si] = c + 1
-        return self.cluster.instances[ids[c % len(ids)]]
+    # ---- driver events ------------------------------------------------------
+    def dispatch(self, sr: SimRequest, t: float) -> None:
+        self.plane.submit(sr, sr.req.req_id, sr.length)
 
-    # ---- growth-triggered handover (inter-stage) ----------------------------
     def on_iteration_end(self, inst, t):
-        si = self.stage_of_instance[inst.id]
-        hi = self.stages[si].hi
-        if hi == float("inf"):
-            return
-        for sr in list(inst.running):
-            if sr.length >= hi and not sr.migrating \
-                    and sr.req.req_id not in self._pending:
-                nxt = min(si + 1, len(self.stages) - 1)
-                self._offer(inst, sr, self.stages[nxt].instance_ids, t)
+        self.plane.on_instance_iteration(inst.id)
 
-    def _offer(self, src: Instance, sr: SimRequest,
-               candidate_ids: Sequence[int], t: float) -> None:
-        sender = self.senders[src.id]
-        mig = MigRequest(sr.req.req_id, sr.length, src.id)
-        sender.offer(mig)
-        self._pending[sr.req.req_id] = (sr, src.id)
-        cands = [self.cluster.instances[i] for i in candidate_ids
-                 if i != src.id]
-        if self.balancing == "rr":
-            # Fig.-16 ablation: hand over round-robin, no negotiation
-            c = self._rr_counters.get(-1, 0)
-            self._rr_counters[-1] = c + 1
-            rid = cands[c % len(cands)].id if cands else None
-        else:
-            bids = [Bid(c.id, c.load(),
-                        self.receivers[c.id].earliest_start(),
-                        int(self.cluster.rng.integers(0, 1 << 30)))
-                    for c in cands]
-            rid = select_receiver(bids)
-        if rid is None:
-            sender.buffer.pop(mig.req_id, None)
-            self._pending.pop(sr.req.req_id, None)
-            return
-        self.receivers[rid].win(mig)
-        self._pump(rid, t)
-
-    # ---- receiver pull loop -------------------------------------------------
-    def _sender_busy(self, src_id: int) -> bool:
-        return self.senders[src_id].transmitting is not None
-
-    def _pump(self, rid: int, t: float) -> None:
-        recv = self.receivers[rid]
-        dst = self.cluster.instances[rid]
-        while True:
-            mig, starved = recv.next_pull(self._sender_busy)
-            if starved is not None:
-                self.senders[
-                    self._pending[starved][1]].mark_starved(starved)
-            if mig is None:
-                return
-            if not self._begin_transfer(mig, dst, t):
-                recv.win(mig)          # put back; retry on next pump
-                return
-
-    def _begin_transfer(self, mig: MigRequest, dst: Instance,
-                        t: float) -> bool:
-        entry = self._pending.get(mig.req_id)
-        if entry is None:
-            return True                # stale (request finished)
-        sr, src_id = entry
-        src = self.cluster.instances[src_id]
-        sender = self.senders[src_id]
-        if sr.done or sr not in src.running:
-            sender.buffer.pop(mig.req_id, None)
-            self._pending.pop(mig.req_id, None)
-            return True
-        if not sender.can_transmit(mig.req_id):
-            return False
-        need = dst.block_tokens(sr.length)
-        if not src.migrations.can_start(dst.free_tokens() >= need):
-            return False               # §5 flow control: stay on source
-        sender.begin(mig.req_id)
-        sr.migrating = True
-        dst.inbound_reserved += need
-        rate = decode_rate([r.length for r in src.running], src.profile)
-        kvb = self.kv_bytes_per_token or src.profile.kv_bytes_per_token or 2e5
-        timing = plan_live_migration(need, rate, kvb,
-                                     self.cluster.cfg.bandwidth)
-        src.migrations.start(mig.req_id, t + timing.total_s)
-
-        pause = self.cluster.cfg.migration_pause_s + timing.stall_s
-
-        def finish():
-            now = self.cluster.events.now
-            src.migrations.finish(mig.req_id)
-            sender.finish(mig.req_id)
-            self.receivers[dst.id].complete(mig.req_id)
-            self._pending.pop(mig.req_id, None)
-            if sr.done or sr not in src.running:
-                dst.inbound_reserved -= need
-                sr.migrating = False
-                self._pump(dst.id, now)
-                return
-            src.running.remove(sr)
-            src.kick(now)
-
-            def adopt():     # stop-and-copy + scheduler hand-off pause
-                dst.inbound_reserved -= need
-                sr.migrating = False
-                dst.adopt_running(sr, self.cluster.events.now)
-
-            self.cluster.events.push(now + pause, adopt)
-            self._pump(dst.id, now)
-
-        self.cluster.events.push(t + timing.total_s, finish)
-        return True
-
-    # ---- timers: pump / intra-stage balance / refinement ---------------------
     def timers(self):
-        out = [(self.cluster.cfg.pump_interval, self._pump_all)]
+        out = [(self.cluster.cfg.pump_interval,
+                lambda t: self.plane.pump_all())]
         if self.balancing == "full":
-            out.append((self.cluster.cfg.balance_interval, self._balance))
+            out.append((self.cluster.cfg.balance_interval,
+                        lambda t: self.plane.balance()))
         if self.refinement != "none":
-            out.append((self.cluster.cfg.refine_interval, self._refine))
+            out.append((self.cluster.cfg.refine_interval,
+                        lambda t: self.plane.refine()))
         return out
-
-    def _pump_all(self, t):
-        for rid in self.receivers:
-            if len(self.receivers[rid]):
-                self._pump(rid, t)
-
-    def _balance(self, t):
-        for si, stage in enumerate(self.stages):
-            insts = [self.cluster.instances[i] for i in stage.instance_ids]
-            if len(insts) < 2:
-                continue
-            loads = {i.id: i.load() for i in insts}
-            for inst in insts:
-                peers = [l for j, l in loads.items() if j != inst.id]
-                if not is_overloaded(inst.load(), peers):
-                    continue
-                cands = [r for r in inst.running
-                         if not r.migrating
-                         and r.req.req_id not in self._pending]
-                if not cands:
-                    continue
-                victim = max(cands, key=lambda r: r.length)
-                self._offer(inst, victim,
-                            [i.id for i in insts if i.id != inst.id], t)
-
-    def _refine(self, t):
-        for bi in range(len(self.stages) - 1):
-            own_ids = self.stages[bi].instance_ids
-            succ_ids = self.stages[bi + 1].instance_ids
-            own = [rv for i in own_ids
-                   for rv in self.cluster.instances[i].request_view()]
-            succ = [self.cluster.instances[i].request_view()
-                    for i in succ_ids]
-            if self.refinement == "adaptive":
-                b = self.refiners[bi].refine(own, succ)
-            else:
-                merged = own + [r for s in succ for r in s]
-                if len(merged) < self.refiners[bi].min_requests:
-                    continue
-                if self.refinement == "quantity":
-                    b = quantity_based_split(merged)
-                elif self.refinement == "memory":
-                    b = memory_based_split(merged)
-                else:
-                    continue
-                self.refiners[bi].boundary = b
-            # keep boundaries monotone across stages
-            lo = self.stages[bi].lo
-            hi_next = self.stages[bi + 1].hi
-            b = float(np.clip(b, lo + 1.0,
-                              hi_next - 1.0 if hi_next != float("inf")
-                              else b))
-            self.stages[bi].hi = b
-            self.stages[bi + 1].lo = b

@@ -1,0 +1,610 @@
+"""Conformance suite for the backend-agnostic control plane.
+
+A pure-python mock backend drives `ControlPlane` through the same
+`InstanceView`/`ClusterOps` protocol the simulator and the real server
+use, checking the invariants any backend may rely on:
+
+  * request conservation — every submitted request finishes exactly once
+    and is never resident on two instances at the same time;
+  * boundary monotonicity under every refinement mode;
+  * §5 flow control — migrations start only when the receiver could
+    admit the request, per-source concurrency and per-tick budgets hold;
+  * sim-vs-server parity — the discrete-event driver and the step-
+    synchronous MILSServer (over a deterministic fake engine) produce
+    identical routing and migration decision logs on a fixed trace.
+"""
+import collections
+from collections import deque
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.control import (MIG_COMPLETED, MIG_STARTED, ControlConfig,
+                           ControlPlane, ReqView)
+from repro.core.partition import PipelinePlan, Stage
+
+
+# --------------------------------------------------------------------------
+# Mock backend
+# --------------------------------------------------------------------------
+class MockRequest:
+    def __init__(self, req_id, input_len, output_len):
+        self.req_id = req_id
+        self.input_len = input_len
+        self.output_len = output_len
+        self.length = input_len
+        self.generated = 0
+        self.done = False
+        self.finishes = 0
+
+    def __repr__(self):
+        return f"R{self.req_id}(len={self.length})"
+
+
+class MockInstance:
+    def __init__(self, iid, capacity):
+        self.id = iid
+        self.capacity = capacity
+        self.running = []
+        self.waiting = deque()
+
+    def load(self):
+        return float(sum(r.length for r in self.running)
+                     + sum(r.length for r in self.waiting))
+
+    def free_tokens(self):
+        return float(self.capacity - sum(r.length for r in self.running))
+
+    def used_tokens(self):
+        return float(sum(r.length for r in self.running))
+
+    def queued_tokens(self):
+        return float(sum(r.length for r in self.waiting))
+
+    def requests(self):
+        return [ReqView(r, r.req_id, float(r.input_len), float(r.length))
+                for r in self.running]
+
+    def request_view(self):
+        return [(float(r.input_len), float(r.length)) for r in self.running]
+
+    def has_request(self, r):
+        return not r.done and r in self.running
+
+    def can_accept(self, r):
+        return self.free_tokens() >= r.length
+
+
+class MockBackend:
+    """ClusterOps + a toy serving loop: admit, grow one token per step,
+    finish at output_len. ``transfer_delay`` > 0 makes migrations async
+    (delivered N steps later, like the simulator's fabric)."""
+
+    def __init__(self, n_instances, capacity=10_000, transfer_delay=0):
+        self.instances = [MockInstance(i, capacity) for i in range(n_instances)]
+        self.transfer_delay = transfer_delay
+        self.in_flight = []            # (deliver_at_step, req, src, dst)
+        self.finished = []
+        self.boundary_log = []
+        self.migration_starts = []     # (req_id, src, dst, dst_could_accept)
+        self.step_count = 0
+        self.plane = None
+
+    # ---- ClusterOps ------------------------------------------------------
+    def dispatch(self, r, iid):
+        self.instances[iid].waiting.append(r)
+
+    def start_migration(self, r, src_id, dst_id):
+        dst = self.instances[dst_id]
+        self.migration_starts.append((r.req_id, src_id, dst_id,
+                                      dst.can_accept(r)))
+        if self.transfer_delay <= 0:
+            self._deliver(r, src_id, dst_id)
+            return MIG_COMPLETED
+        self.in_flight.append((self.step_count + self.transfer_delay,
+                               r, src_id, dst_id))
+        return MIG_STARTED
+
+    def set_boundary(self, stage_idx, hi):
+        self.boundary_log.append((stage_idx, hi))
+
+    # ---- mechanics -------------------------------------------------------
+    def _deliver(self, r, src_id, dst_id):
+        src = self.instances[src_id]
+        if r.done or r not in src.running:
+            return False               # finished mid-flight: drop the move
+        src.running.remove(r)
+        self.instances[dst_id].running.append(r)
+        return True
+
+    def residences(self, r):
+        return [i.id for i in self.instances
+                if r in i.running or r in i.waiting]
+
+    def step(self):
+        self.step_count += 1
+        # async transfers land first (the wire is faster than the batch)
+        due = [t for t in self.in_flight if t[0] <= self.step_count]
+        self.in_flight = [t for t in self.in_flight if t[0] > self.step_count]
+        for _, r, src_id, dst_id in due:
+            arrived = self._deliver(r, src_id, dst_id)
+            self.plane.migration_finished(r.req_id, arrived)
+        for inst in self.instances:
+            while inst.waiting and inst.can_accept(inst.waiting[0]):
+                inst.running.append(inst.waiting.popleft())
+            for r in list(inst.running):
+                r.generated += 1
+                r.length += 1
+                if r.generated >= r.output_len:
+                    r.done = True
+                    r.finishes += 1
+                    inst.running.remove(r)
+                    self.finished.append(r)
+            self.plane.on_instance_iteration(inst.id)
+
+
+def make_plane(backend, plan, cfg, qoe=None):
+    plane = ControlPlane(plan, qoe, cfg, ops=backend,
+                         instances=backend.instances)
+    backend.plane = plane
+    return plane
+
+
+def two_stage_plan(E, boundary=64.0):
+    return PipelinePlan([Stage(0.0, boundary, E - E // 2),
+                         Stage(boundary, float("inf"), E // 2)], 0.0)
+
+
+def run_workload(backend, plane, requests, max_steps=500,
+                 balance_every=4, refine_every=8):
+    for r in requests:
+        plane.submit(r, r.req_id, r.length)
+    steps = 0
+    while len(backend.finished) < len(requests) and steps < max_steps:
+        backend.step()
+        plane.pump_all()
+        if steps % balance_every == 0:
+            plane.balance()
+        if steps % refine_every == 0:
+            plane.refine()
+        steps += 1
+    while backend.in_flight:    # quiesce: land transfers still on the wire
+        backend.step()
+    plane.pump_all()
+    return steps
+
+
+def mixed_requests(rng, n, boundary=64):
+    """Half short-lived, half crossing the stage boundary."""
+    out = []
+    for i in range(n):
+        if i % 2:
+            out.append(MockRequest(i, int(rng.integers(4, boundary // 2)),
+                                   int(rng.integers(2, 10))))
+        else:
+            out.append(MockRequest(i, int(rng.integers(8, boundary - 4)),
+                                   int(rng.integers(boundary, 2 * boundary))))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Conservation
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("transfer_delay", [0, 3])
+def test_request_conservation(transfer_delay):
+    rng = np.random.default_rng(0)
+    backend = MockBackend(4, transfer_delay=transfer_delay)
+    plane = make_plane(backend, two_stage_plan(4),
+                       ControlConfig(refinement="none"))
+    reqs = mixed_requests(rng, 16)
+    for r in reqs:
+        plane.submit(r, r.req_id, r.length)
+    for _ in range(400):
+        backend.step()
+        plane.pump_all()
+        plane.balance()
+        # a live request is resident on exactly one instance — a request
+        # mid-transfer stays on the source until the backend delivers it
+        for r in reqs:
+            if not r.done:
+                assert len(backend.residences(r)) == 1, (r, backend.residences(r))
+        if len(backend.finished) == len(reqs):
+            break
+    assert len(backend.finished) == len(reqs)
+    for r in reqs:
+        assert r.finishes == 1, f"{r} finished {r.finishes} times"
+    # quiesce: land transfers still on the wire, drain stale offers (real
+    # drivers keep stepping/pumping; the mock must do it explicitly)
+    while backend.in_flight:
+        backend.step()
+    plane.pump_all()
+    assert plane.pending_ids() == set(), "negotiation state leaked"
+    assert plane._dst_of == {}, "transfer bookkeeping leaked"
+    assert plane.migrations > 0, "boundary-crossing requests must migrate"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 24),
+       delay=st.integers(0, 4), capacity=st.integers(300, 10_000))
+def test_request_conservation_property(seed, n, delay, capacity):
+    rng = np.random.default_rng(seed)
+    backend = MockBackend(4, capacity=capacity, transfer_delay=delay)
+    plane = make_plane(backend, two_stage_plan(4),
+                       ControlConfig(refinement="none"))
+    reqs = mixed_requests(rng, n)
+    # drop requests that can never fit an instance (mock has no reject path)
+    reqs = [r for r in reqs if r.input_len + r.output_len <= capacity]
+    run_workload(backend, plane, reqs, max_steps=4000)
+    assert len(backend.finished) == len(reqs)
+    assert all(r.finishes == 1 for r in reqs)
+    assert plane.pending_ids() == set()
+
+
+# --------------------------------------------------------------------------
+# Routing
+# --------------------------------------------------------------------------
+def test_arrivals_route_round_robin_within_stage():
+    """§3.2: dispatch is RR within the covering stage — bid-ask governs
+    migrations, not arrivals (the old server used bid-ask here)."""
+    backend = MockBackend(4)
+    plane = make_plane(backend, two_stage_plan(4, boundary=64.0),
+                       ControlConfig())
+    short = [MockRequest(i, 10, 5) for i in range(6)]
+    long = [MockRequest(10 + i, 100, 5) for i in range(4)]
+    picks_short = [plane.route(r.req_id, r.length) for r in short]
+    picks_long = [plane.route(r.req_id, r.length) for r in long]
+    assert picks_short == [0, 1, 0, 1, 0, 1]
+    assert picks_long == [2, 3, 2, 3]
+
+
+def test_baseline_policies_route():
+    backend = MockBackend(3)
+    plane = make_plane(backend, PipelinePlan([Stage(0.0, float("inf"), 3)],
+                                             0.0),
+                       ControlConfig(policy="round-robin"))
+    assert [plane.route(i, 10) for i in range(5)] == [0, 1, 2, 0, 1]
+
+    backend2 = MockBackend(3)
+    plane2 = make_plane(backend2, PipelinePlan([Stage(0.0, float("inf"), 3)],
+                                               0.0),
+                        ControlConfig(policy="least-loaded"))
+    backend2.instances[0].running.append(MockRequest(99, 500, 100))
+    assert plane2.route(0, 10) in (1, 2)
+
+
+# --------------------------------------------------------------------------
+# Boundary refinement
+# --------------------------------------------------------------------------
+def _bounds_monotone(plane):
+    bounds = plane.bounds()
+    assert bounds[0][0] == 0.0
+    assert bounds[-1][1] == float("inf")
+    for (lo, hi), (lo2, hi2) in zip(bounds, bounds[1:]):
+        assert hi == lo2 and lo < hi
+
+
+@pytest.mark.parametrize("mode", ["adaptive", "quantity", "memory"])
+def test_boundaries_stay_monotone(mode, qoe_linear):
+    rng = np.random.default_rng(1)
+    backend = MockBackend(4)
+    plane = make_plane(backend, two_stage_plan(4),
+                       ControlConfig(refinement=mode), qoe=qoe_linear)
+    reqs = mixed_requests(rng, 20)
+    for r in reqs:
+        plane.submit(r, r.req_id, r.length)
+    for step in range(200):
+        backend.step()
+        plane.pump_all()
+        if step % 4 == 0:
+            plane.refine()
+            _bounds_monotone(plane)
+        if len(backend.finished) == len(reqs):
+            break
+    assert backend.boundary_log, f"{mode} refinement never moved a boundary"
+    for si, hi in backend.boundary_log:
+        assert 0.0 < hi < float("inf")
+
+
+@pytest.mark.parametrize("mode", ["quantity", "memory", "adaptive"])
+def test_last_boundary_keeps_floor_three_stages(mode, qoe_linear):
+    """The boundary feeding the unbounded last stage must still respect
+    its stage's lower edge: with mostly-short live requests a naive split
+    lands *below* stage lo and would invert the range."""
+    plan = PipelinePlan([Stage(0.0, 48.0, 2), Stage(48.0, 96.0, 1),
+                         Stage(96.0, float("inf"), 1)], 0.0)
+    backend = MockBackend(4)
+    plane = make_plane(backend, plan, ControlConfig(refinement=mode),
+                       qoe=qoe_linear)
+    # short requests everywhere: split points sit far below 48/96
+    for iid in range(4):
+        for j in range(6):
+            backend.instances[iid].running.append(
+                MockRequest(100 * iid + j, 8, 40))
+    for _ in range(5):
+        plane.refine()
+        _bounds_monotone(plane)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       mode=st.sampled_from(["adaptive", "quantity", "memory"]))
+def test_boundary_monotonicity_property(seed, mode, qoe_linear):
+    rng = np.random.default_rng(seed)
+    backend = MockBackend(4)
+    plane = make_plane(backend, two_stage_plan(4),
+                       ControlConfig(refinement=mode), qoe=qoe_linear)
+    reqs = mixed_requests(rng, int(rng.integers(6, 24)))
+    for r in reqs:
+        plane.submit(r, r.req_id, r.length)
+    for _ in range(60):
+        backend.step()
+        plane.refine()
+        _bounds_monotone(plane)
+
+
+# --------------------------------------------------------------------------
+# Flow control + migration caps (§5)
+# --------------------------------------------------------------------------
+def test_migrations_gated_on_receiver_room():
+    """A migration only starts when the receiver could admit the request
+    at decision time; an over-full stage keeps requests on the source."""
+    rng = np.random.default_rng(2)
+    backend = MockBackend(4, capacity=260, transfer_delay=2)
+    plane = make_plane(backend, two_stage_plan(4, boundary=32.0),
+                       ControlConfig(refinement="none"))
+    reqs = [MockRequest(i, 20, 60) for i in range(8)]
+    run_workload(backend, plane, reqs, max_steps=600)
+    assert backend.migration_starts, "nothing migrated under pressure"
+    for req_id, src, dst, could_accept in backend.migration_starts:
+        assert could_accept, \
+            f"req {req_id} sent to {dst} which could not admit it"
+
+
+def test_per_source_transfers_serialized():
+    """§4.4/§5 concurrency control: each source has at most one outbound
+    transfer in flight (sender serialization), even with many crossers."""
+    backend = MockBackend(4, transfer_delay=50)   # transfers never land
+    plane = make_plane(backend, two_stage_plan(4, boundary=16.0),
+                       ControlConfig(refinement="none"))
+    # many boundary-crossers on one source instance
+    reqs = [MockRequest(i, 20, 100) for i in range(10)]
+    for r in reqs:
+        backend.dispatch(r, 0)        # all on instance 0, bypassing routing
+    for _ in range(30):
+        backend.step()
+        plane.pump_all()
+        in_flight_src = [plane._pending[req_id][1]
+                         for req_id in plane._dst_of]
+        per_src = collections.Counter(in_flight_src)
+        assert all(n <= 1 for n in per_src.values()), per_src
+        for src, sender in plane.senders.items():
+            if sender.transmitting is not None:
+                assert per_src.get(src, 0) == 1
+    assert plane._dst_of, "pressure never started a transfer"
+
+
+def test_per_tick_migration_budget():
+    backend = MockBackend(4, transfer_delay=0)
+    plane = make_plane(backend, two_stage_plan(4, boundary=16.0),
+                       ControlConfig(refinement="none",
+                                     max_migrations_per_tick=2))
+    reqs = [MockRequest(i, 20, 100) for i in range(12)]
+    for i, r in enumerate(reqs):
+        backend.dispatch(r, i % 2)
+    for _ in range(20):
+        before = plane.migrations
+        plane.begin_tick()
+        backend.step()                # on_instance_iteration -> handover
+        assert plane.migrations - before <= 2, "tick budget exceeded"
+
+
+def test_starvation_backpressure_does_not_livelock():
+    """Once a receiver blocks on a starved request (§4.4), the pump must
+    start that transfer as soon as the sender frees up — sender and
+    receiver must not wait on each other while offers pile up."""
+    backend = MockBackend(4, transfer_delay=6)
+    plane = make_plane(backend, two_stage_plan(4, boundary=16.0),
+                       ControlConfig(refinement="none"))
+    # long-lived crossers all on one source: slow transfers + repeated
+    # failed pulls trip the starvation threshold
+    reqs = [MockRequest(i, 20, 400) for i in range(6)]
+    for r in reqs:
+        backend.dispatch(r, 0)
+    for _ in range(100):
+        backend.step()
+        plane.pump_all()
+    migrated = {r[0] for r in backend.migration_starts}
+    assert len(migrated) == 6, \
+        f"only {sorted(migrated)} migrated — starvation wedged the sender"
+
+
+def test_request_never_double_offered():
+    """Pending-transfer tracking: while a transfer is negotiated or in
+    flight, handover and balance must not offer the request again."""
+    backend = MockBackend(4, transfer_delay=10)
+    plane = make_plane(backend, two_stage_plan(4, boundary=16.0),
+                       ControlConfig(refinement="none"))
+    reqs = [MockRequest(i, 20, 200) for i in range(4)]
+    for r in reqs:
+        plane.submit(r, r.req_id, r.length)
+    for _ in range(40):
+        backend.step()
+        plane.balance()
+        plane.pump_all()
+    starts = collections.Counter(r[0] for r in backend.migration_starts)
+    for req_id, n in starts.items():
+        assert n <= 1, f"req {req_id} transferred {n} times concurrently"
+
+
+# --------------------------------------------------------------------------
+# Sim-vs-server parity
+# --------------------------------------------------------------------------
+class FakeEngine:
+    """Deterministic, compute-free stand-in for `serving.engine.Engine`:
+    same lifecycle (admit → one token per step → finish), same accounting
+    surface, instant exports/imports."""
+
+    def __init__(self, eid, max_slots=8, token_budget=100_000,
+                 max_seq=100_000):
+        self.id = eid
+        self.max_slots = max_slots
+        self.token_budget = token_budget
+        self.max_seq = max_seq
+        self.slots = [None] * max_slots
+        self.waiting = deque()
+        self.steps = 0
+        self.tokens_out = 0
+
+    def active(self):
+        return [r for r in self.slots if r is not None]
+
+    def used_tokens(self):
+        return sum(r.length for r in self.active())
+
+    def queued_tokens(self):
+        return sum(len(r.prompt) for r in self.waiting)
+
+    def free_tokens(self):
+        return self.token_budget - self.used_tokens()
+
+    def load(self):
+        return float(self.used_tokens() + self.queued_tokens())
+
+    def request_view(self):
+        return [(float(len(r.prompt)), float(r.length))
+                for r in self.active()]
+
+    def can_accept(self, req):
+        if not any(s is None for s in self.slots):
+            return False
+        worst = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+        return self.used_tokens() + worst <= self.token_budget
+
+    def submit(self, req):
+        from repro.serving.request import State
+        req.state = State.WAITING
+        self.waiting.append(req)
+
+    def _place(self, req):
+        from repro.serving.request import State
+        slot = self.slots.index(None)
+        self.slots[slot] = req
+        req.state = State.RUNNING
+        req.engine_id = self.id
+        req.slot = slot
+        req.tokens_by_engine.setdefault(self.id, 0)
+        return slot
+
+    def _release(self, slot):
+        self.slots[slot] = None
+
+    def step(self):
+        from repro.serving.request import State
+        self.steps += 1
+        finished = []
+        while self.waiting and self.can_accept(self.waiting[0]):
+            req = self.waiting.popleft()
+            self._place(req)
+            req.generated.append(0)          # prefill's first token
+            req.first_token_step = self.steps
+            req.tokens_by_engine[self.id] += 1
+            self.tokens_out += 1
+        for slot, req in enumerate(list(self.slots)):
+            if req is None:
+                continue
+            req.generated.append(0)
+            req.tokens_by_engine[self.id] = \
+                req.tokens_by_engine.get(self.id, 0) + 1
+            self.tokens_out += 1
+            if req.done:
+                req.state = State.FINISHED
+                req.finish_step = self.steps
+                finished.append(req)
+                self._release(slot)
+        return finished
+
+    def export_slot(self, slot):
+        return self.slots[slot], None, 0.0
+
+    def evict_slot(self, slot):
+        self._release(slot)
+
+    def import_request(self, req, piece):
+        from repro.serving.request import State
+        if not self.can_accept(req):
+            return False
+        self._place(req)
+        return True
+
+
+def test_sim_and_server_make_identical_decisions():
+    """The acceptance test of ISSUE 2: both drivers of the shared core —
+    discrete-event simulator and step-synchronous server — produce the
+    same routing AND migration decision log on a fixed trace.
+
+    Setup keeps decisions timing-independent: deterministic rr handover
+    (no load-sensitive bids), frozen boundaries, spaced arrivals, uniform
+    growth until the stage boundary."""
+    from repro.configs import get_config
+    from repro.serving.request import ServeRequest
+    from repro.serving.server import MILSServer, ServerConfig
+    from repro.sim.cluster import CascadePolicy, Cluster, ClusterConfig
+    from repro.sim.costmodel import profile_from_config
+    from repro.sim.workload import Request
+
+    plan = two_stage_plan(4, boundary=32.0)
+    # 6 arrivals, every other one outgrows stage 0 (20 + 40 > 32)
+    lens = [(20, 40), (8, 4), (20, 40), (10, 6), (20, 40), (20, 40)]
+
+    # --- sim driver -------------------------------------------------------
+    trace = [Request(i, 8.0 * i, il, ol) for i, (il, ol) in enumerate(lens)]
+    policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
+    cluster = Cluster(profile_from_config(get_config("llama3.2-3b")),
+                      policy, ClusterConfig(num_instances=4, seed=0))
+    res = cluster.run(trace, duration=60.0)
+    assert len(res.completed) == len(trace)
+    sim_log = policy.plane.decisions
+
+    # --- server driver (fake engines, no JAX) -----------------------------
+    srv = MILSServer(None, None, plan, None,
+                     ServerConfig(refinement="none", balancing="rr", seed=0),
+                     engine_factory=lambda i: FakeEngine(i))
+    for i, (il, ol) in enumerate(lens):
+        srv.submit_at(ServeRequest(i, np.zeros(il, np.int32), ol),
+                      step=8 * i)
+    fin = srv.run(max_steps=400)
+    assert len(fin) == len(lens)
+    srv_log = srv.plane.decisions
+
+    routes = lambda log: [d for d in log if d[0] == "route"]
+    migs = lambda log: [d for d in log if d[0] == "migrate"]
+    assert routes(sim_log) == routes(srv_log)
+    assert migs(sim_log) == migs(srv_log)
+    assert len(migs(sim_log)) == 4, "every boundary-crosser migrates once"
+
+
+def test_server_conserves_requests_with_fake_engines():
+    """Open-loop server over the mock engine: conservation + streaming."""
+    from repro.serving.request import ServeRequest
+    from repro.serving.server import MILSServer, ServerConfig
+
+    tokens = []
+    srv = MILSServer(None, None, two_stage_plan(4, boundary=24.0), None,
+                     ServerConfig(refinement="none"),
+                     engine_factory=lambda i: FakeEngine(i),
+                     on_token=lambda r, t: tokens.append(r.req_id))
+    rng = np.random.default_rng(3)
+    n = 12
+    for i in range(n):
+        srv.submit_at(ServeRequest(i, np.zeros(int(rng.integers(4, 30)),
+                                               np.int32),
+                                   int(rng.integers(4, 40))),
+                      step=int(rng.integers(0, 20)))
+    fin = srv.run(max_steps=300)
+    assert len(fin) == n
+    assert len(set(r.req_id for r in fin)) == n, "a request finished twice"
+    per_req = collections.Counter(tokens)
+    for r in fin:
+        assert per_req[r.req_id] == len(r.generated), "streaming missed tokens"

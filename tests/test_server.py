@@ -75,6 +75,51 @@ def test_round_robin_and_least_loaded_policies(setup, rng):
         assert len(fin) == 4
 
 
+def test_open_loop_arrivals_stream_and_tail_metrics(setup, rng):
+    cfg, model, params = setup
+    tokens = []
+    srv = MILSServer(model, params, _plan(4), _qoe(),
+                     ServerConfig(policy="cascade", seed=0),
+                     max_slots=3, max_seq=96,
+                     on_token=lambda r, t: tokens.append((r.req_id, t)))
+    reqs = _reqs(rng, cfg, 6)
+    for i, r in enumerate(reqs):
+        srv.submit_at(r, step=3 * i)
+    fin = srv.run(max_steps=400)
+    assert len(fin) == 6
+    # arrival schedule honored: nothing starts before its arrival step
+    for r in fin:
+        assert r.arrival_step >= 0 and r.first_token_step > r.arrival_step
+    # every generated token streamed exactly once
+    assert len(tokens) == sum(len(r.generated) for r in fin)
+    s = srv.summary()
+    for key in ("ttft_steps_p50", "ttft_steps_p95", "ttft_steps_p99",
+                "e2e_steps_p50", "e2e_steps_p95", "e2e_steps_p99"):
+        assert key in s and s[key] >= 0
+    assert s["ttft_steps_p50"] <= s["ttft_steps_p99"]
+    # per-stage-pair migration counts sum to the total
+    assert sum(v for k, v in s.items()
+               if k.startswith("migrations_s")) == s["migrations"]
+
+
+@pytest.mark.parametrize("refinement,balancing",
+                         [("quantity", "full"), ("memory", "inter-stage"),
+                          ("none", "rr")])
+def test_server_runs_ablation_knobs(setup, rng, refinement, balancing):
+    """Fig. 15/16 ablations on the real-engine path (previously sim-only)."""
+    cfg, model, params = setup
+    srv = MILSServer(model, params, _plan(4), _qoe(),
+                     ServerConfig(policy="cascade", refinement=refinement,
+                                  balancing=balancing, refine_every=4),
+                     max_slots=3, max_seq=96)
+    fin = srv.run(_reqs(rng, cfg, 6), max_steps=400)
+    assert len(fin) == 6
+    bounds = srv.stage_bounds
+    assert bounds[0][0] == 0.0 and bounds[-1][1] == float("inf")
+    if refinement == "none":
+        assert bounds[0][1] == 48.0, "refinement=none must freeze boundaries"
+
+
 def test_boundaries_stay_monotone_under_refinement(setup, rng):
     cfg, model, params = setup
     srv = MILSServer(model, params, _plan(4), _qoe(),
