@@ -60,6 +60,37 @@ def ragged_blocks(lengths: Sequence[int], block_s: int) -> int:
     return sum(math.ceil(max(l, 1) / block_s) for l in lengths)
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (bucketing policy shared by the flat
+    grid, the engine's table width, and prefill prompt padding)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def flat_grid_blocks(lengths: Sequence[int], block_s: int,
+                     bucketed: bool = True) -> int:
+    """Grid steps the work-flattened backend executes per kv head: the
+    real Σ_b ceil(L_b/BS) work items, padded to a pow2 bucket (padding
+    items skip compute but still take a grid step — the flat analogue of
+    SKIP_OVERHEAD_S, bounded at < 2x by the bucketing)."""
+    n = ragged_blocks(lengths, block_s)
+    return pow2_bucket(n) if (bucketed and n) else n
+
+
+def decode_attn_time_flat_s(lengths: Sequence[int], spec: AttnSpec) -> float:
+    """Decode-attention wall time for the work-flattened grid: unlike the
+    ragged (B, Hkv, NBT) grid, no request pays another's block count — the
+    only overhead is the pow2 bucket's padding tail."""
+    if not len(lengths):
+        return 0.0
+    comp = ragged_blocks(lengths, spec.block_s)
+    skipped = flat_grid_blocks(lengths, spec.block_s) - comp
+    return spec.num_kv_heads * (comp * block_time_s(spec)
+                                + skipped * SKIP_OVERHEAD_S)
+
+
 def decode_attn_time_s(lengths: Sequence[int], spec: AttnSpec,
                        ragged: bool = False,
                        pad_to: int | None = None) -> float:

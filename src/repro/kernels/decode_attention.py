@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,42 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 DEFAULT_BLOCK = 512
+
+
+def _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                        start, length):
+    """ONE online-softmax KV-block step, shared by all three decode
+    kernels: q [G, Dh] vs. this grid step's KV block [BS, Dh], masked at
+    ``length``, accumulated into the persistent (m, l, acc) scratch."""
+    q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
+    s = s / math.sqrt(q.shape[-1])
+    idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < length, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                            # [G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                 # [G, BS]
+    l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+
+def _flash_init(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _flash_finish(o_ref, l_ref, acc_ref):
+    l = l_ref[:, 0]
+    safe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
 
 
 def _decode_kernel(lengths_ref,          # scalar prefetch [B]
@@ -49,33 +86,14 @@ def _decode_kernel(lengths_ref,          # scalar prefetch [B]
     j = pl.program_id(2)
     nj = pl.num_programs(2)
 
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    pl.when(j == 0)(lambda: _flash_init(m_ref, l_ref, acc_ref))
 
     length = lengths_ref[b]
     start = j * block_s
 
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
-        k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
-        v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
-        s = s / math.sqrt(q.shape[-1])
-        idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(idx < length, s, NEG_INF)
-
-        m_prev = m_ref[:, 0]                            # [G]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])                 # [G, BS]
-        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
-        acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
-        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+        _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                            start, length)
 
     if ragged:
         # skip the MXU work for blocks entirely beyond this request's length
@@ -83,11 +101,7 @@ def _decode_kernel(lengths_ref,          # scalar prefetch [B]
     else:
         _compute()
 
-    @pl.when(j == nj - 1)
-    def _finish():
-        l = l_ref[:, 0]
-        safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+    pl.when(j == nj - 1)(lambda: _flash_finish(o_ref, l_ref, acc_ref))
 
 
 def _paged_decode_kernel(lengths_ref,        # scalar prefetch [B]
@@ -108,41 +122,142 @@ def _paged_decode_kernel(lengths_ref,        # scalar prefetch [B]
     j = pl.program_id(2)
     nj = pl.num_programs(2)
 
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+    pl.when(j == 0)(lambda: _flash_init(m_ref, l_ref, acc_ref))
 
     length = lengths_ref[b]
     start = j * block_s
+    pl.when(start < length)(
+        lambda: _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref,
+                                    acc_ref, start, length))
+    pl.when(j == nj - 1)(lambda: _flash_finish(o_ref, l_ref, acc_ref))
 
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
-        k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
-        v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
-        s = s / math.sqrt(q.shape[-1])
-        idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(idx < length, s, NEG_INF)
 
-        m_prev = m_ref[:, 0]                            # [G]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[:, None])                 # [G, BS]
-        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
-        acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
-        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+def _flat_paged_kernel(wreq_ref, wblk_ref,   # scalar prefetch [W], [W]
+                       lengths_ref,          # scalar prefetch [B]
+                       bt_ref,               # scalar prefetch [B, NBT]
+                       q_ref,                # [1, 1, G, Dh]
+                       k_ref, v_ref,         # [1, BS, 1, Dh] (one phys block)
+                       o_ref,                # [1, 1, G, Dh]
+                       m_ref, l_ref, acc_ref,  # VMEM scratch
+                       *, block_s: int):
+    """Work-flattened paged decode attention: grid step (h, w) processes
+    flat work item ``w`` = (request ``wreq[w]``, logical block ``wblk[w]``).
+    The work list is exactly the Σ_b ceil(L_b/BS) real blocks (sorted by
+    request, blocks in order) padded to a static bucket, so — unlike the
+    (B, Hkv, NBT) grid — short requests never burn skipped grid steps up
+    to the batch max NBT.
 
-    pl.when(start < length)(_compute)
+    Request boundaries are detected from the prefetched work list itself:
+    the accumulators re-init on the first item of a request and the output
+    row is written on its last. Padding items alias the *last* real
+    request with sentinel block index NBT (so ``start >= length`` skips
+    the MXU work, the accumulators are untouched, and the final write is
+    an idempotent re-write of that request's row — never a new row)."""
+    w = pl.program_id(1)
+    nw = pl.num_programs(1)
+    b = wreq_ref[w]
+    j = wblk_ref[w]
+    prev_b = wreq_ref[jnp.maximum(w - 1, 0)]
+    next_b = wreq_ref[jnp.minimum(w + 1, nw - 1)]
+    first = (w == 0) | (prev_b != b)
+    last = (w == nw - 1) | (next_b != b)
 
-    @pl.when(j == nj - 1)
-    def _finish():
-        l = l_ref[:, 0]
-        safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+    pl.when(first)(lambda: _flash_init(m_ref, l_ref, acc_ref))
+
+    length = lengths_ref[b]
+    start = j * block_s
+    pl.when(start < length)(
+        lambda: _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref,
+                                    acc_ref, start, length))
+    pl.when(last)(lambda: _flash_finish(o_ref, l_ref, acc_ref))
+
+
+def flat_work_list(lengths, nbt: int, block_s: int, num_work: int):
+    """Flat (request, logical block) work list for the flattened grid —
+    pure jnp, so the serving engine builds it on device every step.
+
+    Items ``[0, Σ_b ceil(L_b/BS))`` enumerate every request's real blocks
+    (request-major, blocks in order); the tail up to ``num_work`` is
+    padding aliasing the last request with ``nbt`` (one past the table) as
+    its block index, which the kernel's ``start < length`` guard always
+    skips. Caller guarantees ``num_work >= Σ_b ceil(L_b/BS)``.
+    Returns int32 ``(work_req [num_work], work_blk [num_work])``."""
+    B = lengths.shape[0]
+    nb = jnp.maximum(-(-lengths // block_s), 0).astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(nb)])
+    total = offs[-1]
+    w = jnp.arange(num_work, dtype=jnp.int32)
+    b = jnp.clip(jnp.searchsorted(offs, w, side="right") - 1, 0, B - 1)
+    b = b.astype(jnp.int32)
+    j = w - offs[b]
+    # last request with any real work (argmax of reversed has-work mask);
+    # padding must alias it so the output index map never leaves its row
+    last_b = (B - 1 - jnp.argmax((nb > 0)[::-1])).astype(jnp.int32)
+    pad = w >= total
+    return (jnp.where(pad, last_b, b),
+            jnp.where(pad, jnp.int32(nbt), j))
+
+
+@functools.partial(jax.jit, static_argnames=("num_work", "interpret"))
+def paged_decode_attention_flat(q, k_pool, v_pool, block_tables, lengths, *,
+                                num_work: Optional[int] = None,
+                                interpret: bool = False):
+    """Work-flattened variant of :func:`paged_decode_attention`.
+
+    Same operands, same numerics, different grid: ``(Hkv, num_work)``
+    where ``num_work`` is a **static** bucket >= Σ_b ceil(L_b/BS) (callers
+    round up to a power of two so recompiles stay O(log total-work); None
+    falls back to the worst case B·NBT). The old grid executes
+    ``B · Hkv · NBT`` steps and relies on ``pl.when`` to skip the padded
+    tail of every short request; this grid executes ``Hkv · num_work``
+    steps total — the heterogeneity tax is gone at the grid level, not
+    just at the MXU level (DESIGN.md §Decode hot path).
+    """
+    B, H, Dh = q.shape
+    NB, BS, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    G = H // Hkv
+    NBT = block_tables.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    assert NBT >= 1
+    W = num_work if num_work is not None else B * NBT
+    assert W >= 1
+    qg = q.reshape(B, Hkv, G, Dh)
+    work_req, work_blk = flat_work_list(lengths, NBT, BS, W)
+
+    grid = (Hkv, W)
+    kernel = functools.partial(_flat_paged_kernel, block_s=BS)
+
+    def q_map(h, w, wreq, wblk, lens, bt):
+        del wblk, lens, bt
+        return (wreq[w], h, 0, 0)
+
+    def kv_map(h, w, wreq, wblk, lens, bt):
+        del lens
+        # padding items carry block index NBT; clamp for the table lookup —
+        # whatever block it DMAs is skipped by the kernel's length guard
+        return (bt[wreq[w], jnp.minimum(wblk[w], NBT - 1)], 0, h, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh), q_map),
+                pl.BlockSpec((1, BS, 1, Dh), kv_map),
+                pl.BlockSpec((1, BS, 1, Dh), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dh), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((G, 128), jnp.float32),   # m (lane-replicated)
+                pltpu.VMEM((G, 128), jnp.float32),   # l
+                pltpu.VMEM((G, Dh), jnp.float32),    # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(work_req, work_blk, lengths, block_tables, qg, k_pool, v_pool)
+    return out.reshape(B, H, Dh)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -214,8 +329,16 @@ def decode_attention(q, k, v, lengths, *, block_s: int = DEFAULT_BLOCK,
     B, H, Dh = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
-    assert H % Hkv == 0 and S % block_s == 0, (H, Hkv, S, block_s)
-    nj = S // block_s
+    assert H % Hkv == 0, (H, Hkv)
+    # monolithic caches come in any size: clamp the block to the sequence
+    # and pad the sequence up to a whole number of blocks (padded rows are
+    # masked by the length guard, which never exceeds S)
+    block_s = min(block_s, S)
+    nj = -(-S // block_s)
+    if nj * block_s != S:
+        pad = ((0, 0), (0, nj * block_s - S), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
     qg = q.reshape(B, Hkv, G, Dh)
 
     grid = (B, Hkv, nj)

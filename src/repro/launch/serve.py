@@ -47,6 +47,13 @@ def main() -> None:
                     choices=["full", "inter-stage", "rr"])
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-slots", type=int, default=3)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["dense", "grid", "flat"],
+                    help="paged decode attention backend "
+                         "(default: auto — flat kernel on TPU, dense XLA "
+                         "elsewhere; see DESIGN.md §Decode hot path)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="use the legacy host-driven engine step loop")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="workload arrivals/s, replayed at 1 step/s")
     ap.add_argument("--seed", type=int, default=0)
@@ -61,7 +68,9 @@ def main() -> None:
                      ServerConfig(policy=args.policy,
                                   refinement=args.refinement,
                                   balancing=args.balancing, seed=args.seed),
-                     max_slots=args.max_slots, max_seq=args.max_seq)
+                     max_slots=args.max_slots, max_seq=args.max_seq,
+                     attn_backend=args.attn_backend,
+                     device_resident=False if args.host_loop else None)
     # the same ShareGPT-shaped trace the simulator runs, arrival times
     # mapped to server steps, lengths capped to the reduced model
     spec = WorkloadSpec(rate=args.arrival_rate,

@@ -11,6 +11,7 @@ this is what ``serve_step`` lowers in the multi-pod dry-run.
 from __future__ import annotations
 
 import math
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -19,6 +20,29 @@ import jax.numpy as jnp
 from repro.models.common import ModelConfig, dense_init
 
 NEG_INF = -1e30
+
+# Paged decode attention backends (DESIGN.md §Decode hot path):
+#   dense — XLA gather of pool[block_tables] + masked SDPA. Materializes a
+#           [B, NBT·BS, Hkv, Dh] copy per layer per step; CPU/debug fallback.
+#   grid  — Pallas kernel, grid (B, Hkv, NBT): no gather, but every request
+#           pays max-NBT grid steps (skipped blocks still cost a grid step).
+#   flat  — Pallas kernel over a flat work list of Σ_b ceil(L_b/BS) items:
+#           no gather AND no per-request padding at the grid level.
+PAGED_BACKENDS = ("dense", "grid", "flat")
+
+
+def resolve_paged_backend(backend: Optional[str] = None):
+    """(backend, interpret) for this process. Explicit arg wins, then the
+    REPRO_PAGED_ATTN env var, then auto: the flat Pallas kernel on TPU,
+    the dense XLA path elsewhere (Pallas off-TPU would need interpret
+    mode, which is for validation, not speed). Asking for a kernel
+    backend off-TPU gets interpret=True so it still runs."""
+    choice = backend or os.environ.get("REPRO_PAGED_ATTN", "auto")
+    on_tpu = jax.default_backend() == "tpu"
+    if choice == "auto":
+        choice = "flat" if on_tpu else "dense"
+    assert choice in PAGED_BACKENDS, f"unknown paged backend {choice!r}"
+    return choice, (choice != "dense" and not on_tpu)
 
 
 # --------------------------------------------------------------------------
@@ -301,18 +325,31 @@ def paged_gather(pool, block_tables):
 
 
 def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
-                           block_tables, pos, *, mrope_positions=None):
+                           block_tables, pos, *, mrope_positions=None,
+                           attn_backend: str = "dense",
+                           attn_interpret: bool = False,
+                           attn_num_work: Optional[int] = None):
     """Block-table variant of :func:`attention_decode`.
 
     x [B, 1, D]; pool_l leaves [NB, BS, Hkv, Dh] — ONE layer's slice of the
     engine's global block pool; block_tables [B, NBT] int32 physical block
-    ids (padded rows arbitrary); pos [B] int32 tokens already cached.
+    ids (padded rows arbitrary); pos [B] int32 tokens already cached
+    (``pos = -1`` marks a dead batch slot: its write lands in the padding
+    row of its table and its attention length is 0).
 
     Writes the new token's K/V at physical ``(table[pos//BS], pos%BS)``
     and attends over the request's blocks only. Requests never share
     blocks, so the batched scatter has no duplicate indices. Full
     attention only — the sliding-window ring layout keeps the monolithic
     path (as do ssm/rwkv recurrent states).
+
+    ``attn_backend`` (static — the serving engine bakes it in at jit
+    time, see :func:`resolve_paged_backend`) picks how the attention
+    itself runs. The kernel backends ("grid" / "flat") stream pool blocks
+    HBM→VMEM by table indirection and never materialize the old
+    ``[B, NBT·BS, Hkv, Dh]`` per-layer gather; "flat" additionally
+    flattens the grid to ``attn_num_work`` (>= Σ_b ceil(L_b/BS)) work
+    items so short requests stop paying the batch-max block count.
     """
     assert not cfg.sliding_window, "paged decode is full-attention only"
     B = x.shape[0]
@@ -333,11 +370,27 @@ def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
     new_k = pool_l.k.at[blk, off].set(k[:, 0].astype(pool_l.k.dtype))
     new_v = pool_l.v.at[blk, off].set(v[:, 0].astype(pool_l.v.dtype))
 
-    k_seq = paged_gather(new_k, block_tables)    # [B, NBT*BS, Hkv, Dh]
-    v_seq = paged_gather(new_v, block_tables)
-    kpos = jnp.arange(k_seq.shape[1])[None, :]
-    mask = (kpos <= pos[:, None])[:, None, None, None, :]
-    out = _gqa_sdpa(q, k_seq, v_seq, mask)
+    if attn_backend != "dense":
+        # Pallas path: the pool stays put; the kernel chases the block
+        # table. lengths = pos + 1 (dead slots: 0 -> zero work items).
+        from repro.kernels.decode_attention import (
+            paged_decode_attention, paged_decode_attention_flat)
+        lengths = pos + 1
+        if attn_backend == "flat":
+            o = paged_decode_attention_flat(
+                q[:, 0], new_k, new_v, block_tables, lengths,
+                num_work=attn_num_work, interpret=attn_interpret)
+        else:
+            o = paged_decode_attention(
+                q[:, 0], new_k, new_v, block_tables, lengths,
+                interpret=attn_interpret)
+        out = o[:, None].astype(q.dtype)         # [B, 1, H, Dh]
+    else:
+        k_seq = paged_gather(new_k, block_tables)   # [B, NBT*BS, Hkv, Dh]
+        v_seq = paged_gather(new_v, block_tables)
+        kpos = jnp.arange(k_seq.shape[1])[None, :]
+        mask = (kpos <= pos[:, None])[:, None, None, None, :]
+        out = _gqa_sdpa(q, k_seq, v_seq, mask)
     return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
 
 

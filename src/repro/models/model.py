@@ -41,6 +41,12 @@ class Model:
     #       -> (logits, pool)
     init_paged_cache: Optional[Callable[..., Any]] = None
     decode_step_paged: Optional[Callable[..., Any]] = None
+    # Bucketed prefill (device-resident engines): tokens padded to a pow2
+    # bucket, true_len a traced scalar — one compile per bucket instead of
+    # one per distinct prompt length.
+    #   prefill_bucketed(params, batch, true_len)
+    #       -> (last-token logits [B, V], prompt-cache piece [L, B, P, ...])
+    prefill_bucketed: Optional[Callable[..., Any]] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -112,9 +118,20 @@ def _decoder_model(cfg: ModelConfig) -> Model:
     def init_paged_cache(num_blocks: int, block_size: int):
         return transformer.init_paged_cache(cfg, num_blocks, block_size)
 
+    def prefill_bucketed(params, batch, true_len):
+        tokens = batch["tokens"]
+        logits, caches, _ = transformer.forward_full(
+            params, cfg, tokens,
+            vision_embeds=batch.get("vision_embeds"),
+            vision_mask=batch.get("vision_mask"),
+            mrope_positions=batch.get("mrope_positions"),
+            return_cache=True, last_index=true_len - 1)
+        return logits[:, 0], caches
+
     return Model(cfg, init, loss, prefill, decode_step, init_cache,
                  init_paged_cache=init_paged_cache,
-                 decode_step_paged=decode_step_paged)
+                 decode_step_paged=decode_step_paged,
+                 prefill_bucketed=prefill_bucketed)
 
 
 # --------------------------------------------------------------------------

@@ -114,8 +114,15 @@ def unembed(p, cfg: ModelConfig, x):
 # --------------------------------------------------------------------------
 def forward_full(p, cfg: ModelConfig, tokens, *, vision_embeds=None,
                  vision_mask=None, mrope_positions=None, return_cache=False,
-                 remat: bool = False, last_only: bool = False):
-    """Train / prefill pass. Returns (logits, cache|None, aux)."""
+                 remat: bool = False, last_only: bool = False,
+                 last_index=None):
+    """Train / prefill pass. Returns (logits, cache|None, aux).
+
+    ``last_index`` (traced scalar) unembeds ONLY position ``last_index``
+    — the bucketed-prefill path, where the prompt is padded to a pow2
+    length and the true last token sits mid-sequence. Causality makes the
+    K/V rows and logits at positions < true length independent of the
+    padding tail."""
     x = embed_tokens(p, cfg, tokens, vision_embeds, vision_mask)
     B, T = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
@@ -131,7 +138,9 @@ def forward_full(p, cfg: ModelConfig, tokens, *, vision_embeds=None,
     body_fn = jax.checkpoint(body) if remat else body
     (x, aux), caches = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), p["layers"])
     x = rms_norm(x, p["ln_f"], cfg.norm_eps)
-    if last_only:   # serving prefill needs next-token logits only
+    if last_index is not None:    # bucketed prefill: true last position
+        x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+    elif last_only:   # serving prefill needs next-token logits only
         x = x[:, -1:]
     logits = unembed(p, cfg, x)
     return logits, (caches if return_cache else None), aux
@@ -158,21 +167,32 @@ def forward_decode(p, cfg: ModelConfig, token, cache: KVCache, pos,
 
 
 def block_decode_paged(pl, cfg: ModelConfig, x, pool_l: KVCache,
-                       block_tables, pos, mrope_positions=None):
+                       block_tables, pos, mrope_positions=None,
+                       attn_backend: str = "dense",
+                       attn_interpret: bool = False,
+                       attn_num_work=None):
     h = rms_norm(x, pl["ln_attn"], cfg.norm_eps)
     a, new_pool = attn.attention_decode_paged(pl["attn"], cfg, h, pool_l,
                                               block_tables, pos,
-                                              mrope_positions=mrope_positions)
+                                              mrope_positions=mrope_positions,
+                                              attn_backend=attn_backend,
+                                              attn_interpret=attn_interpret,
+                                              attn_num_work=attn_num_work)
     x = x + a
     m, aux = _mlp_part(pl, cfg, x)
     return x + m, new_pool, aux
 
 
 def forward_decode_paged(p, cfg: ModelConfig, token, pool: KVCache,
-                         block_tables, pos, *, mrope_positions=None):
+                         block_tables, pos, *, mrope_positions=None,
+                         attn_backend: str = "dense",
+                         attn_interpret: bool = False,
+                         attn_num_work=None):
     """token [B] int32; pool leaves [L, NB, BS, Hkv, Dh] (global block
-    pool); block_tables [B, NBT] int32; pos [B] int32.
-    Returns (logits [B, V], new_pool)."""
+    pool); block_tables [B, NBT] int32; pos [B] int32 (-1 = dead slot).
+    Returns (logits [B, V], new_pool). The attn_* knobs are static
+    backend selectors (DESIGN.md §Decode hot path), baked in by the
+    engine via functools.partial before jit."""
     x = embed_tokens(p, cfg, token[:, None])
     if cfg.use_mrope and mrope_positions is None:
         B = token.shape[0]
@@ -182,7 +202,10 @@ def forward_decode_paged(p, cfg: ModelConfig, token, pool: KVCache,
         pl, pool_l = layer
         x, new_pool_l, _ = block_decode_paged(pl, cfg, x, pool_l,
                                               block_tables, pos,
-                                              mrope_positions)
+                                              mrope_positions,
+                                              attn_backend=attn_backend,
+                                              attn_interpret=attn_interpret,
+                                              attn_num_work=attn_num_work)
         return x, new_pool_l
 
     x, new_pool = jax.lax.scan(body, x, (p["layers"], pool))

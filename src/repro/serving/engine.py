@@ -21,10 +21,24 @@ single batched decode. Migration exports a request's KV trimmed to its
 actual length (paged: a gather of its blocks) — the wire format is the
 same contiguous ``[L, 1, length, ...]`` piece for both layouts, so mixed
 clusters interoperate (DESIGN.md §Migration wire format).
+
+**Device-resident decode hot loop** (paged engines, the default —
+DESIGN.md §Decode hot path): block tables, slot lengths, and last tokens
+live as device arrays (pow2-capped width growth), sampling is a fused
+on-device argmax over the whole ``max_slots``-wide batch, and every
+``step()`` performs exactly ONE device→host transfer — the sampled
+tokens, routed through :func:`d2h` so tests can count it. ``step(burst=n)``
+fuses up to ``n`` consecutive iterations into one ``lax.scan``
+micro-batch (the fusion never crosses a count/capacity finish boundary,
+so continuous-batching admission is not delayed). Prompt prefills are
+padded to pow2 buckets so compiles stay O(log max_seq), not O(distinct
+prompt lengths). ``device_resident=False`` keeps the original host-driven
+loop — the bit-parity reference.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -34,18 +48,34 @@ import numpy as np
 
 from repro.core.migration import (gather_kv_blocks, kv_bytes,
                                   scatter_kv_blocks)
+from repro.kernels.cost import pow2_bucket
+from repro.models.attention import resolve_paged_backend
 from repro.models.model import Model
 from repro.serving.block_pool import BlockAllocator, blocks_for
 from repro.serving.request import ServeRequest, State
 
 DEFAULT_BLOCK_SIZE = 16
 
+# Running count of device->host synchronizations performed by all engines
+# in this process (bench_decode_hotloop reads it; tests monkeypatch d2h).
+D2H_CALLS = 0
 
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+
+def d2h(x) -> np.ndarray:
+    """The engine's ONLY device→host synchronization point. Every token
+    that reaches Python crosses here, so `D2H_CALLS` (and a test shim
+    monkeypatching this function) measures host round-trips exactly."""
+    global D2H_CALLS
+    D2H_CALLS += 1
+    return np.asarray(x)
+
+
+_next_pow2 = pow2_bucket     # ONE bucketing policy (kernels/cost.py)
+
+
+def _pow2_floor(n: int) -> int:
+    assert n >= 1
+    return 1 << (n.bit_length() - 1)
 
 
 class Engine:
@@ -53,7 +83,9 @@ class Engine:
                  max_slots: int = 8, max_seq: int = 512,
                  token_budget: Optional[int] = None,
                  paged: Optional[bool] = None,
-                 block_size: int = DEFAULT_BLOCK_SIZE):
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 device_resident: Optional[bool] = None,
+                 attn_backend: Optional[str] = None):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
         self.id = engine_id
@@ -74,12 +106,39 @@ class Engine:
             # can't back any request (mirrors sim.Instance)
             self.token_budget = self.num_blocks * block_size
             self.allocator = BlockAllocator(self.num_blocks, block_size)
-            self.cache = model.init_paged_cache(self.num_blocks, block_size)
+            # +1 garbage block (id num_blocks, never allocated): dead batch
+            # slots and padded table rows write/read there by construction,
+            # so the fixed-shape device loop cannot corrupt live blocks
+            self.garbage_block = self.num_blocks
+            self.cache = model.init_paged_cache(self.num_blocks + 1,
+                                                block_size)
             self.block_tables: List[List[int]] = [[] for _ in range(max_slots)]
-            self._bytes_per_block = kv_bytes(self.cache) / self.num_blocks
-            self._decode_paged = jax.jit(model.decode_step_paged)
+            self._bytes_per_block = kv_bytes(self.cache) / (self.num_blocks + 1)
+            self.device_resident = (device_resident
+                                    if device_resident is not None else True)
+            self.attn_backend, self.attn_interpret = \
+                resolve_paged_backend(attn_backend)
+            if self.device_resident:
+                assert model.prefill_bucketed is not None, \
+                    "device-resident loop needs Model.prefill_bucketed"
+                self._nbt_cap = 1               # device table width (pow2)
+                self._dev_bt = jnp.full((max_slots, 1), self.garbage_block,
+                                        jnp.int32)
+                self._dev_len = jnp.zeros((max_slots,), jnp.int32)
+                self._dev_tok = jnp.zeros((max_slots,), jnp.int32)
+                self._burst_fns: Dict[Tuple[int, int], Callable] = {}
+                self._prefill_bucketed = jax.jit(model.prefill_bucketed)
+                self._pending_first: List[Tuple[ServeRequest, jnp.ndarray]] = []
+            else:
+                # the host loop honors the backend too (attn_num_work
+                # stays None -> the flat wrapper's B·NBT worst case)
+                self._decode_paged = jax.jit(functools.partial(
+                    model.decode_step_paged,
+                    attn_backend=self.attn_backend,
+                    attn_interpret=self.attn_interpret))
         else:
             self.block_size = 0
+            self.device_resident = False
             self.cache = model.init_cache(max_slots, max_seq)
             self._bytes_per_slot = kv_bytes(self.cache) / max_slots
             self._decode = jax.jit(model.decode_step)
@@ -90,6 +149,10 @@ class Engine:
         self.steps = 0
         self.tokens_out = 0
         self.peak_kv_bytes = 0.0
+        # last decode's grid accounting (bench_decode_hotloop reads it):
+        # flat_items = work items the flat grid runs (pow2 bucket),
+        # real_items = Σ_b ceil(L_b/BS), padded_items = B·max_b ceil(L_b/BS)
+        self.last_grid: Dict[str, int] = {}
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("cache_len",))
 
@@ -204,7 +267,32 @@ class Engine:
             self.allocator.reserve(blocks_for(worst, self.block_size))
         self.slot_reserved[slot] = worst
 
+    # ---- device-mirror helpers (paged + device_resident) ---------------------
+    def _ensure_nbt_cap(self, need: int) -> None:
+        """Grow the device block-table width to a pow2 >= need (capped at
+        the max_seq block count) — O(log max_seq) recompiles total."""
+        if need <= self._nbt_cap:
+            return
+        new = min(_next_pow2(need), blocks_for(self.max_seq, self.block_size))
+        assert new >= need
+        self._dev_bt = jnp.pad(self._dev_bt,
+                               ((0, 0), (0, new - self._nbt_cap)),
+                               constant_values=self.garbage_block)
+        self._nbt_cap = new
+
+    def _dev_set_table(self, slot: int, ids: List[int]) -> None:
+        row = np.full((self._nbt_cap,), self.garbage_block, np.int32)
+        row[:len(ids)] = ids
+        self._dev_bt = self._dev_bt.at[slot].set(jnp.asarray(row))
+
+    def _dev_clear_slot(self, slot: int) -> None:
+        self._dev_bt = self._dev_bt.at[slot].set(self.garbage_block)
+        self._dev_len = self._dev_len.at[slot].set(0)
+
     def _prefill_into_slot(self, req: ServeRequest, slot: int) -> None:
+        if self.paged and self.device_resident:
+            self._prefill_into_slot_device(req, slot)
+            return
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
         self._reserve(req, slot)
         if self.paged:
@@ -222,7 +310,7 @@ class Engine:
                                           cache_len=self.max_seq)
             self.cache = _write_slot(self.cache, piece, slot)
         vec = logits if logits.ndim == 1 else logits[0]
-        tok = int(jnp.argmax(vec))
+        tok = int(d2h(jnp.argmax(vec)))
         req.generated.append(tok)
         req.first_token_step = self.steps
         req.state = State.RUNNING
@@ -233,9 +321,57 @@ class Engine:
         self.slot_len[slot] = req.length
         self.tokens_out += 1
 
+    def _prefill_into_slot_device(self, req: ServeRequest, slot: int) -> None:
+        """Bucketed prefill with DEFERRED first-token sync: the prompt is
+        padded to a pow2 length (one compile per bucket), the sampled
+        first token stays on device (in ``_dev_tok`` and
+        ``_pending_first``) and reaches ``generated`` at the step's single
+        ``d2h``. All bookkeeping here is count-based, so nothing needs
+        the token's value."""
+        self._reserve(req, slot)
+        T = len(req.prompt)
+        P = min(_next_pow2(T), _next_pow2(self.max_seq))
+        toks = np.zeros((1, P), np.int32)
+        toks[0, :T] = req.prompt
+        logits, piece = self._prefill_bucketed(
+            self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(T))
+        piece = jax.tree.map(lambda a: a[:, :, :T], piece)
+        ids = self.allocator.allocate(blocks_for(T, self.block_size))
+        self.block_tables[slot] = ids
+        self.cache = _write_prompt_blocks(self.cache, piece, ids,
+                                          self.block_size)
+        tok_dev = jnp.argmax(logits[0]).astype(jnp.int32)
+        self._ensure_nbt_cap(len(ids))
+        self._dev_set_table(slot, ids)
+        self._dev_len = self._dev_len.at[slot].set(T + 1)
+        self._dev_tok = self._dev_tok.at[slot].set(tok_dev)
+        self._pending_first.append((req, tok_dev))
+        req.first_token_step = self.steps
+        req.state = State.RUNNING
+        req.engine_id = self.id
+        req.slot = slot
+        req.tokens_by_engine[self.id] = req.tokens_by_engine.get(self.id, 0) + 1
+        self.slots[slot] = req
+        self.slot_len[slot] = T + 1
+        self.tokens_out += 1
+
     # ---- one continuous-batching iteration ----------------------------------
-    def step(self) -> List[ServeRequest]:
-        """Returns requests that finished this step."""
+    def step(self, burst: int = 1) -> List[ServeRequest]:
+        """Advance the engine and return requests that finished.
+
+        ``burst > 1`` (device-resident paged engines only) fuses up to
+        that many consecutive decode iterations into one ``lax.scan``
+        micro-batch with a single device→host transfer; the fusion is
+        clamped so no request can hit its token-count or max_seq finish
+        boundary before the last fused iteration, hence admission is
+        never starved (capacity only frees at a finish)."""
+        if self.paged and self.device_resident:
+            return self._step_device(burst)
+        return self._step_host()
+
+    def _step_host(self) -> List[ServeRequest]:
+        """The original host-driven loop (monolithic engines, and paged
+        with ``device_resident=False`` — the bit-parity reference)."""
         self.steps += 1
         finished: List[ServeRequest] = []
         for r in self._admit():
@@ -257,8 +393,9 @@ class Engine:
                 logits = self._decode_paged_live(live, last_tok, pos)
             else:
                 logits = self._decode_mono_live(live, last_tok, pos)
+            toks = d2h(jnp.argmax(logits, axis=-1))   # one transfer, fused
             for j, (i, r) in enumerate(live):
-                tok = int(jnp.argmax(logits[j]))
+                tok = int(toks[j])
                 r.generated.append(tok)
                 r.tokens_by_engine[self.id] = \
                     r.tokens_by_engine.get(self.id, 0) + 1
@@ -273,13 +410,155 @@ class Engine:
         assert self.free_tokens() >= 0, "admission let the budget go negative"
         return finished
 
+    # ---- device-resident step (paged default) --------------------------------
+    def _burst_fn(self, num_work: int, horizon: int):
+        """Jitted ``horizon``-iteration decode micro-batch, cached per
+        (num_work, horizon) — both pow2-bucketed, so the cache stays
+        O(log² ·). Shape changes (table width growth) retrace via jit."""
+        key = (num_work, horizon)
+        fn = self._burst_fns.get(key)
+        if fn is not None:
+            return fn
+        decode = functools.partial(self.model.decode_step_paged,
+                                   attn_backend=self.attn_backend,
+                                   attn_interpret=self.attn_interpret,
+                                   attn_num_work=num_work)
+
+        def burst(params, cache, bt, tok, length):
+            def one(carry, _):
+                cache, tok, length = carry
+                live = length > 0
+                pos = length - 1            # dead slots: -1 -> 0 attn length
+                logits, cache = decode(params, cache, tok, bt, pos)
+                new_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                tok = jnp.where(live, new_tok, tok)
+                length = jnp.where(live, length + 1, length)
+                return (cache, tok, length), new_tok
+
+            if horizon == 1:    # plain call — no scan carry round-trip
+                (cache, tok, length), toks = one((cache, tok, length), None)
+                return cache, tok, length, toks[None]
+            (cache, tok, length), toks = jax.lax.scan(
+                one, (cache, tok, length), None, length=horizon)
+            return cache, tok, length, toks    # toks [horizon, max_slots]
+
+        fn = jax.jit(burst)
+        self._burst_fns[key] = fn
+        return fn
+
+    def _step_device(self, burst: int) -> List[ServeRequest]:
+        self.steps += 1
+        base = self.steps                  # engine step of the 1st iteration
+        finished: List[ServeRequest] = []
+        self._pending_first = []
+        prefill_done: List[ServeRequest] = []
+        for r in self._admit():
+            if r.rejected:                      # prompt can never fit
+                finished.append(r)
+            elif r.max_new_tokens <= 1:         # finishes at prefill; its
+                prefill_done.append(r)          # token lands after the sync
+                self._release(r.slot)
+        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        pending = list(self._pending_first)
+        pend_reqs = {id(r) for r, _ in pending}
+        h = 0
+        toks = None
+        if live:
+            # fusion horizon: nobody may cross a count/capacity finish
+            # boundary before the last fused iteration (eos finishes are
+            # data-dependent and handled by truncation after the sync)
+            def _until_finish(i, r):
+                gen = len(r.generated) + (1 if id(r) in pend_reqs else 0)
+                return min(r.max_new_tokens - gen,
+                           self.max_seq - int(self.slot_len[i]))
+            # only NO-admission steps fuse: with a non-empty queue every
+            # step is an admission opportunity (a prefill-finish this very
+            # step may already have freed capacity), so stay at h=1
+            cap = 1 if self.waiting else burst
+            h = max(1, min([cap] + [_until_finish(i, r) for i, r in live]))
+            h = _pow2_floor(h)
+            # pre-grow block tables to cover every write of the burst
+            # (positions slot_len-1 .. slot_len+h-2) — covered by the
+            # admission reservations, so allocation cannot fail
+            for i, _ in live:
+                need = blocks_for(int(self.slot_len[i]) + h - 1,
+                                  self.block_size)
+                table = self.block_tables[i]
+                if need > len(table):
+                    table.extend(self.allocator.allocate(need - len(table)))
+                    self._ensure_nbt_cap(need)
+                    self._dev_set_table(i, table)   # one write per grown row
+            real = sum(blocks_for(int(self.slot_len[i]) + h - 1,
+                                  self.block_size) for i, _ in live)
+            # num_work only shapes the FLAT kernel's grid; for the other
+            # backends key the jit cache on a single value so pow2 growth
+            # of the live block count never forces a spurious recompile
+            num_work = _next_pow2(real) if self.attn_backend == "flat" else 0
+            self.last_grid = {
+                "backend": self.attn_backend,
+                "flat_items": _next_pow2(real),
+                "real_items": sum(blocks_for(int(self.slot_len[i]),
+                                             self.block_size)
+                                  for i, _ in live),
+                "padded_items": len(live) * max(
+                    blocks_for(int(self.slot_len[i]), self.block_size)
+                    for i, _ in live),
+            }
+            fn = self._burst_fn(num_work, h)
+            self.cache, self._dev_tok, self._dev_len, toks = fn(
+                self.params, self.cache, self._dev_bt, self._dev_tok,
+                self._dev_len)
+        # ---- the step's single device->host transfer ----
+        parts = [jnp.stack([t for _, t in pending])] if pending else []
+        if toks is not None:
+            parts.append(toks.reshape(-1))
+        host = d2h(jnp.concatenate(parts)) if parts else np.zeros(0, np.int32)
+        first = host[:len(pending)]
+        rest = host[len(pending):].reshape(h, self.max_slots) if h else None
+        # prefill first tokens (deferred appends)
+        for (r, _), tok in zip(pending, first):
+            r.generated.append(int(tok))
+        for r in prefill_done:
+            r.state = State.FINISHED
+            r.finish_step = base
+            finished.append(r)
+        # an admitted request whose FIRST token was eos is done before the
+        # burst tokens; its fused decodes wrote only its own pre-grown
+        # blocks, so truncating here is safe
+        for i, r in live:
+            if r.state is State.RUNNING and r.done:
+                r.state = State.FINISHED
+                r.finish_step = base
+                finished.append(r)
+                self._release(i)
+        for s in range(h):
+            for i, r in live:
+                if r.state is State.FINISHED:
+                    continue
+                r.generated.append(int(rest[s, i]))
+                r.tokens_by_engine[self.id] = \
+                    r.tokens_by_engine.get(self.id, 0) + 1
+                self.tokens_out += 1
+                self.slot_len[i] += 1
+                if r.done or self.slot_len[i] >= self.max_seq:
+                    r.state = State.FINISHED
+                    r.finish_step = base + s
+                    finished.append(r)
+                    self._release(i)
+        self.steps = base + max(h - 1, 0)
+        self.peak_kv_bytes = max(self.peak_kv_bytes, self.kv_bytes_pinned())
+        assert self.free_tokens() >= 0, "admission let the budget go negative"
+        return finished
+
     def _decode_mono_live(self, live, last_tok, pos):
-        sub_cache = jax.tree.map(
-            lambda a: a[:, np.asarray([i for i, _ in live])], self.cache)
+        idx = np.asarray([i for i, _ in live])
+        sub_cache = jax.tree.map(lambda a: a[:, idx], self.cache)
         logits, new_sub = self._decode(self.params, sub_cache, last_tok, pos)
-        for j, (i, _) in enumerate(live):
-            self.cache = _write_slot(
-                self.cache, jax.tree.map(lambda a: a[:, j:j + 1], new_sub), i)
+        # one batched scatter over all live slots (slots never alias, so
+        # there are no duplicate indices) instead of a per-slot update
+        self.cache = jax.tree.map(
+            lambda a, p: a.at[:, idx].set(p.astype(a.dtype)),
+            self.cache, new_sub)
         return logits
 
     def _decode_paged_live(self, live, last_tok, pos):
@@ -309,6 +588,8 @@ class Engine:
             self.block_tables[slot] = []
             self.allocator.unreserve(
                 blocks_for(int(self.slot_reserved[slot]), self.block_size))
+            if self.device_resident:
+                self._dev_clear_slot(slot)
         self.slot_reserved[slot] = 0
         self.slots[slot] = None
         self.slot_len[slot] = 0
@@ -361,6 +642,14 @@ class Engine:
             self.block_tables[slot] = ids
             self.cache = _write_prompt_blocks(self.cache, piece, ids,
                                               self.block_size)
+            if self.device_resident:
+                # adopted requests always carry >= 1 generated token, so
+                # the device mirror seeds from host values (no sync)
+                self._ensure_nbt_cap(nb)
+                self._dev_set_table(slot, ids)
+                self._dev_len = self._dev_len.at[slot].set(length)
+                self._dev_tok = self._dev_tok.at[slot].set(
+                    int(req.generated[-1]))
         else:
             self.cache = _write_slot(self.cache, piece, slot)
         req.engine_id = self.id

@@ -115,6 +115,8 @@ class MILSServer:
                  qoe: Optional[QoEModel], cfg: ServerConfig, *,
                  max_slots: int = 4, max_seq: int = 256,
                  paged: Optional[bool] = None, block_size: int = 16,
+                 device_resident: Optional[bool] = None,
+                 attn_backend: Optional[str] = None,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
@@ -124,7 +126,9 @@ class MILSServer:
             def engine_factory(i):
                 return Engine(i, model, params, max_slots=max_slots,
                               max_seq=max_seq, paged=paged,
-                              block_size=block_size)
+                              block_size=block_size,
+                              device_resident=device_resident,
+                              attn_backend=attn_backend)
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(
