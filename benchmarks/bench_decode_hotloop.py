@@ -51,7 +51,10 @@ def serve(model, params, prompts, new_tokens, *, device_resident, burst,
           backend):
     eng = Engine(0, model, params, max_slots=len(prompts), max_seq=MAX_SEQ,
                  paged=True, block_size=BLOCK_SIZE,
-                 device_resident=device_resident, attn_backend=backend)
+                 device_resident=device_resident, attn_backend=backend,
+                 # one-step admission: this bench measures the decode hot
+                 # loop, so the whole mix must enter (and finish) together
+                 prefill_token_budget=sum(prompts) + len(prompts))
 
     def drain(measure: bool):
         rng = np.random.default_rng(0)

@@ -1,0 +1,38 @@
+"""Long-context tail (32K–128K prompts) under chunked vs. monolithic
+prefill — the simulated-cluster view of the chunked-prefill win.
+
+Same 16-instance cluster and policies as Figs. 6/7, but on the
+``longtail`` trace (`sim.workload.longtail_spec`): a log-normal dialogue
+body with a heavy 32K–128K *prompt* tail. Each policy runs twice — the
+legacy monolithic prefill model (one compute-bound iteration per prompt,
+the §2.1 head-of-line baseline) and the chunked mixed-iteration scheduler
+(`ClusterConfig.prefill_token_budget`) — and reports TTFT/TPOT. TPOT is
+the paper's inter-token metric: monolithic prefill of a 64K neighbor
+shows up directly in a short request's p95 TPOT; chunking removes it.
+"""
+from __future__ import annotations
+
+from benchmarks.common import ARCH, CAPACITY, E, row
+from repro.sim.experiment import compare_policies
+
+RATE = 6.0
+DURATION = 20.0
+BUDGET = 2048          # chunk tokens per mixed iteration
+
+
+def run():
+    rows = []
+    for label, budget in (("mono", None), ("chunked", BUDGET)):
+        res = compare_policies(ARCH, rate=RATE, duration=DURATION, E=E,
+                               capacity_tokens=CAPACITY,
+                               workload="longtail",
+                               prefill_token_budget=budget,
+                               kinds=("round-robin", "cascade"))
+        for kind, r in res.items():
+            s = r.summary()
+            rows.append(row(
+                f"longtail/{kind}/{label}", s["tpot_mean"] * 1e6,
+                ttft_mean=s["ttft_mean"], ttft_p95=s["ttft_p95"],
+                tpot_mean=s["tpot_mean"], tpot_p95=s["tpot_p95"],
+                completed=s["completed"]))
+    return rows

@@ -22,6 +22,8 @@ MODULES = [
     "fig16_bidask",           # Fig. 16 bid-ask CV
     "tab_partition_speed",    # §6.5   partition complexity
     "bench_roofline",         # §Roofline summary from the dry-run
+    "bench_longtail",         # §Chunked prefill: 32K-128K prompt tail,
+                              # chunked vs monolithic sim iterations
 ]
 
 

@@ -32,11 +32,24 @@ class ReqView:
 
     ``ref`` is the backend's own request object — the core treats it as
     an opaque token and passes it back through ``ClusterOps`` calls.
+
+    Prefill progress (chunked-prefill backends): ``ctx_done`` prompt
+    tokens are written to cache out of ``ctx_total``. Backends without
+    chunked prefill report ``ctx_done == ctx_total`` (the 0/0 default
+    also reads as done). A not-yet-done request is live and migratable —
+    its KV piece is the ``ctx_done`` written rows, and the receiver
+    resumes chunking.
     """
     ref: Any
     req_id: int
     input_len: float
     length: float               # current sequence length
+    ctx_done: float = 0.0       # prompt tokens whose KV is written
+    ctx_total: float = 0.0      # prompt tokens overall
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.ctx_done >= self.ctx_total
 
 
 @runtime_checkable
@@ -58,7 +71,10 @@ class InstanceView(Protocol):
         ...
 
     def queued_tokens(self) -> float:
-        """Prompt tokens waiting for admission (hold no cache)."""
+        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
+        unwritten remainder of requests mid-chunked-prefill. The written
+        part of a partial prompt is pinned cache and belongs to
+        ``used_tokens`` — the two never count a token twice."""
         ...
 
     def requests(self) -> List[ReqView]:

@@ -106,6 +106,61 @@ def decode_attn_time_s(lengths: Sequence[int], spec: AttnSpec,
     return spec.num_kv_heads * (comp * t_blk + skipped * SKIP_OVERHEAD_S)
 
 
+# --------------------------------------------------------------------------
+# Chunked prefill + mixed iterations (DESIGN.md §Chunked prefill) — the
+# analytic mirror of kernels/prefill_attention.paged_prefill_attention and
+# the engine's token-budgeted mixed step; sim/costmodel builds its ground
+# truth from these instead of its own I² formula.
+# --------------------------------------------------------------------------
+def prefill_chunk_blocks(chunk: int, ctx: int, block_s: int) -> int:
+    """Grid steps (per kv head) the chunked-prefill kernel runs for one
+    chunk: every block of the written context plus the chunk itself."""
+    return math.ceil(max(ctx + chunk, 1) / block_s)
+
+
+def prefill_chunk_flops(chunk: int, ctx: int, spec: AttnSpec) -> float:
+    """Attention MXU FLOPs of ONE prompt chunk at one layer: score + PV
+    matmuls of ``chunk`` queries against the written context plus the
+    (block-causally pruned) own chunk. Summing over a prompt's chunks
+    recovers the causal whole-prompt count ≈ 2·H·Dh·I², so a single
+    chunk=I call prices the monolithic prefill too — one formula, every
+    granularity."""
+    own = (chunk + spec.block_s) / 2.0        # causal prune within the chunk
+    return 4.0 * spec.num_q_heads * spec.head_dim * chunk * (ctx + own)
+
+
+def prefill_chunk_attn_time_s(chunk: int, ctx: int, spec: AttnSpec) -> float:
+    """Wall time of one chunk's paged-prefill attention: DMA of the
+    context blocks (HBM→VMEM, per kv head) vs. the chunk's MXU time —
+    compute-bound for real chunk sizes, DMA-bound when a tiny chunk drags
+    a huge context (which is why the engine packs chunks to a budget)."""
+    blocks = prefill_chunk_blocks(chunk, ctx, spec.block_s)
+    dma = (spec.num_kv_heads * blocks
+           * 2 * spec.block_s * spec.head_dim * spec.kv_bytes / HBM_BW)
+    mxu = prefill_chunk_flops(chunk, ctx, spec) / PEAK_FLOPS
+    return max(dma, mxu)
+
+
+def mixed_iter_time_s(chunks: Sequence[tuple], decode_lengths: Sequence[int],
+                      spec: AttnSpec, *,
+                      decode_backend: str = "flat") -> float:
+    """Attention wall time of one token-budgeted MIXED iteration: the
+    decode batch plus every packed prompt chunk ``(chunk_len, ctx_len)``
+    — the analytic mirror of the engine's fused step (decode burst +
+    chunked prefill, one device round-trip). ``decode_backend`` picks the
+    decode term's kernel model (``flat`` | ``ragged`` | ``padded``) so a
+    chunked-vs-monolithic comparison can hold the decode backend fixed
+    and attribute only the prefill difference to chunking."""
+    if decode_backend == "flat":
+        t = decode_attn_time_flat_s(decode_lengths, spec)
+    else:
+        t = decode_attn_time_s(decode_lengths, spec,
+                               ragged=(decode_backend == "ragged"))
+    for chunk, ctx in chunks:
+        t += prefill_chunk_attn_time_s(int(chunk), int(ctx), spec)
+    return t
+
+
 def heterogeneity_tax(lengths: Sequence[int], spec: AttnSpec) -> float:
     """Fraction of padded-backend time wasted vs. a length-homogeneous
     batch with the same total token count (the paper's Fig.-2 metric)."""

@@ -41,17 +41,24 @@ DEFAULT_BLOCK = 512
 
 
 def _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
-                        start, length):
-    """ONE online-softmax KV-block step, shared by all three decode
-    kernels: q [G, Dh] vs. this grid step's KV block [BS, Dh], masked at
-    ``length``, accumulated into the persistent (m, l, acc) scratch."""
-    q = q_ref[0, 0].astype(jnp.float32)             # [G, Dh]
+                        start, length, qpos=None):
+    """ONE online-softmax KV-block step, shared by the decode kernels AND
+    the chunked-prefill kernel: the q tile (trailing dims flattened to
+    [rows, Dh] — [G, Dh] for decode, [C·G, Dh] for a prefill chunk) vs.
+    this grid step's KV block [BS, Dh], masked at ``length``, accumulated
+    into the persistent (m, l, acc) scratch. ``qpos`` (per-row global
+    query positions) additionally applies the causal ``kv <= q`` mask of
+    chunked prefill; decode's single query row needs none."""
+    q = q_ref[0, 0].astype(jnp.float32).reshape(-1, q_ref.shape[-1])
     k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
     v = v_ref[0, :, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, BS]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [rows, BS]
     s = s / math.sqrt(q.shape[-1])
     idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(idx < length, s, NEG_INF)
+    keep = idx < length
+    if qpos is not None:                 # qpos broadcastable to [rows, BS]
+        keep &= idx <= qpos
+    s = jnp.where(keep, s, NEG_INF)
 
     m_prev = m_ref[:, 0]                            # [G]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -73,7 +80,8 @@ def _flash_init(m_ref, l_ref, acc_ref):
 def _flash_finish(o_ref, l_ref, acc_ref):
     l = l_ref[:, 0]
     safe = jnp.where(l == 0.0, 1.0, l)
-    o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+    out = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+    o_ref[0, 0] = out.reshape(o_ref.shape[2:])   # [G,Dh] / prefill [C,G,Dh]
 
 
 def _decode_kernel(lengths_ref,          # scalar prefetch [B]

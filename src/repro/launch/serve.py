@@ -54,6 +54,12 @@ def main() -> None:
                          "elsewhere; see DESIGN.md §Decode hot path)")
     ap.add_argument("--host-loop", action="store_true",
                     help="use the legacy host-driven engine step loop")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt-chunk tokens packed per mixed iteration "
+                         "(DESIGN.md §Chunked prefill; default 256)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="monolithic whole-prompt prefill (the §2.1 "
+                         "head-of-line baseline)")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="workload arrivals/s, replayed at 1 step/s")
     ap.add_argument("--seed", type=int, default=0)
@@ -70,7 +76,10 @@ def main() -> None:
                                   balancing=args.balancing, seed=args.seed),
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,
-                     device_resident=False if args.host_loop else None)
+                     device_resident=False if args.host_loop else None,
+                     prefill_token_budget=args.prefill_budget,
+                     chunked_prefill=(False if args.no_chunked_prefill
+                                      else None))
     # the same ShareGPT-shaped trace the simulator runs, arrival times
     # mapped to server steps, lengths capped to the reduced model
     spec = WorkloadSpec(rate=args.arrival_rate,

@@ -394,6 +394,70 @@ def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
     return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
 
 
+def attention_prefill_chunk_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
+                                  block_tables, ctx_len, chunk_len,
+                                  *, mrope_positions=None,
+                                  attn_backend: str = "dense",
+                                  attn_interpret: bool = False):
+    """Chunked prefill against the paged pool (DESIGN.md §Chunked prefill).
+
+    x [B, C, D] — B prompt chunks of C tokens (rows past ``chunk_len``
+    are padding); pool_l leaves [NB, BS, Hkv, Dh] — ONE layer's slice of
+    the global block pool; block_tables [B, NBT] int32 covering at least
+    ``ceil((ctx_len + C)/BS)`` rows (the tail padded with a garbage
+    block, so padding-row writes never touch live data); ctx_len [B] (or
+    scalar) int32 tokens already written for each chunk's request;
+    chunk_len [B] (or scalar) int32 real tokens in each chunk.
+
+    Writes the chunk's K/V into the pool at logical positions
+    ``ctx..ctx+C-1`` (RoPE applied at the true global positions), then
+    attends each query causally over its own chunk **plus the previously
+    written context**, read through the block table — so a partial prompt
+    lives in the same pool as decode state and later chunks/decodes see
+    exactly the rows earlier chunks wrote. Returns (out [B, C, D],
+    new pool); output rows past ``chunk_len`` are garbage (the caller
+    keeps only the last real position's logits).
+    """
+    assert not cfg.sliding_window, "paged prefill is full-attention only"
+    B, C, _ = x.shape
+    ctx = jnp.broadcast_to(jnp.asarray(ctx_len, jnp.int32).reshape(-1), (B,))
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32).reshape(-1),
+                            (B,))
+    positions = ctx[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [B, C]
+    q, k, v = _project_qkv(p, cfg, x)
+    if cfg.use_mrope:
+        mp = (mrope_positions if mrope_positions is not None
+              else jnp.broadcast_to(positions[..., None], (B, C, 3)))
+        q = apply_mrope(q, mp, cfg.rope_theta)
+        k = apply_mrope(k, mp, cfg.rope_theta)
+    elif not cfg.learned_pos:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    BS = pool_l.k.shape[1]
+    blk = jnp.take_along_axis(block_tables, positions // BS, axis=1)  # [B, C]
+    off = positions % BS
+    # chunk positions are distinct per request and requests never share
+    # blocks, so the batched scatter has no duplicate (blk, off) pairs
+    new_k = pool_l.k.at[blk, off].set(k.astype(pool_l.k.dtype))
+    new_v = pool_l.v.at[blk, off].set(v.astype(pool_l.v.dtype))
+
+    if attn_backend != "dense":
+        # Pallas path: the pool stays in HBM; the flat work-list kernel
+        # chases the block table (cost ∝ chunk × context blocks)
+        from repro.kernels.prefill_attention import paged_prefill_attention
+        out = paged_prefill_attention(q, new_k, new_v, block_tables, ctx,
+                                      clen, interpret=attn_interpret)
+        out = out.astype(q.dtype)
+    else:
+        k_seq = paged_gather(new_k, block_tables)   # [B, NBT*BS, Hkv, Dh]
+        v_seq = paged_gather(new_v, block_tables)
+        kpos = jnp.arange(k_seq.shape[1])[None, None, :]        # [1, 1, S]
+        mask = (kpos <= positions[:, :, None])[:, None, None]   # [B,1,1,C,S]
+        out = _gqa_sdpa(q, k_seq, v_seq, mask)
+    return (out.reshape(B, C, -1) @ p["wo"]), KVCache(new_k, new_v)
+
+
 def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
                     dtype=None) -> KVCache:
     """Zeroed global block pool for ONE layer: [NB, BS, Hkv, Dh]."""

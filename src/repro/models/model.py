@@ -47,6 +47,14 @@ class Model:
     #   prefill_bucketed(params, batch, true_len)
     #       -> (last-token logits [B, V], prompt-cache piece [L, B, P, ...])
     prefill_bucketed: Optional[Callable[..., Any]] = None
+    # Chunked paged prefill (DESIGN.md §Chunked prefill): one prompt chunk
+    # written + attended against the paged pool, so the engine can pack
+    # prompt chunks into decode iterations instead of freezing the batch
+    # for a whole long prompt.
+    #   prefill_chunk(params, pool, tokens, block_tables, ctx_len,
+    #                 chunk_len, *, attn_backend, attn_interpret)
+    #       -> (last-real-token logits [B, V], new pool)
+    prefill_chunk: Optional[Callable[..., Any]] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -128,10 +136,18 @@ def _decoder_model(cfg: ModelConfig) -> Model:
             return_cache=True, last_index=true_len - 1)
         return logits[:, 0], caches
 
+    def prefill_chunk(params, pool, tokens, block_tables, ctx_len,
+                      chunk_len, *, attn_backend: str = "dense",
+                      attn_interpret: bool = False):
+        return transformer.forward_prefill_chunk(
+            params, cfg, tokens, pool, block_tables, ctx_len, chunk_len,
+            attn_backend=attn_backend, attn_interpret=attn_interpret)
+
     return Model(cfg, init, loss, prefill, decode_step, init_cache,
                  init_paged_cache=init_paged_cache,
                  decode_step_paged=decode_step_paged,
-                 prefill_bucketed=prefill_bucketed)
+                 prefill_bucketed=prefill_bucketed,
+                 prefill_chunk=prefill_chunk)
 
 
 # --------------------------------------------------------------------------

@@ -213,6 +213,58 @@ def forward_decode_paged(p, cfg: ModelConfig, token, pool: KVCache,
     return unembed(p, cfg, x)[:, 0], new_pool
 
 
+def block_prefill_chunk(pl, cfg: ModelConfig, x, pool_l: KVCache,
+                        block_tables, ctx_len, chunk_len,
+                        mrope_positions=None, attn_backend: str = "dense",
+                        attn_interpret: bool = False):
+    h = rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+    a, new_pool = attn.attention_prefill_chunk_paged(
+        pl["attn"], cfg, h, pool_l, block_tables, ctx_len, chunk_len,
+        mrope_positions=mrope_positions, attn_backend=attn_backend,
+        attn_interpret=attn_interpret)
+    x = x + a
+    m, aux = _mlp_part(pl, cfg, x)
+    return x + m, new_pool, aux
+
+
+def forward_prefill_chunk(p, cfg: ModelConfig, tokens, pool: KVCache,
+                          block_tables, ctx_len, chunk_len, *,
+                          mrope_positions=None, attn_backend: str = "dense",
+                          attn_interpret: bool = False):
+    """One prompt *chunk* through the stack against the paged pool
+    (DESIGN.md §Chunked prefill): tokens [B, C] int32 (rows past
+    ``chunk_len`` are padding), pool leaves [L, NB, BS, Hkv, Dh],
+    block_tables [B, NBT], ctx_len / chunk_len traced int32 scalars (or
+    [B]). Every layer writes the chunk's K/V into its pool slice and
+    attends over the written context + chunk, so calling this
+    chunk-by-chunk reproduces the whole-prompt prefill's cache rows and
+    next-token logits exactly. Returns (last-real-token logits [B, V],
+    new pool)."""
+    x = embed_tokens(p, cfg, tokens)
+    B, C = tokens.shape
+    ctx = jnp.broadcast_to(jnp.asarray(ctx_len, jnp.int32).reshape(-1), (B,))
+    if cfg.use_mrope and mrope_positions is None:
+        positions = ctx[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        mrope_positions = jnp.broadcast_to(positions[..., None], (B, C, 3))
+
+    def body(x, layer):
+        pl_, pool_l = layer
+        x, new_pool_l, _ = block_prefill_chunk(
+            pl_, cfg, x, pool_l, block_tables, ctx_len, chunk_len,
+            mrope_positions, attn_backend=attn_backend,
+            attn_interpret=attn_interpret)
+        return x, new_pool_l
+
+    x, new_pool = jax.lax.scan(body, x, (p["layers"], pool))
+    x = rms_norm(x, p["ln_f"], cfg.norm_eps)
+    # each chunk's last REAL position — on the prompt's final chunk this
+    # is the request's first-token distribution
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32).reshape(-1),
+                            (B,))
+    x = jnp.take_along_axis(x, (clen - 1)[:, None, None], axis=1)
+    return unembed(p, cfg, x)[:, 0], new_pool
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype=None) -> KVCache:
     """Global paged KV pool: leaves [L, NB, BS, Hkv, Dh] (DESIGN.md

@@ -15,12 +15,20 @@ Two cache layouts behind one scheduling surface:
     buffers): preallocated ``[L, slots, S_max, ...]`` slab, one slot per
     request, with the same reservation-based admission accounting.
 
-Every ``step()`` is one continuous-batching iteration: admit waiting
-requests (prefill), then advance all running requests by one token with a
-single batched decode. Migration exports a request's KV trimmed to its
-actual length (paged: a gather of its blocks) — the wire format is the
-same contiguous ``[L, 1, length, ...]`` piece for both layouts, so mixed
-clusters interoperate (DESIGN.md §Migration wire format).
+Every ``step()`` is one **mixed** continuous-batching iteration (DESIGN.md
+§Chunked prefill): pack up to ``prefill_token_budget`` prompt-chunk tokens
+(resuming partial prompts oldest-first, then admitting FCFS) alongside the
+full decode batch, then advance every fully-prefilled request by one
+token with a single batched decode. Chunk K/V is scattered into freshly
+allocated pool blocks, so partial prompts live in the same pool as decode
+state; a long prompt therefore never freezes decoding for more than one
+iteration (the §2.1 head-of-line block this engine used to have —
+``chunked_prefill=False`` keeps that whole-prompt baseline). Migration
+exports a request's KV trimmed to its actual written length (paged: a
+gather of its blocks; mid-prefill: the ``ctx_done`` rows, resumed on the
+receiver) — the wire format is the same contiguous ``[L, 1, length, ...]``
+piece for both layouts, so mixed clusters interoperate (DESIGN.md
+§Migration wire format).
 
 **Device-resident decode hot loop** (paged engines, the default —
 DESIGN.md §Decode hot path): block tables, slot lengths, and last tokens
@@ -55,6 +63,11 @@ from repro.serving.block_pool import BlockAllocator, blocks_for
 from repro.serving.request import ServeRequest, State
 
 DEFAULT_BLOCK_SIZE = 16
+# Per-iteration prompt-chunk token budget of the mixed scheduler
+# (DESIGN.md §Chunked prefill): every step packs up to this many prompt
+# tokens (oldest request first) alongside the full decode batch, so a
+# long prompt can never freeze decoding for more than one iteration.
+DEFAULT_PREFILL_BUDGET = 256
 
 # Running count of device->host synchronizations performed by all engines
 # in this process (bench_decode_hotloop reads it; tests monkeypatch d2h).
@@ -85,7 +98,9 @@ class Engine:
                  paged: Optional[bool] = None,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  device_resident: Optional[bool] = None,
-                 attn_backend: Optional[str] = None):
+                 attn_backend: Optional[str] = None,
+                 prefill_token_budget: Optional[int] = None,
+                 chunked_prefill: Optional[bool] = None):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
         self.id = engine_id
@@ -142,6 +157,23 @@ class Engine:
             self.cache = model.init_cache(max_slots, max_seq)
             self._bytes_per_slot = kv_bytes(self.cache) / max_slots
             self._decode = jax.jit(model.decode_step)
+        # Chunked paged prefill (DESIGN.md §Chunked prefill): on by default
+        # wherever the model supports it; chunked_prefill=False keeps the
+        # whole-prompt path (the monolithic-prefill baseline).
+        chunk_ok = self.paged and model.prefill_chunk is not None
+        self.chunked_prefill = (chunk_ok if chunked_prefill is None
+                                else chunked_prefill)
+        self.prefill_token_budget = (prefill_token_budget
+                                     or DEFAULT_PREFILL_BUDGET)
+        self._prefill_order: List[int] = []   # slots mid-prefill, oldest 1st
+        if self.chunked_prefill:
+            assert chunk_ok, \
+                f"{model.cfg.name}: chunked prefill needs a paged engine " \
+                "and Model.prefill_chunk"
+            self._prefill_chunk = jax.jit(functools.partial(
+                model.prefill_chunk,
+                attn_backend=self.attn_backend,
+                attn_interpret=self.attn_interpret))
         self.slot_len = np.zeros(max_slots, np.int32)       # tokens in cache
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
         self.slot_reserved = np.zeros(max_slots, np.int64)  # worst-case tokens
@@ -178,7 +210,14 @@ class Engine:
         return int(self.slot_reserved.sum())
 
     def queued_tokens(self) -> int:
-        return int(sum(len(r.prompt) for r in self.waiting))
+        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
+        not-yet-written remainder of requests mid-chunked-prefill. The
+        written part of a partial prompt is already pinned cache and shows
+        up in ``used_tokens`` — one token never counts twice."""
+        q = sum(len(r.prompt) for r in self.waiting)
+        q += sum(len(r.prompt) - r.ctx_done
+                 for r in self.active() if r.prefilling)
+        return int(q)
 
     def free_tokens(self) -> int:
         """Unpinned cache budget; the admission invariant keeps this >= 0."""
@@ -312,6 +351,7 @@ class Engine:
         vec = logits if logits.ndim == 1 else logits[0]
         tok = int(d2h(jnp.argmax(vec)))
         req.generated.append(tok)
+        req.ctx_done = len(req.prompt)
         req.first_token_step = self.steps
         req.state = State.RUNNING
         req.engine_id = self.id
@@ -346,6 +386,7 @@ class Engine:
         self._dev_len = self._dev_len.at[slot].set(T + 1)
         self._dev_tok = self._dev_tok.at[slot].set(tok_dev)
         self._pending_first.append((req, tok_dev))
+        req.ctx_done = T
         req.first_token_step = self.steps
         req.state = State.RUNNING
         req.engine_id = self.id
@@ -354,6 +395,122 @@ class Engine:
         self.slots[slot] = req
         self.slot_len[slot] = T + 1
         self.tokens_out += 1
+
+    # ---- chunked prefill: the mixed-iteration prompt side --------------------
+    # (DESIGN.md §Chunked prefill.) Each step packs up to
+    # ``prefill_token_budget`` prompt-chunk tokens — resuming in-progress
+    # prefills first (oldest admitted first), then admitting from the FCFS
+    # queue while budget and capacity last. Chunk K/V goes straight into
+    # freshly allocated pool blocks, so a partial prompt is ordinary pool
+    # state: it migrates, it is accounted, and the decode batch runs
+    # beside it every single iteration — no head-of-line blocking.
+    def _run_chunked_prefill(self) -> Tuple[List[ServeRequest],
+                                            List[ServeRequest]]:
+        """Returns (rejected, completed): requests failed for never
+        fitting, and requests whose LAST chunk landed this step (their
+        first token is sampled; device loops defer it to the step sync)."""
+        rejected: List[ServeRequest] = []
+        completed: List[ServeRequest] = []
+        budget = self.prefill_token_budget
+        plan: List[Tuple[int, int]] = []            # (slot, chunk_len)
+        for slot in list(self._prefill_order):      # oldest admitted first
+            if budget <= 0:
+                break
+            req = self.slots[slot]
+            clen = min(len(req.prompt) - req.ctx_done, budget)
+            plan.append((slot, clen))
+            budget -= clen
+        while self.waiting and budget > 0:
+            req = self.waiting[0]
+            if len(req.prompt) + 1 > self.max_seq:  # can NEVER fit: fail
+                self.waiting.popleft()
+                req.rejected = True
+                req.state = State.FINISHED
+                req.first_token_step = self.steps
+                req.finish_step = self.steps
+                rejected.append(req)
+                continue
+            if not self.can_accept(req):
+                break
+            slot = self._free_slot()
+            self.waiting.popleft()
+            self._reserve(req, slot)
+            req.state = State.RUNNING
+            req.engine_id = self.id
+            req.slot = slot
+            req.ctx_done = 0
+            self.slots[slot] = req
+            self.slot_len[slot] = 0
+            self._prefill_order.append(slot)
+            clen = min(len(req.prompt), budget)
+            plan.append((slot, clen))
+            budget -= clen
+        if plan:
+            self._prefill_chunk_batch(plan, completed)
+        return rejected, completed
+
+    def _prefill_chunk_batch(self, plan: List[Tuple[int, int]],
+                             completed: List[ServeRequest]) -> None:
+        """ONE batched device call for ALL of the step's planned chunks —
+        the prompt half of the fused mixed iteration. Chunks are padded to
+        a common pow2 bucket and a common pow2 table width (compiles stay
+        O(slots · log budget · log max_seq)); each chunk's blocks are
+        allocated here, always covered by its admission reservation, so
+        allocation cannot fail. Table tails are the garbage block, so the
+        padding rows of short chunks never touch live data."""
+        B = len(plan)
+        C = _next_pow2(max(clen for _, clen in plan))
+        nbt = 1
+        for slot, clen in plan:
+            req = self.slots[slot]
+            need = blocks_for(req.ctx_done + clen, self.block_size)
+            table = self.block_tables[slot]
+            if need > len(table):
+                table.extend(self.allocator.allocate(need - len(table)))
+            nbt = max(nbt, blocks_for(req.ctx_done + C, self.block_size))
+        nbt = _next_pow2(nbt)
+        toks = np.zeros((B, C), np.int32)
+        bt = np.full((B, nbt), self.garbage_block, np.int32)
+        ctxs = np.zeros((B,), np.int32)
+        clens = np.zeros((B,), np.int32)
+        for j, (slot, clen) in enumerate(plan):
+            req = self.slots[slot]
+            ctx = req.ctx_done
+            toks[j, :clen] = req.prompt[ctx:ctx + clen]
+            table = self.block_tables[slot]
+            bt[j, :len(table)] = table
+            ctxs[j] = ctx
+            clens[j] = clen
+        logits, self.cache = self._prefill_chunk(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.asarray(ctxs), jnp.asarray(clens))
+        for j, (slot, clen) in enumerate(plan):
+            req = self.slots[slot]
+            T = len(req.prompt)
+            req.ctx_done += clen
+            self.slot_len[slot] = req.ctx_done
+            if req.ctx_done < T:
+                continue
+            # final chunk: the first token exists
+            self._prefill_order.remove(slot)
+            tok_dev = jnp.argmax(logits[j]).astype(jnp.int32)
+            req.first_token_step = self.steps
+            req.tokens_by_engine[self.id] = \
+                req.tokens_by_engine.get(self.id, 0) + 1
+            self.tokens_out += 1
+            self.slot_len[slot] = T + 1
+            if self.device_resident:
+                # token stays on device; it reaches the host (and
+                # req.generated) at the step's single d2h
+                table = self.block_tables[slot]
+                self._ensure_nbt_cap(len(table))
+                self._dev_set_table(slot, table)
+                self._dev_len = self._dev_len.at[slot].set(T + 1)
+                self._dev_tok = self._dev_tok.at[slot].set(tok_dev)
+                self._pending_first.append((req, tok_dev))
+            else:
+                req.generated.append(int(d2h(tok_dev)))
+            completed.append(req)
 
     # ---- one continuous-batching iteration ----------------------------------
     def step(self, burst: int = 1) -> List[ServeRequest]:
@@ -374,15 +531,27 @@ class Engine:
         with ``device_resident=False`` — the bit-parity reference)."""
         self.steps += 1
         finished: List[ServeRequest] = []
-        for r in self._admit():
-            if r.rejected:                      # prompt can never fit
-                finished.append(r)
-            elif r.done:        # max_new_tokens == 1: prefill already
-                r.state = State.FINISHED        # produced the only token
-                r.finish_step = self.steps
-                finished.append(r)
-                self._release(r.slot)
-        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if self.chunked_prefill:
+            rejected, prefilled = self._run_chunked_prefill()
+            finished.extend(rejected)
+            for r in prefilled:
+                if r.done:      # max_new_tokens == 1 / eos first token
+                    r.state = State.FINISHED
+                    r.finish_step = self.steps
+                    finished.append(r)
+                    self._release(r.slot)
+        else:
+            for r in self._admit():
+                if r.rejected:                  # prompt can never fit
+                    finished.append(r)
+                elif r.done:    # max_new_tokens == 1: prefill already
+                    r.state = State.FINISHED    # produced the only token
+                    r.finish_step = self.steps
+                    finished.append(r)
+                    self._release(r.slot)
+        # requests still mid-prefill hold their slot but do NOT decode
+        live = [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and not r.prefilling]
         if live:
             last_tok = jnp.asarray(
                 [r.generated[-1] if r.generated else r.prompt[-1]
@@ -452,13 +621,25 @@ class Engine:
         finished: List[ServeRequest] = []
         self._pending_first = []
         prefill_done: List[ServeRequest] = []
-        for r in self._admit():
-            if r.rejected:                      # prompt can never fit
-                finished.append(r)
-            elif r.max_new_tokens <= 1:         # finishes at prefill; its
-                prefill_done.append(r)          # token lands after the sync
-                self._release(r.slot)
-        live = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        if self.chunked_prefill:
+            rejected, prefilled = self._run_chunked_prefill()
+            finished.extend(rejected)
+            for r in prefilled:
+                if r.max_new_tokens <= 1:       # finishes at prefill; its
+                    prefill_done.append(r)      # token lands after the sync
+                    self._release(r.slot)
+        else:
+            for r in self._admit():
+                if r.rejected:                  # prompt can never fit
+                    finished.append(r)
+                elif r.max_new_tokens <= 1:     # finishes at prefill; its
+                    prefill_done.append(r)      # token lands after the sync
+                    self._release(r.slot)
+        # requests still mid-prefill hold their slot but do NOT decode:
+        # their device table row stays all-garbage and their length 0, so
+        # the fixed-shape batch treats them as dead slots
+        live = [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and not r.prefilling]
         pending = list(self._pending_first)
         pend_reqs = {id(r) for r, _ in pending}
         h = 0
@@ -471,10 +652,11 @@ class Engine:
                 gen = len(r.generated) + (1 if id(r) in pend_reqs else 0)
                 return min(r.max_new_tokens - gen,
                            self.max_seq - int(self.slot_len[i]))
-            # only NO-admission steps fuse: with a non-empty queue every
-            # step is an admission opportunity (a prefill-finish this very
-            # step may already have freed capacity), so stay at h=1
-            cap = 1 if self.waiting else burst
+            # only NO-admission steps fuse: with a non-empty queue (or a
+            # prompt mid-chunked-prefill) every step is an admission /
+            # chunk opportunity, so stay at h=1 — this is also what caps a
+            # decode request's inter-token gap at ONE mixed iteration
+            cap = 1 if (self.waiting or self._prefill_order) else burst
             h = max(1, min([cap] + [_until_finish(i, r) for i, r in live]))
             h = _pow2_floor(h)
             # pre-grow block tables to cover every write of the burst
@@ -583,6 +765,8 @@ class Engine:
         return logits
 
     def _release(self, slot: int) -> None:
+        if slot in self._prefill_order:     # evicted mid-prefill
+            self._prefill_order.remove(slot)
         if self.paged:
             self.allocator.free(self.block_tables[slot])
             self.block_tables[slot] = []
@@ -605,11 +789,15 @@ class Engine:
         monolithic engines interoperate. ``written = slot_len - 1``: the
         latest sampled token's KV is produced by the *next* decode step
         (on whichever engine runs it), so both layouts export exactly the
-        rows that exist — the paged block count always covers them.
+        rows that exist — the paged block count always covers them. A
+        request still mid-chunked-prefill has no sampled token: every one
+        of its ``ctx_done`` written rows ships (``slot_len == ctx_done``),
+        and the receiver resumes chunking from there (DESIGN.md §Chunked
+        prefill, partial-prefill migration).
         """
         req = self.slots[slot]
         assert req is not None
-        length = int(self.slot_len[slot]) - 1
+        length = int(self.slot_len[slot]) - (0 if req.prefilling else 1)
         if self.paged:
             gathered = gather_kv_blocks(self.cache, self.block_tables[slot])
             # [L, nb, BS, ...] -> [L, 1, nb*BS, ...] -> trim to length
@@ -627,14 +815,37 @@ class Engine:
         self._release(slot)
 
     def import_request(self, req: ServeRequest, piece) -> bool:
-        """Adopt a migrated (still-decoding) request plus its KV piece.
-        Rejects (via ``can_accept``) when no slot is free, the remaining
-        generation cannot fit ``max_seq``, or the worst-case footprint
-        exceeds the free budget."""
+        """Adopt a migrated request plus its KV piece — still-decoding, or
+        still mid-chunked-prefill (``req.ctx_done < len(prompt)``): the
+        piece then holds the ``ctx_done`` written rows and this engine
+        resumes chunking where the source stopped. Rejects (via
+        ``can_accept``) when no slot is free, the remaining generation
+        cannot fit ``max_seq``, or the worst-case footprint exceeds the
+        free budget — and partial prompts when this engine cannot chunk."""
+        if req.prefilling and not self.chunked_prefill:
+            return False        # nowhere to resume the prompt from
         if not self.can_accept(req):
             return False
         slot = self._free_slot()
         self._reserve(req, slot)
+        if self.paged and req.prefilling:
+            written = req.ctx_done
+            nb = blocks_for(written, self.block_size)
+            ids = self.allocator.allocate(nb)
+            self.block_tables[slot] = ids
+            if nb:
+                self.cache = _write_prompt_blocks(self.cache, piece, ids,
+                                                  self.block_size)
+            self._prefill_order.append(slot)   # resume chunking next step
+            req.engine_id = self.id
+            req.slot = slot
+            req.state = State.RUNNING
+            req.tokens_by_engine.setdefault(self.id, 0)
+            self.slots[slot] = req
+            self.slot_len[slot] = written
+            # device mirrors stay cleared (all-garbage table, length 0):
+            # the decode batch treats a mid-prefill slot as dead
+            return True
         if self.paged:
             length = req.length
             nb = blocks_for(length, self.block_size)

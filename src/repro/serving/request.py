@@ -29,12 +29,21 @@ class ServeRequest:
     slot: Optional[int] = None
     eos_token: Optional[int] = None
     rejected: bool = False            # prompt can never fit the engine
+    # prefill progress (chunked engines): prompt tokens whose KV is
+    # written. Whole-prompt paths set it to len(prompt) at prefill; a
+    # migrated half-prefilled request carries it to the receiver, which
+    # resumes chunking from here.
+    ctx_done: int = 0
     # per-engine token counts (load-balance accounting, Fig. 16)
     tokens_by_engine: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def length(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.ctx_done < len(self.prompt)
 
     @property
     def done(self) -> bool:

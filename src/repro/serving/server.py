@@ -68,7 +68,9 @@ class EngineView:
         return float(self.eng.queued_tokens())
 
     def requests(self) -> List[ReqView]:
-        return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length))
+        return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length),
+                        ctx_done=float(r.ctx_done),
+                        ctx_total=float(len(r.prompt)))
                 for r in self.eng.slots if r is not None]
 
     def request_view(self):
@@ -117,6 +119,8 @@ class MILSServer:
                  paged: Optional[bool] = None, block_size: int = 16,
                  device_resident: Optional[bool] = None,
                  attn_backend: Optional[str] = None,
+                 prefill_token_budget: Optional[int] = None,
+                 chunked_prefill: Optional[bool] = None,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
@@ -128,7 +132,9 @@ class MILSServer:
                               max_seq=max_seq, paged=paged,
                               block_size=block_size,
                               device_resident=device_resident,
-                              attn_backend=attn_backend)
+                              attn_backend=attn_backend,
+                              prefill_token_budget=prefill_token_budget,
+                              chunked_prefill=chunked_prefill)
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(

@@ -31,6 +31,10 @@ class ClusterConfig:
     num_instances: int = 16
     capacity_tokens: float = 400_000.0
     kv_block_size: int = 16            # paged-cache allocation granularity
+    # prompt-chunk tokens per mixed iteration (DESIGN.md §Chunked
+    # prefill), mirroring serving.Engine's token-budgeted scheduler;
+    # None = legacy monolithic prefill-at-admission (the §2.1 baseline)
+    prefill_token_budget: Optional[int] = None
     bandwidth: float = 25e9            # inter-instance KV path
     # hand-off disruption: final stop-and-copy stall + scheduler/alloc
     # coordination on both ends (Llumnix reports tens of ms per migration);
@@ -71,7 +75,8 @@ class Cluster:
         self.rng = np.random.default_rng(cfg.seed)
         self.instances = [
             Instance(i, profile, cfg.capacity_tokens, self.events,
-                     block_size=cfg.kv_block_size)
+                     block_size=cfg.kv_block_size,
+                     prefill_budget=cfg.prefill_token_budget)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
         self.policy = policy
@@ -199,14 +204,21 @@ class TransferFabric:
         """Start a live migration: multi-round copy timing from the cost
         model, block-granular reservation on the receiver, stop-and-copy
         pause, then adoption. ``on_finish(arrived)`` fires when the
-        transfer leaves the wire (before the adoption pause)."""
-        need = dst.block_tokens(sr.length)
+        transfer leaves the wire (before the adoption pause). A
+        half-prefilled request ships only its ``ctx_done`` written blocks
+        (the receiver resumes chunking — DESIGN.md §Chunked prefill), but
+        the receiver-side reservation covers the FULL current length:
+        the un-prefilled remainder materializes right after adoption, and
+        gating on the written part alone would let the receiver overflow
+        (the real engine reserves the worst case at import)."""
+        need = dst.block_tokens(sr.length)          # eventual footprint
+        ship = dst.block_tokens(sr.kv_len)          # crosses the wire now
         sr.migrating = True
         dst.inbound_reserved += need
         rate = decode_rate([r.length for r in src.running], src.profile)
         kvb = (self.kv_bytes_per_token or src.profile.kv_bytes_per_token
                or 2e5)
-        timing = plan_live_migration(need, rate, kvb,
+        timing = plan_live_migration(ship, rate, kvb,
                                      self.cluster.cfg.bandwidth)
         src.migrations.start(sr.req.req_id, t + timing.total_s)
 
@@ -256,11 +268,12 @@ class SimInstanceView:
         return self.inst.kv_tokens()
 
     def queued_tokens(self) -> float:
-        return float(sum(r.length for r in self.inst.waiting))
+        return self.inst.queued_tokens()
 
     def requests(self) -> List[ReqView]:
         return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),
-                        float(sr.length))
+                        float(sr.length), ctx_done=float(sr.ctx_done),
+                        ctx_total=float(sr.req.input_len))
                 for sr in self.inst.running if not sr.migrating]
 
     def request_view(self):

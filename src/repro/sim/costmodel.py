@@ -21,7 +21,8 @@ import math
 from typing import Sequence
 
 from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
-                                decode_attn_time_s)
+                                decode_attn_time_s, mixed_iter_time_s,
+                                prefill_chunk_flops)
 from repro.models.common import ModelConfig
 
 
@@ -98,15 +99,43 @@ def decode_iter_time(lengths: Sequence[int], prof: HardwareProfile) -> float:
 
 
 def prefill_time(input_len: int, prof: HardwareProfile) -> float:
-    """Dedicated prefill iteration for one request (compute-bound)."""
+    """Monolithic prefill iteration for one whole prompt (compute-bound).
+    The quadratic attention term comes from the kernel-level chunk mirror
+    (``kernels.cost.prefill_chunk_flops`` with the prompt as one chunk ≈
+    the old 2·H·Dh·I² causal count) — one formula prices every prefill
+    granularity."""
     I = float(input_len)
     t_linear = 2.0 * prof.params * I / prof.peak
-    # causal attention FLOPs: Σ 2·2·H·Dh·i ≈ 2·H·Dh·I² per layer
-    spec = prof.attn_spec
     attn_layers = round(prof.num_layers * prof.attn_frac)
-    t_quad = (2.0 * spec.num_q_heads * spec.head_dim * I * I
+    t_quad = (prefill_chunk_flops(int(input_len), 0, prof.attn_spec)
               * attn_layers / prof.peak)
     return prof.t_fixed + t_linear + t_quad
+
+
+def mixed_iter_time(chunks: Sequence, decode_lengths: Sequence[int],
+                    prof: HardwareProfile) -> float:
+    """One token-budgeted MIXED iteration (DESIGN.md §Chunked prefill):
+    the full decode batch over ``decode_lengths`` advances one token while
+    ``chunks`` — (chunk_len, ctx_len) prompt slices — prefill beside it.
+    Linear (weight) work scales with decode batch + chunk tokens; the
+    attention terms are the kernel mirrors (paged chunked prefill + the
+    SAME decode backend ``decode_iter_time`` prices, per
+    ``prof.ragged_backend`` — so chunked-vs-monolithic runs differ only
+    in prefill scheduling, never in the decode kernel model). This
+    replaces the dedicated-prefill-iteration model wherever the instance
+    runs the chunked scheduler."""
+    n = len(decode_lengths)
+    if n == 0 and not chunks:
+        return 0.0
+    t_tok = 2.0 * prof.params / prof.peak                 # per-request MXU
+    chunk_toks = sum(int(c) for c, _ in chunks)
+    t_linear = 2.0 * prof.params * chunk_toks / prof.peak
+    attn_layers = round(prof.num_layers * prof.attn_frac)
+    backend = "ragged" if prof.ragged_backend else "padded"
+    t_attn = (mixed_iter_time_s(chunks, decode_lengths, prof.attn_spec,
+                                decode_backend=backend)
+              * attn_layers if attn_layers else 0.0)
+    return prof.t_fixed + prof.t_weights + n * t_tok + t_linear + t_attn
 
 
 def kv_block_bytes(prof: HardwareProfile, block_size: int) -> float:

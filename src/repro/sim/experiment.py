@@ -18,7 +18,8 @@ from repro.sim.cluster import (CascadePolicy, Cluster, ClusterConfig,
 from repro.sim.costmodel import HardwareProfile, profile_from_config
 from repro.sim.metrics import SimResult
 from repro.sim.profiler import profile_and_fit
-from repro.sim.workload import Request, WorkloadSpec, generate, sample_lengths
+from repro.sim.workload import (Request, WorkloadSpec, generate,
+                                longtail_spec, sample_lengths)
 
 
 @functools.lru_cache(maxsize=8)
@@ -84,11 +85,13 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                duration: float, *, E: int = 16,
                capacity_tokens: float = 400_000.0, seed: int = 0,
                tp: int = 1, ragged_backend: bool = False,
-               bandwidth: float = 25e9) -> SimResult:
+               bandwidth: float = 25e9,
+               prefill_token_budget: Optional[int] = None) -> SimResult:
     prof = profile_from_config(get_config(arch), tp=tp,
                                ragged_backend=ragged_backend)
     cfg = ClusterConfig(num_instances=E, capacity_tokens=capacity_tokens,
-                        seed=seed, bandwidth=bandwidth)
+                        seed=seed, bandwidth=bandwidth,
+                        prefill_token_budget=prefill_token_budget)
     cluster = Cluster(prof, policy, cfg)
     return cluster.run(requests, duration)
 
@@ -96,15 +99,26 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
 def compare_policies(arch: str, rate: float, duration: float, *,
                      E: int = 16, seed: int = 0,
                      capacity_tokens: float = 400_000.0,
+                     workload: str = "sharegpt",
+                     prefill_token_budget: Optional[int] = None,
                      kinds: Sequence[str] = ("round-robin", "llumnix",
                                              "cascade")) -> Dict[str, SimResult]:
-    """Same workload, all policies — the Fig. 6/7/10 experiment."""
-    spec = WorkloadSpec(rate=rate, duration=duration, seed=seed)
+    """Same workload, all policies — the Fig. 6/7/10 experiment.
+
+    ``workload="longtail"`` swaps in the 32K–128K-prompt-tail trace
+    (``sim.workload.longtail_spec``) and ``prefill_token_budget`` runs the
+    instances with chunked mixed iterations — the long-context scenario
+    chunked prefill targets."""
+    if workload == "longtail":
+        spec = longtail_spec(rate, duration, seed=seed)
+    else:
+        spec = WorkloadSpec(rate=rate, duration=duration, seed=seed)
     requests = generate(spec)
     out = {}
     for kind in kinds:
         pol = make_policy(kind if kind != "cascade" else "cascade",
                           arch, E)
         out[kind] = run_policy(arch, pol, requests, duration, E=E,
-                               capacity_tokens=capacity_tokens, seed=seed)
+                               capacity_tokens=capacity_tokens, seed=seed,
+                               prefill_token_budget=prefill_token_budget)
     return out

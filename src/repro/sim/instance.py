@@ -1,15 +1,21 @@
 """Simulated inference instance: iteration-level continuous batching.
 
-Mirrors the vLLM execution model the paper builds on (§2.2): at each
-iteration the instance admits waiting requests under its token-memory
-budget (prefill prioritized, batch cap 1024), then advances every running
-request by one token. Iteration duration comes from the ground-truth
-hardware cost model — including the kernel-level heterogeneity tax.
+Mirrors the serving engine's execution model (§2.2 + DESIGN.md §Chunked
+prefill): at each iteration the instance admits waiting requests under
+its token-memory budget (batch cap 1024) and advances every
+fully-prefilled request by one token. With ``prefill_budget`` set, the
+iteration is **mixed** exactly like ``serving.Engine``: up to that many
+prompt-chunk tokens (oldest request first) prefill beside the full decode
+batch, priced by ``costmodel.mixed_iter_time`` — a long prompt stretches
+across many iterations instead of freezing the batch, and its request
+produces its first token only when the last chunk lands. With
+``prefill_budget=None`` the legacy whole-prompt model applies: admission
+prefills the entire prompt in the admission iteration
+(``costmodel.prefill_time``) — the §2.1 head-of-line baseline.
 
 Simplifications vs. vLLM (noted in DESIGN.md): admission reserves the
 prompt only (no preemption/swap on overflow — outputs are finite and the
-budget check keeps overflow marginal), prefill shares the iteration with
-decode rather than occupying dedicated iterations.
+budget check keeps overflow marginal).
 """
 from __future__ import annotations
 
@@ -19,7 +25,8 @@ from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.migration import MigrationManager
 from repro.serving.block_pool import blocks_for
-from repro.sim.costmodel import HardwareProfile, decode_iter_time, prefill_time
+from repro.sim.costmodel import (HardwareProfile, decode_iter_time,
+                                 mixed_iter_time, prefill_time)
 from repro.sim.workload import Request
 
 BATCH_CAP = 1024   # vLLM official default (paper §6.1)
@@ -31,6 +38,10 @@ class SimRequest:
     req: Request
     length: int                      # current sequence length
     generated: int = 0
+    # prefill progress (chunked instances): prompt tokens written to
+    # cache. Monolithic instances set it to input_len at admission; a
+    # migrated half-prefilled request carries it to the receiver.
+    ctx_done: int = 0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     migrating: bool = False
@@ -45,6 +56,18 @@ class SimRequest:
     @property
     def done(self) -> bool:
         return self.generated >= self.req.output_len
+
+    @property
+    def prefilling(self) -> bool:
+        return self.ctx_done < self.req.input_len
+
+    @property
+    def kv_len(self) -> int:
+        """Cache rows that physically exist: the written prompt part plus
+        every generated token (= ``length`` once prefill is done). This —
+        not the full ``length`` — is what pins memory and what a
+        migration ships."""
+        return self.ctx_done + self.generated
 
     @property
     def normalized_latency(self) -> float:
@@ -67,10 +90,15 @@ class Instance:
     def __init__(self, inst_id: int, profile: HardwareProfile,
                  capacity_tokens: float, events, *,
                  batch_cap: int = BATCH_CAP,
-                 block_size: int = KV_BLOCK_SIZE):
+                 block_size: int = KV_BLOCK_SIZE,
+                 prefill_budget: Optional[int] = None):
         self.id = inst_id
         self.profile = profile
         self.block_size = block_size
+        # chunked mixed iterations (DESIGN.md §Chunked prefill); None =
+        # legacy monolithic prefill-at-admission
+        self.prefill_budget = prefill_budget
+        self._iter_chunks: List = []     # (sr, chunk_len) planned this iter
         # capacity is block-granular: what a paged allocator can actually
         # hand out (tokens that don't fill a block can't back any request)
         self.capacity_blocks = int(capacity_tokens // block_size)
@@ -101,8 +129,10 @@ class Instance:
         bs = self.block_size
         # inbound_reserved is a sum of already block-rounded per-transfer
         # amounts (cluster reserves block_tokens(length) per migration), so
-        # dividing the total keeps per-transfer granularity
-        return (sum(blocks_for(r.length, bs) for r in self.running)
+        # dividing the total keeps per-transfer granularity. Resident
+        # requests pin kv_len (not length): a half-prefilled prompt pins
+        # only its written blocks.
+        return (sum(blocks_for(r.kv_len, bs) for r in self.running)
                 + blocks_for(self.inbound_reserved, bs))
 
     def kv_tokens(self) -> float:
@@ -121,9 +151,17 @@ class Instance:
         return float((self.capacity_blocks - self.kv_blocks())
                      * self.block_size)
 
+    def queued_tokens(self) -> float:
+        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
+        unwritten remainder of running requests mid-chunked-prefill
+        (mirrors ``serving.Engine.queued_tokens``)."""
+        return float(sum(r.length for r in self.waiting)
+                     + sum(r.req.input_len - r.ctx_done
+                           for r in self.running if r.prefilling))
+
     def load(self) -> float:
         """Token-level load (LoadTracker metric): KV pressure + queue."""
-        return self.kv_tokens() + sum(r.length for r in self.waiting)
+        return self.kv_tokens() + self.queued_tokens()
 
     def request_view(self) -> List:
         """(input_len, current_len) pairs for refinement exchanges."""
@@ -149,6 +187,25 @@ class Instance:
 
     def _start_iteration(self, t: float) -> None:
         admitted: List[SimRequest] = []
+        chunks: List = []                       # (sr, chunk_len) this iter
+        budget = self.prefill_budget
+        if budget is not None:
+            # resume in-progress chunked prefills, oldest admitted first
+            for r in self.running:
+                if budget <= 0:
+                    break
+                if not r.prefilling:
+                    continue
+                c = min(r.req.input_len - r.ctx_done, budget)
+                chunks.append((r, c))
+                budget -= c
+        # unwritten backlog of already-admitted prompts: their rows are
+        # not in kv_blocks yet (chunks land at iteration END), but they
+        # WILL materialize — admission must reserve for them or chunked
+        # instances could blow past capacity (the engine reserves worst
+        # case at admission; this is the sim's equivalent gate)
+        pending = sum(r.req.input_len - r.ctx_done
+                      for r in self.running if r.prefilling)
         while self.waiting and len(self.running) < self.batch_cap:
             if self.waiting[0].length + 1 > self.capacity:
                 # request can never fit this instance: reject (real
@@ -160,31 +217,64 @@ class Instance:
                 if self.on_request_done:
                     self.on_request_done(self, sr, t)
                 continue
-            if self.free_tokens() < self.block_tokens(self.waiting[0].length):
+            if budget is not None and budget <= 0:
+                break
+            if self.free_tokens() < (self.block_tokens(self.waiting[0].length)
+                                     + pending):
                 break
             sr = self.waiting.popleft()
             self.running.append(sr)
             admitted.append(sr)
-        decoding = [r for r in self.running if r not in admitted]
-        dur = sum(prefill_time(r.length, self.profile) for r in admitted)
-        if decoding:
-            dur += decode_iter_time([r.length for r in decoding], self.profile)
+            if budget is None:
+                sr.ctx_done = sr.req.input_len      # monolithic prefill
+            else:
+                pending += sr.req.input_len - sr.ctx_done
+                c = min(sr.req.input_len - sr.ctx_done, budget)
+                chunks.append((sr, c))
+                budget -= c
+        if self.prefill_budget is None:
+            decoding = [r for r in self.running if r not in admitted]
+            dur = sum(prefill_time(r.length, self.profile) for r in admitted)
+            if decoding:
+                dur += decode_iter_time([r.length for r in decoding],
+                                        self.profile)
+        else:
+            # mixed iteration: the decode batch (every fully-prefilled
+            # request) + the packed prompt chunks, one fused step
+            decoding = [r for r in self.running if not r.prefilling]
+            dur = mixed_iter_time([(c, r.ctx_done) for r, c in chunks],
+                                  [r.length for r in decoding], self.profile)
         if not self.running:
             self.iterating = False
             return
+        self._iter_chunks = chunks
         self._iter_start = t
         self.busy_until = t + dur
         self.events.push(t + dur, lambda: self._end_iteration(t + dur,
                                                               admitted))
 
     def _end_iteration(self, t: float, admitted: List[SimRequest]) -> None:
-        n = len(self.running)
-        sumI = sum(r.req.input_len for r in self.running)
-        sumI2 = sum(r.req.input_len ** 2 for r in self.running)
-        sumL = sum(r.length for r in self.running)
+        # the iteration's prompt chunks land: progress advances, and a
+        # request whose LAST chunk landed joins the producers this very
+        # iteration (its first token — mirrors serving.Engine). A request
+        # the migration fabric removed from `running` mid-iteration is
+        # skipped: its shipped KV is what the receiver adopted, so the
+        # source must not claim rows that never transferred. (A request
+        # still resident but `migrating` DOES advance — that is live
+        # migration's source-keeps-working semantics; the multi-round
+        # copy model ships the delta.)
+        for r, c in self._iter_chunks:
+            if r in self.running:
+                r.ctx_done += c
+        self._iter_chunks = []
+        producers = [r for r in self.running if not r.prefilling]
+        n = len(producers)
+        sumI = sum(r.req.input_len for r in producers)
+        sumI2 = sum(r.req.input_len ** 2 for r in producers)
+        sumL = sum(r.length for r in producers)
         finished: List[SimRequest] = []
         produced = 0
-        for r in self.running:
+        for r in producers:
             if r.first_token_t is None:
                 r.first_token_t = t
             r.generated += 1

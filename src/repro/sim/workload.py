@@ -75,6 +75,28 @@ def generate(spec: WorkloadSpec) -> List[Request]:
             for i in range(n)]
 
 
+def longtail_spec(rate: float, duration: float, *, seed: int = 0,
+                  tail_frac: float = 0.08,
+                  max_context: int = MAX_CONTEXT) -> WorkloadSpec:
+    """The scenario chunked prefill exists for (paper §2.1 / Fig. 1): a
+    log-normal body of ordinary dialogue turns with a heavy 32K–128K
+    *prompt* tail — long-context requests whose monolithic prefill would
+    freeze a whole instance for seconds. The Pareto tail is scaled so the
+    bulk of tail prompts lands in [32K, 128K] (alpha 1.05 ⇒ a 128K-capped
+    median around 60K)."""
+    return WorkloadSpec(rate=rate, duration=duration, seed=seed,
+                        tail_frac=tail_frac, tail_alpha=1.05,
+                        tail_scale=32_000.0, max_context=max_context)
+
+
+def generate_longtail(rate: float, duration: float, *, seed: int = 0,
+                      max_context: int = MAX_CONTEXT) -> List[Request]:
+    """`generate` over `longtail_spec` — the benchmark entry point
+    (`benchmarks/bench_chunked_prefill.py`, fig-6/7 long-context runs)."""
+    return generate(longtail_spec(rate, duration, seed=seed,
+                                  max_context=max_context))
+
+
 def trace_requests(path: str, rate: float, seed: int = 0) -> List[Request]:
     """Load (input_len, output_len) pairs from a CSV trace file and attach
     Poisson arrivals — the hook for a real ShareGPT trace."""

@@ -444,16 +444,22 @@ def test_request_never_double_offered():
 class FakeEngine:
     """Deterministic, compute-free stand-in for `serving.engine.Engine`:
     same lifecycle (admit → one token per step → finish), same accounting
-    surface, instant exports/imports."""
+    surface, instant exports/imports. ``prefill_budget`` mirrors the
+    chunked mixed-iteration scheduler: at most that many prompt tokens
+    progress per step (oldest request first), a request generates only
+    once its prompt is fully prefilled, and views report prefill
+    progress."""
 
     def __init__(self, eid, max_slots=8, token_budget=100_000,
-                 max_seq=100_000):
+                 max_seq=100_000, prefill_budget=None):
         self.id = eid
         self.max_slots = max_slots
         self.token_budget = token_budget
         self.max_seq = max_seq
+        self.prefill_budget = prefill_budget
         self.slots = [None] * max_slots
         self.waiting = deque()
+        self._prefill_order = []
         self.steps = 0
         self.tokens_out = 0
 
@@ -464,7 +470,9 @@ class FakeEngine:
         return sum(r.length for r in self.active())
 
     def queued_tokens(self):
-        return sum(len(r.prompt) for r in self.waiting)
+        return (sum(len(r.prompt) for r in self.waiting)
+                + sum(len(r.prompt) - r.ctx_done for r in self.active()
+                      if r.ctx_done < len(r.prompt)))
 
     def free_tokens(self):
         return self.token_budget - self.used_tokens()
@@ -498,22 +506,52 @@ class FakeEngine:
         return slot
 
     def _release(self, slot):
+        if self.slots[slot] in self._prefill_order:
+            self._prefill_order.remove(self.slots[slot])
         self.slots[slot] = None
+
+    def _first_token(self, req):
+        req.generated.append(0)              # prefill's first token
+        req.first_token_step = self.steps
+        req.tokens_by_engine[self.id] += 1
+        self.tokens_out += 1
 
     def step(self):
         from repro.serving.request import State
         self.steps += 1
         finished = []
-        while self.waiting and self.can_accept(self.waiting[0]):
-            req = self.waiting.popleft()
-            self._place(req)
-            req.generated.append(0)          # prefill's first token
-            req.first_token_step = self.steps
-            req.tokens_by_engine[self.id] += 1
-            self.tokens_out += 1
+        budget = self.prefill_budget
+        if budget is None:
+            while self.waiting and self.can_accept(self.waiting[0]):
+                req = self.waiting.popleft()
+                self._place(req)
+                req.ctx_done = len(req.prompt)
+                self._first_token(req)
+        else:
+            # chunked mixed iteration: resume oldest-first, then admit
+            for req in list(self._prefill_order):
+                if budget <= 0:
+                    break
+                c = min(len(req.prompt) - req.ctx_done, budget)
+                req.ctx_done += c
+                budget -= c
+                if req.ctx_done >= len(req.prompt):
+                    self._prefill_order.remove(req)
+                    self._first_token(req)
+            while (self.waiting and budget > 0
+                   and self.can_accept(self.waiting[0])):
+                req = self.waiting.popleft()
+                self._place(req)
+                c = min(len(req.prompt) - req.ctx_done, budget)
+                req.ctx_done += c
+                budget -= c
+                if req.ctx_done >= len(req.prompt):
+                    self._first_token(req)
+                else:
+                    self._prefill_order.append(req)
         for slot, req in enumerate(list(self.slots)):
-            if req is None:
-                continue
+            if req is None or req.ctx_done < len(req.prompt):
+                continue                     # mid-prefill: no decode yet
             req.generated.append(0)
             req.tokens_by_engine[self.id] = \
                 req.tokens_by_engine.get(self.id, 0) + 1
@@ -536,13 +574,19 @@ class FakeEngine:
         if not self.can_accept(req):
             return False
         self._place(req)
+        if req.ctx_done < len(req.prompt):      # resume chunking here
+            self._prefill_order.append(req)
         return True
 
 
-def test_sim_and_server_make_identical_decisions():
-    """The acceptance test of ISSUE 2: both drivers of the shared core —
-    discrete-event simulator and step-synchronous server — produce the
-    same routing AND migration decision log on a fixed trace.
+@pytest.mark.parametrize("prefill_budget", [None, 8])
+def test_sim_and_server_make_identical_decisions(prefill_budget):
+    """The acceptance test of ISSUE 2 (now with prefill-progress-aware
+    views): both drivers of the shared core — discrete-event simulator
+    and step-synchronous server — produce the same routing AND migration
+    decision log on a fixed trace, with monolithic prefill and with the
+    chunked mixed-iteration scheduler (prompts span several iterations
+    before their first token, queued_tokens counts un-prefilled only).
 
     Setup keeps decisions timing-independent: deterministic rr handover
     (no load-sensitive bids), frozen boundaries, spaced arrivals, uniform
@@ -562,7 +606,9 @@ def test_sim_and_server_make_identical_decisions():
     trace = [Request(i, 8.0 * i, il, ol) for i, (il, ol) in enumerate(lens)]
     policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
     cluster = Cluster(profile_from_config(get_config("llama3.2-3b")),
-                      policy, ClusterConfig(num_instances=4, seed=0))
+                      policy, ClusterConfig(num_instances=4, seed=0,
+                                            prefill_token_budget=
+                                            prefill_budget))
     res = cluster.run(trace, duration=60.0)
     assert len(res.completed) == len(trace)
     sim_log = policy.plane.decisions
@@ -570,7 +616,8 @@ def test_sim_and_server_make_identical_decisions():
     # --- server driver (fake engines, no JAX) -----------------------------
     srv = MILSServer(None, None, plan, None,
                      ServerConfig(refinement="none", balancing="rr", seed=0),
-                     engine_factory=lambda i: FakeEngine(i))
+                     engine_factory=lambda i: FakeEngine(
+                         i, prefill_budget=prefill_budget))
     for i, (il, ol) in enumerate(lens):
         srv.submit_at(ServeRequest(i, np.zeros(il, np.int32), ol),
                       step=8 * i)
