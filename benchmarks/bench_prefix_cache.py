@@ -1,0 +1,186 @@
+"""Prefix cache: cold vs. warm TTFT and prefill work skipped
+(DESIGN.md §Prefix cache).
+
+Two views:
+
+  * **engine** — a real reduced-model engine serves the SAME prompt cold,
+    then warm: the warm run must produce bit-identical greedy tokens
+    while skipping >= 90% of the prefill block-work (the engine's
+    ``prefill_work_blocks`` counter — the chunk-grid-step mirror) and the
+    matching attention FLOPs (``kernels.cost.prefill_flops_skipped``).
+    ``--no-prefix-cache`` measures the legacy path for the delta.
+  * **sim** — `compare_policies(workload="shared_prefix")`: the
+    system-prompt/multi-turn cluster trace, cascade vs. round-robin, with
+    the group-granular cache mirror on and off.
+
+Emits BENCH_prefix_cache.json next to this file; `run()` feeds
+benchmarks/run.py. The asserted acceptance (CI smoke): warm tokens
+bit-identical to cold, >= 90% of prefill block-work skipped, warm TTFT
+strictly below cold.
+
+Run: PYTHONPATH=src python benchmarks/bench_prefix_cache.py
+     [--prompt 8192] [--budget 256] [--new-tokens 16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.kernels.cost import prefill_flops, prefill_flops_skipped
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest, State
+from repro.sim.costmodel import profile_from_config
+
+
+def _serve(eng, req):
+    """Submit and drain one request; returns wall TTFT seconds."""
+    eng.submit(req)
+    t0 = time.perf_counter()
+    ttft = None
+    while req.state is not State.FINISHED:
+        eng.step()
+        if ttft is None and req.first_token_step is not None:
+            ttft = time.perf_counter() - t0
+    eng.allocator.check_invariants()
+    return ttft
+
+
+def run_engine_scenario(model, params, *, prompt_len, budget, new_tokens,
+                        prefix_cache=True, seed=0):
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab_size
+    max_seq = 1 << (prompt_len + 2 * new_tokens + 64).bit_length()
+    eng = Engine(0, model, params, max_slots=2, max_seq=max_seq,
+                 token_budget=2 * (prompt_len + new_tokens) + 1024,
+                 prefill_token_budget=budget, attn_backend="dense",
+                 prefix_cache=prefix_cache)
+    # jit warmup on a DIFFERENT prompt (same shapes, disjoint chain),
+    # served cold AND warm, so neither measured run pays compilation
+    dummy = rng.integers(0, vocab, prompt_len).astype(np.int32)
+    _serve(eng, ServeRequest(7, dummy.copy(), new_tokens))
+    _serve(eng, ServeRequest(8, dummy.copy(), new_tokens))
+    prompt = rng.integers(0, vocab, prompt_len).astype(np.int32)
+    work0 = eng.prefill_work_blocks
+    cold = ServeRequest(0, prompt.copy(), new_tokens)
+    cold_ttft = _serve(eng, cold)
+    cold_work = eng.prefill_work_blocks - work0
+    warm = ServeRequest(1, prompt.copy(), new_tokens)
+    warm_ttft = _serve(eng, warm)
+    warm_work = eng.prefill_work_blocks - work0 - cold_work
+    cached = warm.cached_tokens
+    spec = profile_from_config(model.cfg).attn_spec
+    return {
+        "prefix_cache": prefix_cache,
+        "prompt_len": prompt_len,
+        "cold_ttft_s": cold_ttft,
+        "warm_ttft_s": warm_ttft,
+        "cold_work_blocks": cold_work,
+        "warm_work_blocks": warm_work,
+        "block_work_skipped": 1.0 - warm_work / max(cold_work, 1),
+        "warm_cached_tokens": int(cached),
+        "prefill_flops_total": prefill_flops(prompt_len, spec),
+        "prefill_flops_skipped": prefill_flops_skipped(prompt_len, cached,
+                                                       spec),
+        "tokens": {"cold": list(cold.generated),
+                   "warm": list(warm.generated)},
+    }
+
+
+def run_sim_scenario(*, rate=8.0, duration=12.0, E=4, seed=0):
+    from repro.sim.experiment import compare_policies
+    out = {}
+    for label, pc in (("cached", True), ("cold", False)):
+        res = compare_policies("llama3.2-3b", rate=rate, duration=duration,
+                               E=E, seed=seed, workload="shared_prefix",
+                               prefill_token_budget=512, prefix_cache=pc,
+                               kinds=("round-robin", "cascade"))
+        for kind, r in res.items():
+            s = r.summary()
+            out[f"{kind}/{label}"] = {
+                "ttft_mean_s": s["ttft_mean"], "ttft_p95_s": s["ttft_p95"],
+                "completed": s["completed"]}
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompt", type=int, default=8192,
+                    help="prompt length shared by the cold and warm run")
+    ap.add_argument("--budget", type=int, default=256)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--skip-sim", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    out = {"config": {"arch": cfg.name, "prompt": args.prompt,
+                      "budget": args.budget,
+                      "jax_backend": jax.default_backend()}}
+    r = run_engine_scenario(model, params, prompt_len=args.prompt,
+                            budget=args.budget, new_tokens=args.new_tokens)
+    legacy = run_engine_scenario(model, params, prompt_len=args.prompt,
+                                 budget=args.budget,
+                                 new_tokens=args.new_tokens,
+                                 prefix_cache=False)
+    # acceptance: warm tokens bit-identical to cold — on BOTH paths — and
+    # the cache changes latency/work only, never tokens
+    assert r["tokens"]["warm"] == r["tokens"]["cold"], "warm tokens diverged"
+    assert legacy["tokens"]["warm"] == legacy["tokens"]["cold"]
+    assert r["tokens"]["cold"] == legacy["tokens"]["cold"], \
+        "prefix cache changed cold-path tokens"
+    assert r["block_work_skipped"] >= 0.90, \
+        f"only {r['block_work_skipped']:.1%} of prefill block-work skipped"
+    assert r["warm_ttft_s"] < r["cold_ttft_s"], "warm TTFT not below cold"
+    for d in (r, legacy):
+        d.pop("tokens")
+    out["engine"], out["engine_legacy"] = r, legacy
+    print(f"-- cold ttft {r['cold_ttft_s']*1e3:8.1f} ms  "
+          f"work {r['cold_work_blocks']} blocks")
+    print(f"-- warm ttft {r['warm_ttft_s']*1e3:8.1f} ms  "
+          f"work {r['warm_work_blocks']} blocks  "
+          f"({r['block_work_skipped']:.1%} skipped, "
+          f"{r['prefill_flops_skipped']:.3g} FLOPs/layer)")
+
+    if not args.skip_sim:
+        out["sim"] = run_sim_scenario()
+        for k, v in out["sim"].items():
+            print(f"-- sim {k:22s} ttft mean {v['ttft_mean_s']:.3f} s  "
+                  f"p95 {v['ttft_p95_s']:.3f} s")
+
+    path = Path(__file__).resolve().parent / "BENCH_prefix_cache.json"
+    path.write_text(json.dumps(out, indent=2))
+    print("wrote", path)
+    return out
+
+
+def run():
+    """benchmarks/run.py entry: small engine scenario + the sim compare."""
+    from benchmarks.common import row
+    out = main(["--prompt", "2048", "--budget", "64", "--new-tokens", "8"])
+    rows = [row("prefix_cache/engine/cold",
+                out["engine"]["cold_ttft_s"] * 1e6,
+                work_blocks=out["engine"]["cold_work_blocks"]),
+            row("prefix_cache/engine/warm",
+                out["engine"]["warm_ttft_s"] * 1e6,
+                work_blocks=out["engine"]["warm_work_blocks"],
+                skipped=out["engine"]["block_work_skipped"])]
+    for k, v in out.get("sim", {}).items():
+        rows.append(row(f"prefix_cache/sim/{k}", v["ttft_mean_s"] * 1e6,
+                        ttft_p95=v["ttft_p95_s"], completed=v["completed"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ MODULES = [
     "bench_roofline",         # §Roofline summary from the dry-run
     "bench_longtail",         # §Chunked prefill: 32K-128K prompt tail,
                               # chunked vs monolithic sim iterations
+    "bench_prefix_cache",     # §Prefix cache: cold vs warm TTFT +
+                              # prefill work skipped; shared-prefix sim
 ]
 
 

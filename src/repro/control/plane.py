@@ -120,8 +120,19 @@ class ControlPlane:
                 return i
         return len(self.stages) - 1
 
-    def route(self, req_id: int, length: float) -> int:
-        """Pure placement decision for one arrival."""
+    def route(self, req_id: int, length: float, *,
+              cached_tokens: float = 0.0,
+              prefix_digest: Optional[int] = None) -> int:
+        """Pure placement decision for one arrival.
+
+        Cache-aware routing (DESIGN.md §Prefix cache): the length that
+        matters is the UNCACHED one — a 30K prompt whose first 28K tokens
+        are resident somewhere is a short request, so stage selection uses
+        ``length - cached_tokens`` (reservations on the chosen backend
+        still cover true length). Within the stage, dispatch tie-breaks
+        toward instances advertising the request's prefix-head digest, so
+        repeat prefixes land where their blocks already live; the stage RR
+        counter advances either way, keeping placement deterministic."""
         if self.cfg.policy == "round-robin":
             c = self._rr.get(_RR_GLOBAL, 0)
             self._rr[_RR_GLOBAL] = c + 1
@@ -129,17 +140,25 @@ class ControlPlane:
         elif self.cfg.policy == "least-loaded":
             iid = min(self._order, key=lambda i: self.instances[i].load())
         else:
-            si = self.stage_for(length)
+            si = self.stage_for(max(length - cached_tokens, 1.0))
             ids = self.stages[si].instance_ids
             c = self._rr.get(si, 0)
             self._rr[si] = c + 1
+            if prefix_digest is not None:
+                warm = [i for i in ids
+                        if prefix_digest in self.instances[i].prefix_digests()]
+                if warm:
+                    ids = warm
             iid = ids[c % len(ids)]
         self.decisions.append(("route", req_id, iid))
         return iid
 
-    def submit(self, ref: Any, req_id: int, length: float) -> int:
+    def submit(self, ref: Any, req_id: int, length: float, *,
+               cached_tokens: float = 0.0,
+               prefix_digest: Optional[int] = None) -> int:
         """Route an arrival and hand it to the backend."""
-        iid = self.route(req_id, length)
+        iid = self.route(req_id, length, cached_tokens=cached_tokens,
+                         prefix_digest=prefix_digest)
         self.ops.dispatch(ref, iid)
         return iid
 

@@ -46,6 +46,11 @@ class ReqView:
     length: float               # current sequence length
     ctx_done: float = 0.0       # prompt tokens whose KV is written
     ctx_total: float = 0.0      # prompt tokens overall
+    # prompt tokens served from the backend's prefix cache (block-aligned,
+    # <= ctx_done). Effective — uncached — lengths drive stage routing and
+    # queue accounting; migration reservations still use true length,
+    # because a migrated shared prefix re-imports as private.
+    cached_tokens: float = 0.0
 
     @property
     def prefill_done(self) -> bool:
@@ -71,10 +76,18 @@ class InstanceView(Protocol):
         ...
 
     def queued_tokens(self) -> float:
-        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
-        unwritten remainder of requests mid-chunked-prefill. The written
-        part of a partial prompt is pinned cache and belongs to
-        ``used_tokens`` — the two never count a token twice."""
+        """UN-PREFILLED, UNCACHED prompt tokens: whole waiting prompts
+        (minus their prefix-cache hit) plus the unwritten remainder of
+        requests mid-chunked-prefill. The written part of a partial
+        prompt is pinned cache and belongs to ``used_tokens`` — the two
+        never count a token twice."""
+        ...
+
+    def prefix_digests(self) -> frozenset:
+        """Compact advertisement of the instance's prefix cache: the head
+        digest (first full block) of every cached chain. Within-stage
+        dispatch tie-breaks toward instances advertising an arrival's
+        digest; backends without a prefix cache return an empty set."""
         ...
 
     def requests(self) -> List[ReqView]:

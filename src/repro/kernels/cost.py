@@ -129,6 +129,25 @@ def prefill_chunk_flops(chunk: int, ctx: int, spec: AttnSpec) -> float:
     return 4.0 * spec.num_q_heads * spec.head_dim * chunk * (ctx + own)
 
 
+def prefill_flops(input_len: int, spec: AttnSpec,
+                  cached_tokens: int = 0) -> float:
+    """Attention MXU FLOPs one layer spends prefilling a prompt of which
+    ``cached_tokens`` leading tokens are already resident in the prefix
+    cache (DESIGN.md §Prefix cache): only the uncached tail runs, as one
+    logical chunk attending to the cached context plus itself. With
+    ``cached_tokens=0`` this is the whole-prompt causal count."""
+    cached = min(int(cached_tokens), max(int(input_len) - 1, 0))
+    return prefill_chunk_flops(int(input_len) - cached, cached, spec)
+
+
+def prefill_flops_skipped(input_len: int, cached_tokens: int,
+                          spec: AttnSpec) -> float:
+    """FLOPs a warm prefill never runs vs. a cold one — the benchmark's
+    prefill-FLOPs-skipped counter (`benchmarks/bench_prefix_cache.py`)."""
+    return (prefill_flops(input_len, spec)
+            - prefill_flops(input_len, spec, cached_tokens))
+
+
 def prefill_chunk_attn_time_s(chunk: int, ctx: int, spec: AttnSpec) -> float:
     """Wall time of one chunk's paged-prefill attention: DMA of the
     context blocks (HBM→VMEM, per kv head) vs. the chunk's MXU time —

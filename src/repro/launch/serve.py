@@ -60,6 +60,14 @@ def main() -> None:
     ap.add_argument("--no-chunked-prefill", action="store_true",
                     help="monolithic whole-prompt prefill (the §2.1 "
                          "head-of-line baseline)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="refcounted prefix-shared KV pool (DESIGN.md "
+                         "§Prefix cache; the default)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable prefix sharing — the bit-parity "
+                         "legacy allocator path")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="workload arrivals/s, replayed at 1 step/s")
     ap.add_argument("--seed", type=int, default=0)
@@ -79,7 +87,8 @@ def main() -> None:
                      device_resident=False if args.host_loop else None,
                      prefill_token_budget=args.prefill_budget,
                      chunked_prefill=(False if args.no_chunked_prefill
-                                      else None))
+                                      else None),
+                     prefix_cache=args.prefix_cache)
     # the same ShareGPT-shaped trace the simulator runs, arrival times
     # mapped to server steps, lengths capped to the reduced model
     spec = WorkloadSpec(rate=args.arrival_rate,

@@ -59,7 +59,8 @@ from repro.core.migration import (gather_kv_blocks, kv_bytes,
 from repro.kernels.cost import pow2_bucket
 from repro.models.attention import resolve_paged_backend
 from repro.models.model import Model
-from repro.serving.block_pool import BlockAllocator, blocks_for
+from repro.serving.block_pool import (BlockAllocator, blocks_for, chain_hash,
+                                      prompt_chain)
 from repro.serving.request import ServeRequest, State
 
 DEFAULT_BLOCK_SIZE = 16
@@ -100,7 +101,8 @@ class Engine:
                  device_resident: Optional[bool] = None,
                  attn_backend: Optional[str] = None,
                  prefill_token_budget: Optional[int] = None,
-                 chunked_prefill: Optional[bool] = None):
+                 chunked_prefill: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
         self.id = engine_id
@@ -174,6 +176,17 @@ class Engine:
                 model.prefill_chunk,
                 attn_backend=self.attn_backend,
                 attn_interpret=self.attn_interpret))
+        # Refcounted prefix cache (DESIGN.md §Prefix cache): admission
+        # shares already-resident full prompt blocks and starts chunked
+        # prefill at ctx_done = cached_tokens, so a warm request skips the
+        # cached blocks' prefill work entirely. Needs the chunked paged
+        # path (warm starts resume mid-prompt); prefix_cache=False is the
+        # bit-parity legacy path.
+        self.prefix_cache = (self.chunked_prefill if prefix_cache is None
+                             else bool(prefix_cache and self.chunked_prefill))
+        if self.paged:
+            self._slot_rblocks = [0] * max_slots   # reserved blocks per slot
+            self._slot_shared = [0] * max_slots    # shared table-head blocks
         self.slot_len = np.zeros(max_slots, np.int32)       # tokens in cache
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
         self.slot_reserved = np.zeros(max_slots, np.int64)  # worst-case tokens
@@ -181,6 +194,14 @@ class Engine:
         self.steps = 0
         self.tokens_out = 0
         self.peak_kv_bytes = 0.0
+        # prefill cost counters (bench_prefix_cache reads them): block-work
+        # actually run by prefill (Σ per chunk ceil((ctx+clen)/BS) — the
+        # grid-step mirror) vs. prompt tokens served straight from the
+        # prefix index. A warm identical prompt shows up as a collapsed
+        # prefill_work_blocks and a matching cached_prompt_tokens_total.
+        self.prefill_work_blocks = 0
+        self.prefill_tokens_done = 0
+        self.cached_prompt_tokens_total = 0
         # last decode's grid accounting (bench_decode_hotloop reads it):
         # flat_items = work items the flat grid runs (pow2 bucket),
         # real_items = Σ_b ceil(L_b/BS), padded_items = B·max_b ceil(L_b/BS)
@@ -210,11 +231,14 @@ class Engine:
         return int(self.slot_reserved.sum())
 
     def queued_tokens(self) -> int:
-        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
+        """UN-PREFILLED, UNCACHED prompt tokens: whole waiting prompts
+        (minus their prefix-cache hit, estimated at submit) plus the
         not-yet-written remainder of requests mid-chunked-prefill. The
         written part of a partial prompt is already pinned cache and shows
-        up in ``used_tokens`` — one token never counts twice."""
-        q = sum(len(r.prompt) for r in self.waiting)
+        up in ``used_tokens`` — one token never counts twice, and a warm
+        30K prompt whose first 28K tokens are resident queues as the
+        short request it effectively is (DESIGN.md §Prefix cache)."""
+        q = sum(len(r.prompt) - r.cached_tokens for r in self.waiting)
         q += sum(len(r.prompt) - r.ctx_done
                  for r in self.active() if r.prefilling)
         return int(q)
@@ -241,9 +265,75 @@ class Engine:
     def request_view(self) -> List[Tuple[float, float]]:
         return [(float(len(r.prompt)), float(r.length)) for r in self.active()]
 
+    # ---- prefix cache (DESIGN.md §Prefix cache) ------------------------------
+    def _prompt_digests(self, prompt) -> List[int]:
+        """Chain digests of the prompt's full blocks, capped at
+        ``(len-1)//BS`` so even a fully-cached identical prompt still
+        prefill-computes >= 1 token (the first output token needs the last
+        position's logits)."""
+        return prompt_chain(prompt, self.block_size,
+                            limit=(len(prompt) - 1) // self.block_size)
+
+    def _req_digests(self, req: ServeRequest) -> List[int]:
+        """Per-request digest memo: the prompt is immutable, so its sha1
+        chain is computed ONCE per block size — not per hint probe, per
+        submit, and per admission re-check of the waiting-queue head."""
+        cache = req.prefix_digests_memo
+        if cache is None or cache[0] != self.block_size:
+            cache = (self.block_size, self._prompt_digests(req.prompt))
+            req.prefix_digests_memo = cache
+        return cache[1]
+
+    def _cached_chain(self, req: ServeRequest) -> List[int]:
+        """Longest resident block chain for this prompt ([] when the
+        cache is off or cold)."""
+        if not self.prefix_cache:
+            return []
+        return self.allocator.lookup(self._req_digests(req))
+
+    def prefix_hint(self, req: ServeRequest):
+        """(head_digest, cached_tokens) for dispatch: the digest of the
+        prompt's first full block (None for sub-block prompts) and the
+        tokens resident here. The digest is content-derived, so it is
+        identical across engines for the same prompt."""
+        if not self.prefix_cache or len(req.prompt) <= self.block_size:
+            return None, 0
+        digests = self._req_digests(req)
+        cached = len(self.allocator.lookup(digests)) * self.block_size
+        return digests[0], cached
+
+    def prefix_digests(self) -> frozenset:
+        """Head digests of every cached chain — the compact advertisement
+        within-stage dispatch tie-breaks on."""
+        if not self.paged or not self.prefix_cache:
+            return frozenset()
+        return self.allocator.head_digests()
+
+    def _publish_prompt(self, req: ServeRequest, slot: int) -> None:
+        """Prefill finished: publish the prompt's FULL blocks into the
+        prefix index (first writer wins; the partial tail block — which
+        generation keeps writing — is never published). Extends the
+        request's digest memo instead of re-hashing the prompt: the
+        capped lookup chain misses at most the final full block
+        (prompts whose length is an exact block multiple)."""
+        table = self.block_tables[slot]
+        digests = list(self._req_digests(req))
+        n_full = len(req.prompt) // self.block_size
+        if len(digests) < n_full:           # len(prompt) % BS == 0
+            parent = digests[-1] if digests else 0
+            start = len(digests) * self.block_size
+            digests.append(chain_hash(
+                parent, req.prompt[start:start + self.block_size]))
+        for j, h in enumerate(digests[:n_full]):
+            self.allocator.publish(table[j], h, head=(j == 0))
+
     # ---- intake -------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
         req.state = State.WAITING
+        # prefix-hit hint for queued_tokens/load while the request waits
+        # (refreshed authoritatively at admission)
+        req.cached_tokens = (len(self._cached_chain(req)) * self.block_size
+                             if self.paged and self.prefix_cache else 0)
         self.waiting.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -272,8 +362,17 @@ class Engine:
             if req.length + remaining > self.max_seq:
                 return False
         if self.paged:
-            return self.allocator.can_reserve(
-                blocks_for(self._worst_tokens(req), self.block_size))
+            # admission reserves only the uncached tail: resident prefix
+            # blocks are shared, not re-allocated — but sharing a PARKED
+            # (refcount-0) chain revives it into cached_live, so the gate
+            # charges that revival too or `reserved + cached_live` could
+            # overshoot num_blocks. Migrated-in (RUNNING) requests
+            # re-import as private, so they reserve true length.
+            need = blocks_for(self._worst_tokens(req), self.block_size)
+            if req.state is not State.RUNNING:
+                chain = self._cached_chain(req)
+                need += self.allocator.revival_cost(chain) - len(chain)
+            return self.allocator.can_reserve(need)
         return self.reserved_tokens() + self._worst_tokens(req) \
             <= self.token_budget
 
@@ -300,10 +399,13 @@ class Engine:
             admitted.append(req)
         return admitted
 
-    def _reserve(self, req: ServeRequest, slot: int) -> None:
+    def _reserve(self, req: ServeRequest, slot: int,
+                 cached_blocks: int = 0) -> None:
         worst = self._worst_tokens(req)
         if self.paged:
-            self.allocator.reserve(blocks_for(worst, self.block_size))
+            rb = blocks_for(worst, self.block_size) - cached_blocks
+            self.allocator.reserve(rb)
+            self._slot_rblocks[slot] = rb
         self.slot_reserved[slot] = worst
 
     # ---- device-mirror helpers (paged + device_resident) ---------------------
@@ -344,6 +446,8 @@ class Engine:
             self.block_tables[slot] = ids
             self.cache = _write_prompt_blocks(self.cache, piece, ids,
                                               self.block_size)
+            self.prefill_work_blocks += len(ids)
+            self.prefill_tokens_done += len(req.prompt)
         else:
             logits, piece = self._prefill(self.params, {"tokens": tokens},
                                           cache_len=self.max_seq)
@@ -380,6 +484,8 @@ class Engine:
         self.block_tables[slot] = ids
         self.cache = _write_prompt_blocks(self.cache, piece, ids,
                                           self.block_size)
+        self.prefill_work_blocks += len(ids)
+        self.prefill_tokens_done += T
         tok_dev = jnp.argmax(logits[0]).astype(jnp.int32)
         self._ensure_nbt_cap(len(ids))
         self._dev_set_table(slot, ids)
@@ -434,15 +540,27 @@ class Engine:
                 break
             slot = self._free_slot()
             self.waiting.popleft()
-            self._reserve(req, slot)
+            # longest cached chain: share those blocks (refcount++, zero
+            # copies), reserve only the uncached tail, and start chunking
+            # at ctx_done = cached_tokens — the cached blocks' prefill
+            # work never runs (DESIGN.md §Prefix cache)
+            shared = self._cached_chain(req)
+            self._reserve(req, slot, cached_blocks=len(shared))
+            self._slot_shared[slot] = len(shared)
+            if shared:
+                self.allocator.share(shared)
+                self.cached_prompt_tokens_total += \
+                    len(shared) * self.block_size
+            req.cached_tokens = len(shared) * self.block_size
             req.state = State.RUNNING
             req.engine_id = self.id
             req.slot = slot
-            req.ctx_done = 0
+            req.ctx_done = req.cached_tokens
+            self.block_tables[slot] = list(shared)
             self.slots[slot] = req
-            self.slot_len[slot] = 0
+            self.slot_len[slot] = req.ctx_done
             self._prefill_order.append(slot)
-            clen = min(len(req.prompt), budget)
+            clen = min(len(req.prompt) - req.ctx_done, budget)
             plan.append((slot, clen))
             budget -= clen
         if plan:
@@ -468,6 +586,8 @@ class Engine:
             if need > len(table):
                 table.extend(self.allocator.allocate(need - len(table)))
             nbt = max(nbt, blocks_for(req.ctx_done + C, self.block_size))
+            self.prefill_work_blocks += need    # grid-step mirror
+            self.prefill_tokens_done += clen
         nbt = _next_pow2(nbt)
         toks = np.zeros((B, C), np.int32)
         bt = np.full((B, nbt), self.garbage_block, np.int32)
@@ -491,7 +611,10 @@ class Engine:
             self.slot_len[slot] = req.ctx_done
             if req.ctx_done < T:
                 continue
-            # final chunk: the first token exists
+            # final chunk: the first token exists; the finished prompt's
+            # full blocks become shareable for every later arrival
+            if self.prefix_cache:
+                self._publish_prompt(req, slot)
             self._prefill_order.remove(slot)
             tok_dev = jnp.argmax(logits[j]).astype(jnp.int32)
             req.first_token_step = self.steps
@@ -768,10 +891,22 @@ class Engine:
         if slot in self._prefill_order:     # evicted mid-prefill
             self._prefill_order.remove(slot)
         if self.paged:
-            self.allocator.free(self.block_tables[slot])
+            # shared prefix blocks (the table's head, taken via share at
+            # admission) drop a borrowed reference; the private remainder
+            # releases as owner. Published blocks at refcount 0 park in
+            # the reclaimable LRU instead of freeing — still warm for the
+            # next identical prefix.
+            s = self._slot_shared[slot]
+            self._slot_shared[slot] = 0
+            table = self.block_tables[slot]
+            if s:
+                self.allocator.release(table[:s], owned=False)
+                self.allocator.release(table[s:], owned=True)
+            else:
+                self.allocator.release(table, owned=True)
             self.block_tables[slot] = []
-            self.allocator.unreserve(
-                blocks_for(int(self.slot_reserved[slot]), self.block_size))
+            self.allocator.unreserve(self._slot_rblocks[slot])
+            self._slot_rblocks[slot] = 0
             if self.device_resident:
                 self._dev_clear_slot(slot)
         self.slot_reserved[slot] = 0
@@ -827,6 +962,11 @@ class Engine:
         if not self.can_accept(req):
             return False
         slot = self._free_slot()
+        # a migrated shared prefix re-imports as PRIVATE (DESIGN.md
+        # §Prefix cache): the wire piece is a plain contiguous gather, the
+        # receiver allocates fresh blocks and reserves true length —
+        # sharing is re-established only by the receiver's own index
+        req.cached_tokens = 0
         self._reserve(req, slot)
         if self.paged and req.prefilling:
             written = req.ctx_done

@@ -34,6 +34,21 @@ class ServeRequest:
     # migrated half-prefilled request carries it to the receiver, which
     # resumes chunking from here.
     ctx_done: int = 0
+    # prefix-cache state (DESIGN.md §Prefix cache): prompt tokens served
+    # from this engine's shared block index — always block-aligned, <=
+    # ctx_done once running. A migrated shared prefix re-imports as
+    # private, so import_request resets this to 0.
+    cached_tokens: int = 0
+    # workload identity of a shared prefix (set by requests_from_trace for
+    # traces carrying prefix groups). The REAL engine never reads these —
+    # it matches on token content — but the FakeEngine parity harness and
+    # dispatch-digest tests key on them.
+    prefix_group: int = -1
+    prefix_len: int = 0
+    # (block_size, chain digests) memo — the prompt is immutable, so its
+    # digest chain is computed once, not per hint probe/admission check
+    prefix_digests_memo: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
     # per-engine token counts (load-balance accounting, Fig. 16)
     tokens_by_engine: Dict[int, int] = dataclasses.field(default_factory=dict)
 

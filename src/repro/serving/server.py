@@ -70,8 +70,13 @@ class EngineView:
     def requests(self) -> List[ReqView]:
         return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length),
                         ctx_done=float(r.ctx_done),
-                        ctx_total=float(len(r.prompt)))
+                        ctx_total=float(len(r.prompt)),
+                        cached_tokens=float(r.cached_tokens))
                 for r in self.eng.slots if r is not None]
+
+    def prefix_digests(self) -> frozenset:
+        fn = getattr(self.eng, "prefix_digests", None)
+        return fn() if fn is not None else frozenset()
 
     def request_view(self):
         return self.eng.request_view()
@@ -121,6 +126,7 @@ class MILSServer:
                  attn_backend: Optional[str] = None,
                  prefill_token_budget: Optional[int] = None,
                  chunked_prefill: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
@@ -134,7 +140,8 @@ class MILSServer:
                               device_resident=device_resident,
                               attn_backend=attn_backend,
                               prefill_token_budget=prefill_token_budget,
-                              chunked_prefill=chunked_prefill)
+                              chunked_prefill=chunked_prefill,
+                              prefix_cache=prefix_cache)
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(
@@ -163,11 +170,29 @@ class MILSServer:
         return self.plane.migrations
 
     # ---- intake --------------------------------------------------------------
+    def _prefix_hint(self, req: ServeRequest):
+        """(head_digest, best cached tokens) across the engine pool — the
+        dispatch hint cache-aware routing consumes. Engines without a
+        prefix cache (or FakeEngines without the hook) contribute
+        nothing."""
+        digest, cached = None, 0.0
+        for eng in self.engines:
+            fn = getattr(eng, "prefix_hint", None)
+            if fn is None:
+                continue
+            d, c = fn(req)
+            if d is not None:
+                digest = d
+            cached = max(cached, float(c))
+        return digest, cached
+
     def submit(self, req: ServeRequest) -> None:
         """Closed-loop submission: the request arrives now."""
         req.arrival_step = self.steps
         self.submitted += 1
-        self.plane.submit(req, req.req_id, float(len(req.prompt)))
+        digest, cached = self._prefix_hint(req)
+        self.plane.submit(req, req.req_id, float(len(req.prompt)),
+                          cached_tokens=cached, prefix_digest=digest)
 
     def submit_at(self, req: ServeRequest, step: int) -> None:
         """Open-loop submission: the request arrives at ``step`` (replays
@@ -180,7 +205,9 @@ class MILSServer:
         while self._schedule and self._schedule[0][0] <= self.steps:
             _, _, req = heapq.heappop(self._schedule)
             req.arrival_step = self.steps
-            self.plane.submit(req, req.req_id, float(len(req.prompt)))
+            digest, cached = self._prefix_hint(req)
+            self.plane.submit(req, req.req_id, float(len(req.prompt)),
+                              cached_tokens=cached, prefix_digest=digest)
 
     # ---- token streaming -----------------------------------------------------
     def _stream(self, reqs: Sequence[ServeRequest]) -> None:
@@ -275,15 +302,35 @@ def requests_from_trace(trace: Sequence[Request], *, vocab_size: int,
     input_len becomes a random prompt of that length, output_len the token
     budget, and Poisson arrival times map to steps at ``steps_per_second``.
     ``max_seq`` caps lengths to what a small real engine can hold (the
-    sim's 128K-context tail does not fit a reduced test model)."""
+    sim's 128K-context tail does not fit a reduced test model).
+
+    Traces carrying shared-prefix groups (``Request.prefix_group >= 0``,
+    from ``sim.workload.shared_prefix_spec``) are replayed with LITERAL
+    shared prefixes: every request in a group starts with the same token
+    block, so the real engine's content-hashed prefix cache hits exactly
+    where the simulator's group-granular model does."""
     rng = np.random.default_rng(seed)
+    prefixes: Dict[int, np.ndarray] = {}
     out = []
     for r in trace:
         plen, new = int(r.input_len), int(r.output_len)
+        pg = getattr(r, "prefix_group", -1)
+        pfx_len = int(getattr(r, "prefix_len", 0)) if pg >= 0 else 0
         if max_seq is not None:
             plen = max(1, min(plen, max_seq // 2))
             new = max(1, min(new, max_seq - plen - 1))
+            pfx_len = min(pfx_len, max(plen - 1, 0))
         prompt = rng.integers(0, vocab_size, plen).astype(np.int32)
-        out.append((ServeRequest(r.req_id, prompt, new),
-                    int(round(r.arrival * steps_per_second))))
+        if pfx_len > 0:
+            if pg not in prefixes:
+                # one draw at the group's FULL prefix length: a capped
+                # replay still shares the same leading tokens
+                prefixes[pg] = rng.integers(
+                    0, vocab_size,
+                    int(getattr(r, "prefix_len", 0))).astype(np.int32)
+            prompt[:pfx_len] = prefixes[pg][:pfx_len]
+        req = ServeRequest(r.req_id, prompt, new)
+        req.prefix_group = pg
+        req.prefix_len = pfx_len
+        out.append((req, int(round(r.arrival * steps_per_second))))
     return out

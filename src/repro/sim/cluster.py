@@ -35,6 +35,10 @@ class ClusterConfig:
     # prefill), mirroring serving.Engine's token-budgeted scheduler;
     # None = legacy monolithic prefill-at-admission (the §2.1 baseline)
     prefill_token_budget: Optional[int] = None
+    # group-granular prefix-cache mirror (DESIGN.md §Prefix cache);
+    # active only for chunked instances on workloads carrying prefix
+    # groups, so legacy runs are bit-identical either way
+    prefix_cache: bool = True
     bandwidth: float = 25e9            # inter-instance KV path
     # hand-off disruption: final stop-and-copy stall + scheduler/alloc
     # coordination on both ends (Llumnix reports tens of ms per migration);
@@ -76,7 +80,8 @@ class Cluster:
         self.instances = [
             Instance(i, profile, cfg.capacity_tokens, self.events,
                      block_size=cfg.kv_block_size,
-                     prefill_budget=cfg.prefill_token_budget)
+                     prefill_budget=cfg.prefill_token_budget,
+                     prefix_cache=cfg.prefix_cache)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
         self.policy = policy
@@ -239,6 +244,10 @@ class TransferFabric:
             def adopt():     # stop-and-copy + scheduler hand-off pause
                 dst.inbound_reserved -= need
                 sr.migrating = False
+                # a migrated shared prefix re-imports as PRIVATE (the
+                # wire shipped a plain contiguous copy) — matching
+                # Engine.import_request; `need` above covered true length
+                sr.cached_tokens = 0
                 dst.adopt_running(sr, self.cluster.events.now)
 
             self.cluster.events.push(now + pause, adopt)
@@ -273,8 +282,12 @@ class SimInstanceView:
     def requests(self) -> List[ReqView]:
         return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),
                         float(sr.length), ctx_done=float(sr.ctx_done),
-                        ctx_total=float(sr.req.input_len))
+                        ctx_total=float(sr.req.input_len),
+                        cached_tokens=float(sr.cached_tokens))
                 for sr in self.inst.running if not sr.migrating]
+
+    def prefix_digests(self) -> frozenset:
+        return self.inst.prefix_digests()
 
     def request_view(self):
         return self.inst.request_view()
@@ -351,8 +364,22 @@ class CascadePolicy(Policy):
                 for i in self.cluster.instances]
 
     # ---- driver events ------------------------------------------------------
+    def _prefix_hint(self, sr: SimRequest):
+        """(digest, best cached tokens) across the cluster — the sim's
+        mirror of MILSServer._prefix_hint (group id stands in for the
+        content-derived head digest; membership patterns match, which is
+        all routing consumes)."""
+        if sr.req.prefix_group < 0:
+            return None, 0.0
+        cached = max(float(i.cached_tokens_for(sr))
+                     for i in self.cluster.instances)
+        digest = sr.req.prefix_group
+        return digest, cached
+
     def dispatch(self, sr: SimRequest, t: float) -> None:
-        self.plane.submit(sr, sr.req.req_id, sr.length)
+        digest, cached = self._prefix_hint(sr)
+        self.plane.submit(sr, sr.req.req_id, sr.length,
+                          cached_tokens=cached, prefix_digest=digest)
 
     def on_iteration_end(self, inst, t):
         self.plane.on_instance_iteration(inst.id)

@@ -22,7 +22,7 @@ from typing import Sequence
 
 from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
                                 decode_attn_time_s, mixed_iter_time_s,
-                                prefill_chunk_flops)
+                                prefill_flops)
 from repro.models.common import ModelConfig
 
 
@@ -98,16 +98,21 @@ def decode_iter_time(lengths: Sequence[int], prof: HardwareProfile) -> float:
     return prof.t_fixed + prof.t_weights + n * t_tok + t_attn
 
 
-def prefill_time(input_len: int, prof: HardwareProfile) -> float:
+def prefill_time(input_len: int, prof: HardwareProfile,
+                 cached_tokens: int = 0) -> float:
     """Monolithic prefill iteration for one whole prompt (compute-bound).
     The quadratic attention term comes from the kernel-level chunk mirror
     (``kernels.cost.prefill_chunk_flops`` with the prompt as one chunk ≈
     the old 2·H·Dh·I² causal count) — one formula prices every prefill
-    granularity."""
-    I = float(input_len)
+    granularity. ``cached_tokens`` prompt tokens served from the prefix
+    cache (DESIGN.md §Prefix cache) never run: linear work covers only
+    the uncached tail and the attention term is the tail-against-cached-
+    context chunk count."""
+    cached = min(int(cached_tokens), max(int(input_len) - 1, 0))
+    I = float(input_len) - cached
     t_linear = 2.0 * prof.params * I / prof.peak
     attn_layers = round(prof.num_layers * prof.attn_frac)
-    t_quad = (prefill_chunk_flops(int(input_len), 0, prof.attn_spec)
+    t_quad = (prefill_flops(int(input_len), prof.attn_spec, cached)
               * attn_layers / prof.peak)
     return prof.t_fixed + t_linear + t_quad
 

@@ -19,7 +19,8 @@ from repro.sim.costmodel import HardwareProfile, profile_from_config
 from repro.sim.metrics import SimResult
 from repro.sim.profiler import profile_and_fit
 from repro.sim.workload import (Request, WorkloadSpec, generate,
-                                longtail_spec, sample_lengths)
+                                generate_shared_prefix, longtail_spec,
+                                sample_lengths, shared_prefix_spec)
 
 
 @functools.lru_cache(maxsize=8)
@@ -86,12 +87,14 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                capacity_tokens: float = 400_000.0, seed: int = 0,
                tp: int = 1, ragged_backend: bool = False,
                bandwidth: float = 25e9,
-               prefill_token_budget: Optional[int] = None) -> SimResult:
+               prefill_token_budget: Optional[int] = None,
+               prefix_cache: bool = True) -> SimResult:
     prof = profile_from_config(get_config(arch), tp=tp,
                                ragged_backend=ragged_backend)
     cfg = ClusterConfig(num_instances=E, capacity_tokens=capacity_tokens,
                         seed=seed, bandwidth=bandwidth,
-                        prefill_token_budget=prefill_token_budget)
+                        prefill_token_budget=prefill_token_budget,
+                        prefix_cache=prefix_cache)
     cluster = Cluster(prof, policy, cfg)
     return cluster.run(requests, duration)
 
@@ -101,6 +104,7 @@ def compare_policies(arch: str, rate: float, duration: float, *,
                      capacity_tokens: float = 400_000.0,
                      workload: str = "sharegpt",
                      prefill_token_budget: Optional[int] = None,
+                     prefix_cache: bool = True,
                      kinds: Sequence[str] = ("round-robin", "llumnix",
                                              "cascade")) -> Dict[str, SimResult]:
     """Same workload, all policies — the Fig. 6/7/10 experiment.
@@ -108,17 +112,26 @@ def compare_policies(arch: str, rate: float, duration: float, *,
     ``workload="longtail"`` swaps in the 32K–128K-prompt-tail trace
     (``sim.workload.longtail_spec``) and ``prefill_token_budget`` runs the
     instances with chunked mixed iterations — the long-context scenario
-    chunked prefill targets."""
+    chunked prefill targets. ``workload="shared_prefix"`` runs the
+    system-prompt/multi-turn trace (``sim.workload.shared_prefix_spec``)
+    with the group-granular prefix-cache mirror — the cascade-vs-baseline
+    comparison under prefix caching (``prefix_cache=False`` ablates it)."""
     if workload == "longtail":
-        spec = longtail_spec(rate, duration, seed=seed)
+        requests = generate(longtail_spec(rate, duration, seed=seed))
+    elif workload == "shared_prefix":
+        requests = generate_shared_prefix(
+            shared_prefix_spec(rate, duration, seed=seed))
+        if prefill_token_budget is None:        # caching needs chunking
+            prefill_token_budget = 512
     else:
-        spec = WorkloadSpec(rate=rate, duration=duration, seed=seed)
-    requests = generate(spec)
+        requests = generate(WorkloadSpec(rate=rate, duration=duration,
+                                         seed=seed))
     out = {}
     for kind in kinds:
         pol = make_policy(kind if kind != "cascade" else "cascade",
                           arch, E)
         out[kind] = run_policy(arch, pol, requests, duration, E=E,
                                capacity_tokens=capacity_tokens, seed=seed,
-                               prefill_token_budget=prefill_token_budget)
+                               prefill_token_budget=prefill_token_budget,
+                               prefix_cache=prefix_cache)
     return out

@@ -42,6 +42,12 @@ class SimRequest:
     # cache. Monolithic instances set it to input_len at admission; a
     # migrated half-prefilled request carries it to the receiver.
     ctx_done: int = 0
+    # prompt tokens backed by the instance's shared prefix store
+    # (block-aligned, mirrors ServeRequest.cached_tokens): these blocks
+    # are counted once per group, not once per sharer, and their prefill
+    # never runs. Reset to 0 on migration — a shared prefix re-imports
+    # as private (DESIGN.md §Prefix cache).
+    cached_tokens: int = 0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     migrating: bool = False
@@ -91,7 +97,8 @@ class Instance:
                  capacity_tokens: float, events, *,
                  batch_cap: int = BATCH_CAP,
                  block_size: int = KV_BLOCK_SIZE,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.id = inst_id
         self.profile = profile
         self.block_size = block_size
@@ -99,6 +106,15 @@ class Instance:
         # legacy monolithic prefill-at-admission
         self.prefill_budget = prefill_budget
         self._iter_chunks: List = []     # (sr, chunk_len) planned this iter
+        # group-granular prefix-cache mirror (DESIGN.md §Prefix cache):
+        # prefix_group -> shareable blocks, published when a group member
+        # finishes prefill. Mirrors the engine's content-hashed index at
+        # the granularity the workload generator defines; needs chunked
+        # iterations (warm admissions resume mid-prompt). Unreferenced
+        # entries cost nothing (the real allocator parks them reclaimable
+        # = free); sim runs never model reclaim-under-pressure.
+        self.prefix_cache = prefix_cache and prefill_budget is not None
+        self._prefix_store: Dict[int, int] = {}
         # capacity is block-granular: what a paged allocator can actually
         # hand out (tokens that don't fill a block can't back any request)
         self.capacity_blocks = int(capacity_tokens // block_size)
@@ -131,8 +147,19 @@ class Instance:
         # amounts (cluster reserves block_tokens(length) per migration), so
         # dividing the total keeps per-transfer granularity. Resident
         # requests pin kv_len (not length): a half-prefilled prompt pins
-        # only its written blocks.
-        return (sum(blocks_for(r.kv_len, bs) for r in self.running)
+        # only its written blocks — and a group's shared prefix blocks
+        # pin ONCE, no matter how many sharers reference them (the deepest
+        # live sharer defines the resident depth, mirroring the refcounted
+        # allocator where blocks beyond it are refcount-0 reclaimable).
+        shared_depth: Dict[int, int] = {}
+        private = 0
+        for r in self.running:
+            cb = r.cached_tokens // bs
+            private += blocks_for(r.kv_len, bs) - cb
+            if cb:
+                g = r.req.prefix_group
+                shared_depth[g] = max(shared_depth.get(g, 0), cb)
+        return (private + sum(shared_depth.values())
                 + blocks_for(self.inbound_reserved, bs))
 
     def kv_tokens(self) -> float:
@@ -152,10 +179,11 @@ class Instance:
                      * self.block_size)
 
     def queued_tokens(self) -> float:
-        """UN-PREFILLED prompt tokens: whole waiting prompts plus the
+        """UN-PREFILLED, UNCACHED prompt tokens: whole waiting prompts
+        (minus their prefix-store hit, estimated at enqueue) plus the
         unwritten remainder of running requests mid-chunked-prefill
         (mirrors ``serving.Engine.queued_tokens``)."""
-        return float(sum(r.length for r in self.waiting)
+        return float(sum(r.length - r.cached_tokens for r in self.waiting)
                      + sum(r.req.input_len - r.ctx_done
                            for r in self.running if r.prefilling))
 
@@ -168,8 +196,49 @@ class Instance:
         return [(float(r.req.input_len), float(r.length))
                 for r in self.running]
 
+    # ---- prefix cache (DESIGN.md §Prefix cache) ----------------------------
+    def cached_tokens_for(self, sr: SimRequest) -> int:
+        """Prompt tokens this instance's prefix store could serve right
+        now (block-aligned; capped so >= 1 token always re-prefils —
+        mirrors the engine's capped ``_cached_chain`` lookup)."""
+        g = sr.req.prefix_group
+        if not self.prefix_cache or g < 0 or g not in self._prefix_store:
+            return 0
+        cap = (sr.req.input_len - 1) // self.block_size
+        return min(self._prefix_store[g], cap) * self.block_size
+
+    def prefix_digests(self) -> frozenset:
+        """Published prefix groups — the sim's analogue of the engine's
+        head-digest advertisement."""
+        return frozenset(self._prefix_store)
+
+    def _live_shared_depth(self, group: int) -> int:
+        """Deepest live sharer's cached blocks for ``group`` — prefix
+        blocks beyond it have refcount 0 in the engine (parked), so an
+        admission that uses them must pay their revival."""
+        bs = self.block_size
+        return max((r.cached_tokens // bs for r in self.running
+                    if r.req.prefix_group == group), default=0)
+
+    def _publish_prefix(self, sr: SimRequest) -> None:
+        """A group member finished prefill: its shared prefix becomes
+        servable (first publisher wins; its own prefix blocks convert
+        from private to shared accounting, mirroring the engine where
+        sharers reference the publisher's physical blocks)."""
+        g = sr.req.prefix_group
+        if not self.prefix_cache or g < 0 or g in self._prefix_store:
+            return
+        blocks = sr.req.prefix_len // self.block_size
+        if blocks <= 0:
+            return
+        self._prefix_store[g] = blocks
+        sr.cached_tokens = max(sr.cached_tokens, blocks * self.block_size)
+
     # ---- request intake ---------------------------------------------------
     def enqueue(self, sr: SimRequest, t: float) -> None:
+        # prefix-hit hint for queued_tokens/load while the request waits
+        # (refreshed authoritatively at admission)
+        sr.cached_tokens = self.cached_tokens_for(sr)
         self.waiting.append(sr)
         self.kick(t)
 
@@ -219,10 +288,24 @@ class Instance:
                 continue
             if budget is not None and budget <= 0:
                 break
-            if self.free_tokens() < (self.block_tokens(self.waiting[0].length)
-                                     + pending):
+            # cached admission (DESIGN.md §Prefix cache): the shared
+            # prefix is already resident, so only the uncached tail needs
+            # room — and only it ever prefills (ctx_done starts there).
+            # Prefix blocks with NO live sharer are parked (free
+            # capacity), so admitting revives them: charge the revival
+            # like the engine's revival_cost, or the sim would admit past
+            # capacity where the server refuses.
+            head = self.waiting[0]
+            cached = self.cached_tokens_for(head)
+            revived = max(0, cached - self._live_shared_depth(
+                head.req.prefix_group) * self.block_size)
+            if self.free_tokens() < (
+                    self.block_tokens(head.length - cached)
+                    + revived + pending):
                 break
             sr = self.waiting.popleft()
+            sr.cached_tokens = cached
+            sr.ctx_done = max(sr.ctx_done, cached)
             self.running.append(sr)
             admitted.append(sr)
             if budget is None:
@@ -266,6 +349,8 @@ class Instance:
         for r, c in self._iter_chunks:
             if r in self.running:
                 r.ctx_done += c
+                if not r.prefilling:    # prompt done: prefix now servable
+                    self._publish_prefix(r)
         self._iter_chunks = []
         producers = [r for r in self.running if not r.prefilling]
         n = len(producers)

@@ -23,6 +23,13 @@ class Request:
     arrival: float
     input_len: int
     output_len: int
+    # shared-prefix identity (DESIGN.md §Prefix cache): requests with the
+    # same non-negative ``prefix_group`` share their first ``prefix_len``
+    # prompt tokens (a system prompt / earlier conversation turns). -1 =
+    # no shared prefix. The simulator's group-granular cache model and the
+    # server replay (literal shared tokens) both key on these.
+    prefix_group: int = -1
+    prefix_len: int = 0
 
     @property
     def final_len(self) -> int:
@@ -95,6 +102,68 @@ def generate_longtail(rate: float, duration: float, *, seed: int = 0,
     (`benchmarks/bench_chunked_prefill.py`, fig-6/7 long-context runs)."""
     return generate(longtail_spec(rate, duration, seed=seed,
                                   max_context=max_context))
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedPrefixSpec:
+    """Shared-prefix workload (DESIGN.md §Prefix cache): the production
+    shape prefix caching exists for — many users hitting a handful of
+    long system prompts, plus multi-turn sessions that resend their whole
+    history. ``num_groups`` prefix groups with Zipf-ish popularity; each
+    request is ``prefix + fresh suffix``. Turn depth models multi-turn
+    growth: turn t of a session extends the group prefix by (t-1) *
+    ``turn_len`` tokens — later turns share everything the earlier turns
+    sent, which is exactly what a radix prefix index exploits."""
+    rate: float
+    duration: float
+    seed: int = 0
+    num_groups: int = 4
+    prefix_len: int = 1024         # system-prompt tokens per group
+    zipf_a: float = 1.5            # group popularity skew
+    suffix_mu: float = 5.0         # log-normal fresh-suffix body
+    suffix_sigma: float = 0.8
+    out_mu: float = 5.3
+    out_sigma: float = 1.0
+    turns: int = 1                 # max conversation depth per group
+    turn_len: int = 256            # tokens a full earlier turn adds
+    max_context: int = MAX_CONTEXT
+
+
+def shared_prefix_spec(rate: float, duration: float, *, seed: int = 0,
+                       num_groups: int = 4, prefix_len: int = 1024,
+                       turns: int = 1,
+                       max_context: int = MAX_CONTEXT) -> SharedPrefixSpec:
+    """The scenario the refcounted prefix cache targets (benchmark entry
+    point — `benchmarks/bench_prefix_cache.py`, `compare_policies
+    (workload="shared_prefix")`)."""
+    return SharedPrefixSpec(rate=rate, duration=duration, seed=seed,
+                            num_groups=num_groups, prefix_len=prefix_len,
+                            turns=turns, max_context=max_context)
+
+
+def generate_shared_prefix(spec: SharedPrefixSpec) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    n = max(1, rng.poisson(spec.rate * spec.duration))
+    arrivals = np.sort(rng.uniform(0.0, spec.duration, n))
+    groups = np.minimum(rng.zipf(spec.zipf_a, n) - 1,
+                        spec.num_groups - 1).astype(np.int64)
+    depth = rng.integers(1, spec.turns + 1, n)
+    prefix = spec.prefix_len + (depth - 1) * spec.turn_len
+    suffix = np.clip(rng.lognormal(spec.suffix_mu, spec.suffix_sigma, n),
+                     16, None).astype(np.int64)
+    ins = np.minimum(prefix + suffix, spec.max_context - 64)
+    prefix = np.minimum(prefix, ins - 16)     # >= 16 fresh tokens always
+    outs = np.clip(rng.lognormal(spec.out_mu, spec.out_sigma, n),
+                   8, None).astype(np.int64)
+    outs = np.minimum(outs, spec.max_context - ins)
+    # multi-turn prefixes nest: group g at depth d is its own sub-group
+    # (g, d) — depth-d requests share prefix_len + (d-1)*turn_len tokens
+    # with each other AND the shallower turns' prefix, which the sim's
+    # group-granular model approximates by the per-(g, d) group
+    return [Request(i, float(arrivals[i]), int(ins[i]), int(outs[i]),
+                    prefix_group=int(groups[i] * spec.turns + depth[i] - 1),
+                    prefix_len=int(prefix[i]))
+            for i in range(n)]
 
 
 def trace_requests(path: str, rate: float, seed: int = 0) -> List[Request]:

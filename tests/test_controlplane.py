@@ -451,12 +451,18 @@ class FakeEngine:
     progress."""
 
     def __init__(self, eid, max_slots=8, token_budget=100_000,
-                 max_seq=100_000, prefill_budget=None):
+                 max_seq=100_000, prefill_budget=None, block_size=16,
+                 prefix_cache=True):
         self.id = eid
         self.max_slots = max_slots
         self.token_budget = token_budget
         self.max_seq = max_seq
         self.prefill_budget = prefill_budget
+        self.block_size = block_size
+        # group-granular prefix-cache mirror (same model as sim.Instance):
+        # prefix_group -> shareable blocks, published at prefill completion
+        self.prefix_cache = prefix_cache and prefill_budget is not None
+        self._prefix_store = {}
         self.slots = [None] * max_slots
         self.waiting = deque()
         self._prefill_order = []
@@ -470,9 +476,35 @@ class FakeEngine:
         return sum(r.length for r in self.active())
 
     def queued_tokens(self):
-        return (sum(len(r.prompt) for r in self.waiting)
+        return (sum(len(r.prompt) - r.cached_tokens for r in self.waiting)
                 + sum(len(r.prompt) - r.ctx_done for r in self.active()
                       if r.ctx_done < len(r.prompt)))
+
+    # ---- prefix-cache mirror (DESIGN.md §Prefix cache) -------------------
+    def _cached_for(self, req):
+        g = getattr(req, "prefix_group", -1)
+        if not self.prefix_cache or g < 0 or g not in self._prefix_store:
+            return 0
+        cap = (len(req.prompt) - 1) // self.block_size
+        return min(self._prefix_store[g], cap) * self.block_size
+
+    def prefix_hint(self, req):
+        g = getattr(req, "prefix_group", -1)
+        if not self.prefix_cache or g < 0:
+            return None, 0
+        return g, self._cached_for(req)
+
+    def prefix_digests(self):
+        return frozenset(self._prefix_store)
+
+    def _publish(self, req):
+        g = getattr(req, "prefix_group", -1)
+        if (not self.prefix_cache or g < 0 or g in self._prefix_store
+                or req.prefix_len < self.block_size):
+            return
+        self._prefix_store[g] = req.prefix_len // self.block_size
+        req.cached_tokens = max(req.cached_tokens,
+                                self._prefix_store[g] * self.block_size)
 
     def free_tokens(self):
         return self.token_budget - self.used_tokens()
@@ -493,6 +525,7 @@ class FakeEngine:
     def submit(self, req):
         from repro.serving.request import State
         req.state = State.WAITING
+        req.cached_tokens = self._cached_for(req)
         self.waiting.append(req)
 
     def _place(self, req):
@@ -511,6 +544,7 @@ class FakeEngine:
         self.slots[slot] = None
 
     def _first_token(self, req):
+        self._publish(req)                   # finished prompt is shareable
         req.generated.append(0)              # prefill's first token
         req.first_token_step = self.steps
         req.tokens_by_engine[self.id] += 1
@@ -542,6 +576,9 @@ class FakeEngine:
                    and self.can_accept(self.waiting[0])):
                 req = self.waiting.popleft()
                 self._place(req)
+                # cached admission: the shared prefix never re-prefils
+                req.cached_tokens = self._cached_for(req)
+                req.ctx_done = max(req.ctx_done, req.cached_tokens)
                 c = min(len(req.prompt) - req.ctx_done, budget)
                 req.ctx_done += c
                 budget -= c
@@ -573,6 +610,7 @@ class FakeEngine:
         from repro.serving.request import State
         if not self.can_accept(req):
             return False
+        req.cached_tokens = 0       # shared prefix re-imports as private
         self._place(req)
         if req.ctx_done < len(req.prompt):      # resume chunking here
             self._prefill_order.append(req)
@@ -630,6 +668,69 @@ def test_sim_and_server_make_identical_decisions(prefill_budget):
     assert routes(sim_log) == routes(srv_log)
     assert migs(sim_log) == migs(srv_log)
     assert len(migs(sim_log)) == 4, "every boundary-crosser migrates once"
+
+
+@pytest.mark.parametrize("prefix_cache", [True, False])
+def test_sim_and_server_parity_with_prefix_caching(prefix_cache):
+    """The ISSUE-5 acceptance parity: on a shared-prefix trace, both
+    drivers agree on every routing AND migration decision with prefix
+    caching on — cached admission (warm prompts finish prefill in one
+    chunk), effective-length stage routing (a long warm prompt stays in
+    the short stage), and prefix-affinity dispatch (repeat groups land on
+    the instance advertising their digest) all mirror exactly. With
+    ``prefix_cache=False`` both drivers fall back to the legacy path —
+    and the long warm prompt routes to the long stage instead."""
+    from repro.configs import get_config
+    from repro.serving.server import (MILSServer, ServerConfig,
+                                      requests_from_trace)
+    from repro.sim.cluster import CascadePolicy, Cluster, ClusterConfig
+    from repro.sim.costmodel import profile_from_config
+    from repro.sim.workload import Request
+
+    plan = two_stage_plan(4, boundary=32.0)
+    BS = 16
+    # (input, output, group, prefix): group 0's 16-token prefix publishes
+    # when r0 finishes prefill; r2/r3/r5 arrive warm. r5 is the routing
+    # witness: true length 40 -> stage 1, effective 40-16=24 -> stage 0.
+    lens = [(24, 40, 0, 16), (8, 4, -1, 0), (24, 4, 0, 16),
+            (24, 40, 0, 16), (20, 4, 1, 16), (40, 4, 0, 16)]
+    trace = [Request(i, 8.0 * i, il, ol, prefix_group=g, prefix_len=p)
+             for i, (il, ol, g, p) in enumerate(lens)]
+
+    # --- sim driver -------------------------------------------------------
+    policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
+    cluster = Cluster(profile_from_config(get_config("llama3.2-3b")),
+                      policy, ClusterConfig(num_instances=4, seed=0,
+                                            prefill_token_budget=8,
+                                            prefix_cache=prefix_cache))
+    res = cluster.run(trace, duration=80.0)
+    assert len(res.completed) == len(trace)
+    sim_log = policy.plane.decisions
+
+    # --- server driver (fake engines, no JAX) -----------------------------
+    srv = MILSServer(None, None, plan, None,
+                     ServerConfig(refinement="none", balancing="rr", seed=0),
+                     engine_factory=lambda i: FakeEngine(
+                         i, prefill_budget=8, block_size=BS,
+                         prefix_cache=prefix_cache))
+    for req, step in requests_from_trace(trace, vocab_size=100):
+        srv.submit_at(req, step)
+    fin = srv.run(max_steps=600)
+    assert len(fin) == len(lens)
+    srv_log = srv.plane.decisions
+
+    routes = lambda log: [d for d in log if d[0] == "route"]
+    migs = lambda log: [d for d in log if d[0] == "migrate"]
+    assert routes(sim_log) == routes(srv_log)
+    assert migs(sim_log) == migs(srv_log)
+    route_of = {d[1]: d[2] for d in routes(sim_log)}
+    if prefix_cache:
+        # effective-length routing: warm 40-token prompt stays short-stage
+        assert route_of[5] in (0, 1)
+        # prefix affinity: warm group-0 arrivals follow r0's instance
+        assert route_of[2] == route_of[0]
+    else:
+        assert route_of[5] in (2, 3), "legacy path must route true length"
 
 
 def test_server_conserves_requests_with_fake_engines():
