@@ -17,7 +17,7 @@ to ~one iteration. Per engine this measures, in wall time:
     for others),
   * chunked-vs-monolithic greedy-token parity on the shared requests.
 
-Emits BENCH_chunked_prefill.json next to this file. The asserted
+Emits BENCH_chunked_prefill.json at the repo root. The asserted
 acceptance: chunked decode-stall is >= 5x smaller than monolithic, no
 decode request's gap exceeds ~one mixed iteration, tokens identical.
 
@@ -33,6 +33,11 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:
+    from benchmarks.common import write_artifact
+except ImportError:                     # run as a plain script
+    from common import write_artifact
 
 import jax
 import numpy as np
@@ -166,9 +171,7 @@ def main() -> None:
           f"{ch['decode_stall_s']*1e3:.0f} ms) with a "
           f"{args.prompt}-token prompt mid-decode")
 
-    path = Path(__file__).resolve().parent / "BENCH_chunked_prefill.json"
-    path.write_text(json.dumps(out, indent=2))
-    print("wrote", path)
+    print("wrote", write_artifact("chunked_prefill", out))
 
 
 if __name__ == "__main__":

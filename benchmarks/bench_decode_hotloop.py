@@ -14,7 +14,7 @@ spread) and uniform (same total tokens) — this measures, per decode step:
     work items (± pow2 bucket padding) where the padded grid ran
     B·max_b ceil(L_b/BS).
 
-Emits BENCH_decode_hotloop.json next to this file.
+Emits BENCH_decode_hotloop.json at the repo root.
 
 Run: PYTHONPATH=src python benchmarks/bench_decode_hotloop.py
      [--new-tokens N] [--burst B] [--backend dense|grid|flat]
@@ -28,6 +28,11 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:
+    from benchmarks.common import write_artifact
+except ImportError:                     # run as a plain script
+    from common import write_artifact
 
 import jax
 import numpy as np
@@ -140,9 +145,7 @@ def main() -> None:
           f"(Σ ceil = {g['real_items']}) vs padded {g['padded_items']}  "
           f"-> {ratio:.1f}x fewer block iterations on the hetero batch")
 
-    path = Path(__file__).resolve().parent / "BENCH_decode_hotloop.json"
-    path.write_text(json.dumps(out, indent=2))
-    print("wrote", path)
+    print("wrote", write_artifact("decode_hotloop", out))
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ Two views:
     system-prompt/multi-turn cluster trace, cascade vs. round-robin, with
     the group-granular cache mirror on and off.
 
-Emits BENCH_prefix_cache.json next to this file; `run()` feeds
+Emits BENCH_prefix_cache.json at the repo root; `run()` feeds
 benchmarks/run.py. The asserted acceptance (CI smoke): warm tokens
 bit-identical to cold, >= 90% of prefill block-work skipped, warm TTFT
 strictly below cold.
@@ -30,6 +30,11 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:
+    from benchmarks.common import write_artifact
+except ImportError:                     # run as a plain script
+    from common import write_artifact
 
 import jax
 import numpy as np
@@ -159,9 +164,7 @@ def main(argv=None) -> dict:
             print(f"-- sim {k:22s} ttft mean {v['ttft_mean_s']:.3f} s  "
                   f"p95 {v['ttft_p95_s']:.3f} s")
 
-    path = Path(__file__).resolve().parent / "BENCH_prefix_cache.json"
-    path.write_text(json.dumps(out, indent=2))
-    print("wrote", path)
+    print("wrote", write_artifact("prefix_cache", out))
     return out
 
 

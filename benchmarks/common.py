@@ -1,8 +1,15 @@
-"""Shared benchmark scaffolding."""
+"""Shared benchmark scaffolding + the BENCH_*.json artifact convention.
+
+Every benchmark writes ONE machine-readable artifact at the REPO ROOT via
+:func:`write_artifact` — stable schema ``{bench, schema_version, rows,
+data}`` — and :func:`merge_artifacts` folds all of them into
+``BENCH_summary.json`` so CI and later sessions read a single file."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, Dict, List
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
 
 ARCH = "llama3.2-3b"       # the paper's own evaluation model (§6.1)
 E = 16                     # paper testbed: 16 GPUs
@@ -10,6 +17,46 @@ DURATION = 20.0
 LIGHT_RATE = 8.0
 HEAVY_RATE = 40.0
 CAPACITY = 400_000.0
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SCHEMA_VERSION = 1
+
+
+def artifact_path(name: str) -> Path:
+    return REPO_ROOT / f"BENCH_{name}.json"
+
+
+def write_artifact(name: str, data: Dict, rows: Optional[List[Dict]] = None,
+                   merge: bool = True) -> Path:
+    """Write ``BENCH_<name>.json`` at the repo root. ``rows`` is the
+    CSV-shaped row list (``{name, us_per_call, derived}``); ``data`` holds
+    the benchmark's own structured results. Refreshes the summary."""
+    doc = {"bench": name, "schema_version": SCHEMA_VERSION,
+           "rows": rows or [], "data": data}
+    path = artifact_path(name)
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True, default=str))
+    if merge:
+        merge_artifacts()
+    return path
+
+
+def merge_artifacts() -> Path:
+    """Fold every ``BENCH_*.json`` at the repo root into
+    ``BENCH_summary.json`` (bench name → document)."""
+    summary = {}
+    for p in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        if p.name == "BENCH_summary.json":
+            continue
+        try:
+            doc = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+        summary[doc.get("bench", p.stem[len("BENCH_"):])] = doc
+    out = REPO_ROOT / "BENCH_summary.json"
+    out.write_text(json.dumps({"schema_version": SCHEMA_VERSION,
+                               "benches": summary},
+                              indent=2, sort_keys=True))
+    return out
 
 
 def row(name: str, us_per_call: float, **derived) -> Dict:

@@ -1,5 +1,7 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §6).
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes one ``BENCH_<module>.
+json`` artifact per module at the REPO ROOT (stable schema; see
+``benchmarks/common.py``), then folds them into ``BENCH_summary.json``.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig13]
 """
@@ -8,6 +10,11 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+
+try:
+    from benchmarks.common import merge_artifacts, write_artifact
+except ImportError:                     # run as a plain script
+    from common import merge_artifacts, write_artifact
 
 MODULES = [
     "fig2_heterogeneity",     # Fig. 2  kernel heterogeneity tax
@@ -41,17 +48,24 @@ def main() -> None:
         if only and not any(mod_name.startswith(o) for o in only):
             continue
         t0 = time.time()
+        rows = []
+        status = "ok"
         try:
             mod = __import__(f"benchmarks.{mod_name}",
                              fromlist=["run"])
             for r in mod.run():
+                rows.append(r)
                 print(f"{r['name']},{r['us_per_call']:.3f},{r['derived']}",
                       flush=True)
         except Exception as e:  # noqa: BLE001 — report all, fail at end
             failures += 1
-            print(f"{mod_name},nan,ERROR={type(e).__name__}:{e}", flush=True)
-        print(f"# {mod_name} took {time.time()-t0:.1f}s", file=sys.stderr,
-              flush=True)
+            status = f"ERROR={type(e).__name__}:{e}"
+            print(f"{mod_name},nan,{status}", flush=True)
+        wall = time.time() - t0
+        write_artifact(mod_name, {"status": status, "wall_s": wall},
+                       rows=rows, merge=False)
+        print(f"# {mod_name} took {wall:.1f}s", file=sys.stderr, flush=True)
+    merge_artifacts()
     if failures:
         raise SystemExit(1)
 

@@ -27,6 +27,19 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 SKIP_OVERHEAD_S = 2e-7       # per skipped grid step (scalar branch + DMA mgmt)
+LAUNCH_OVERHEAD_S = 2e-6     # per EXTRA kernel launch beyond the first
+                             # (dispatch + grid setup + scalar prefetch)
+
+
+def kv_bytes_per_elem(kv_dtype: str, head_dim: int) -> float:
+    """HBM bytes per stored KV element. int8 carries one f32 scale per
+    (position, kv-head) row amortized over the head dim —
+    ``(Dh + 4)/Dh`` bytes, ≈ 1.94× denser than bf16 at Dh = 128
+    (DESIGN.md §Quantized KV blocks)."""
+    if kv_dtype == "int8":
+        return 1.0 + 4.0 / head_dim
+    assert kv_dtype == "bf16", kv_dtype
+    return 2.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,7 +47,7 @@ class AttnSpec:
     num_q_heads: int
     num_kv_heads: int
     head_dim: int
-    kv_bytes: int = 2          # bf16 cache
+    kv_bytes: float = 2.0      # bf16 cache; kv_bytes_per_elem for int8
     block_s: int = 512
 
 
@@ -160,6 +173,23 @@ def prefill_chunk_attn_time_s(chunk: int, ctx: int, spec: AttnSpec) -> float:
     return max(dma, mxu)
 
 
+def fused_grid_items(chunks: Sequence[tuple], decode_lengths: Sequence[int],
+                     block_s: int) -> int:
+    """Grid steps (per kv head) of the FUSED mixed-iteration work list:
+    pow2 bucket of the decode rows' real blocks PLUS pow2 bucket of the
+    chunk blocks. The engine buckets the two halves independently rather
+    than pow2(dec+ck) — a single bucket can overshoot the pair (e.g.
+    9+8 → 32 vs 16+8), which would let the merged grid pay MORE padding
+    than the two kernels it replaces; with split buckets the padding tail
+    is identical by construction and fusing saves exactly the extra
+    launch (DESIGN.md §Fused mixed-iteration attention)."""
+    dec = ragged_blocks(decode_lengths, block_s)
+    ck = sum(prefill_chunk_blocks(int(c), int(x), block_s)
+             for c, x in chunks)
+    return ((pow2_bucket(dec) if dec else 0)
+            + (pow2_bucket(ck) if ck else 0))
+
+
 def mixed_iter_time_s(chunks: Sequence[tuple], decode_lengths: Sequence[int],
                       spec: AttnSpec, *,
                       decode_backend: str = "flat") -> float:
@@ -167,9 +197,25 @@ def mixed_iter_time_s(chunks: Sequence[tuple], decode_lengths: Sequence[int],
     decode batch plus every packed prompt chunk ``(chunk_len, ctx_len)``
     — the analytic mirror of the engine's fused step (decode burst +
     chunked prefill, one device round-trip). ``decode_backend`` picks the
-    decode term's kernel model (``flat`` | ``ragged`` | ``padded``) so a
-    chunked-vs-monolithic comparison can hold the decode backend fixed
-    and attribute only the prefill difference to chunking."""
+    decode term's kernel model (``fused`` | ``flat`` | ``ragged`` |
+    ``padded``) so a chunked-vs-monolithic comparison can hold the decode
+    backend fixed and attribute only the prefill difference to chunking.
+
+    ``fused`` prices the single tagged work list: one launch carrying the
+    same decode + chunk padding tails the separate kernels pad. The
+    separate backends pay the chunk grid's own padding tail PLUS the
+    extra chunk-batch launch (``LAUNCH_OVERHEAD_S``)."""
+    if decode_backend == "fused":
+        comp_dec = ragged_blocks(decode_lengths, spec.block_s)
+        comp_ck = sum(prefill_chunk_blocks(int(c), int(x), spec.block_s)
+                      for c, x in chunks)
+        skipped = max(fused_grid_items(chunks, decode_lengths, spec.block_s)
+                      - comp_dec - comp_ck, 0)
+        t = spec.num_kv_heads * (comp_dec * block_time_s(spec)
+                                 + skipped * SKIP_OVERHEAD_S)
+        for chunk, ctx in chunks:
+            t += prefill_chunk_attn_time_s(int(chunk), int(ctx), spec)
+        return t
     if decode_backend == "flat":
         t = decode_attn_time_flat_s(decode_lengths, spec)
     else:
@@ -177,6 +223,12 @@ def mixed_iter_time_s(chunks: Sequence[tuple], decode_lengths: Sequence[int],
                                ragged=(decode_backend == "ragged"))
     for chunk, ctx in chunks:
         t += prefill_chunk_attn_time_s(int(chunk), int(ctx), spec)
+    if len(chunks):
+        ck = sum(prefill_chunk_blocks(int(c), int(x), spec.block_s)
+                 for c, x in chunks)
+        skipped_ck = pow2_bucket(ck) - ck
+        t += (spec.num_kv_heads * skipped_ck * SKIP_OVERHEAD_S
+              + LAUNCH_OVERHEAD_S)  # the separate chunk-batch launch
     return t
 
 

@@ -28,7 +28,6 @@ VMEM scratch that persists across the sequential KV-block grid dimension.
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax
@@ -36,52 +35,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+# the flash core and work-list builder live in kernels.ops (shared with the
+# chunked-prefill and fused mixed-iteration kernels); flat_work_list is
+# re-exported here for backward compatibility
+from repro.kernels.ops import (NEG_INF, _flash_block_update, _flash_finish,
+                               _flash_init, flat_work_list)
+
+__all__ = ["decode_attention", "paged_decode_attention",
+           "paged_decode_attention_flat", "flat_work_list"]
+
 DEFAULT_BLOCK = 512
-
-
-def _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
-                        start, length, qpos=None):
-    """ONE online-softmax KV-block step, shared by the decode kernels AND
-    the chunked-prefill kernel: the q tile (trailing dims flattened to
-    [rows, Dh] — [G, Dh] for decode, [C·G, Dh] for a prefill chunk) vs.
-    this grid step's KV block [BS, Dh], masked at ``length``, accumulated
-    into the persistent (m, l, acc) scratch. ``qpos`` (per-row global
-    query positions) additionally applies the causal ``kv <= q`` mask of
-    chunked prefill; decode's single query row needs none."""
-    q = q_ref[0, 0].astype(jnp.float32).reshape(-1, q_ref.shape[-1])
-    k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
-    v = v_ref[0, :, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [rows, BS]
-    s = s / math.sqrt(q.shape[-1])
-    idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    keep = idx < length
-    if qpos is not None:                 # qpos broadcastable to [rows, BS]
-        keep &= idx <= qpos
-    s = jnp.where(keep, s, NEG_INF)
-
-    m_prev = m_ref[:, 0]                            # [G]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])                 # [G, BS]
-    l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
-    m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
-    l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
-
-
-def _flash_init(m_ref, l_ref, acc_ref):
-    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-    l_ref[...] = jnp.zeros_like(l_ref)
-    acc_ref[...] = jnp.zeros_like(acc_ref)
-
-
-def _flash_finish(o_ref, l_ref, acc_ref):
-    l = l_ref[:, 0]
-    safe = jnp.where(l == 0.0, 1.0, l)
-    out = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
-    o_ref[0, 0] = out.reshape(o_ref.shape[2:])   # [G,Dh] / prefill [C,G,Dh]
 
 
 def _decode_kernel(lengths_ref,          # scalar prefetch [B]
@@ -178,32 +141,6 @@ def _flat_paged_kernel(wreq_ref, wblk_ref,   # scalar prefetch [W], [W]
         lambda: _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref,
                                     acc_ref, start, length))
     pl.when(last)(lambda: _flash_finish(o_ref, l_ref, acc_ref))
-
-
-def flat_work_list(lengths, nbt: int, block_s: int, num_work: int):
-    """Flat (request, logical block) work list for the flattened grid —
-    pure jnp, so the serving engine builds it on device every step.
-
-    Items ``[0, Σ_b ceil(L_b/BS))`` enumerate every request's real blocks
-    (request-major, blocks in order); the tail up to ``num_work`` is
-    padding aliasing the last request with ``nbt`` (one past the table) as
-    its block index, which the kernel's ``start < length`` guard always
-    skips. Caller guarantees ``num_work >= Σ_b ceil(L_b/BS)``.
-    Returns int32 ``(work_req [num_work], work_blk [num_work])``."""
-    B = lengths.shape[0]
-    nb = jnp.maximum(-(-lengths // block_s), 0).astype(jnp.int32)
-    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(nb)])
-    total = offs[-1]
-    w = jnp.arange(num_work, dtype=jnp.int32)
-    b = jnp.clip(jnp.searchsorted(offs, w, side="right") - 1, 0, B - 1)
-    b = b.astype(jnp.int32)
-    j = w - offs[b]
-    # last request with any real work (argmax of reversed has-work mask);
-    # padding must alias it so the output index map never leaves its row
-    last_b = (B - 1 - jnp.argmax((nb > 0)[::-1])).astype(jnp.int32)
-    pad = w >= total
-    return (jnp.where(pad, last_b, b),
-            jnp.where(pad, jnp.int32(nbt), j))
 
 
 @functools.partial(jax.jit, static_argnames=("num_work", "interpret"))

@@ -1,4 +1,5 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Jitted public wrappers for the Pallas kernels, plus the ONE shared
+flash-attention inner core every paged kernel builds on.
 
 On this CPU container the kernels run in ``interpret=True`` (Python
 execution of the kernel body) — numerics are identical to TPU. The
@@ -6,14 +7,113 @@ execution of the kernel body) — numerics are identical to TPU. The
 
   * ``"xla"``     — pure-jnp reference (fast on CPU, default here)
   * ``"pallas"``  — the TPU kernel (interpret on CPU, compiled on TPU)
+
+The ``_flash_*`` helpers below are the online-softmax KV-block core shared
+by the decode, chunked-prefill, AND fused mixed-iteration kernels — one
+implementation, imported by all three (no cross-module private imports).
 """
 from __future__ import annotations
 
-import jax
+import math
 
-from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention as _decode_pallas
-from repro.kernels.prefill_attention import prefill_attention as _prefill_pallas
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Shared flash-attention core (decode / chunked prefill / fused mixed)
+# --------------------------------------------------------------------------
+def _flash_block_update(q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                        start, length, qpos=None, k_scale=None, v_scale=None,
+                        rows=None):
+    """ONE online-softmax KV-block step, shared by the decode kernels, the
+    chunked-prefill kernel AND the fused mixed-iteration kernel: the q
+    tile (trailing dims flattened to [rows, Dh] — [G, Dh] for decode,
+    [C·G, Dh] for a prefill chunk) vs. this grid step's KV block
+    [BS, Dh], masked at ``length``, accumulated into the persistent
+    (m, l, acc) scratch.
+
+    ``qpos`` (per-row global query positions) additionally applies the
+    causal ``kv <= q`` mask of chunked prefill; decode's single query row
+    needs none. ``k_scale``/``v_scale`` ([BS, 1], f32) dequantize an int8
+    KV block in-register — the pool stays int8 in HBM, so DMA bytes halve
+    (DESIGN.md §Quantized KV blocks). ``rows`` (static) restricts the
+    update to the FIRST ``rows`` scratch rows reading the q tile's first
+    chunk row only — the fused kernel's tagged decode items use it to pay
+    a [G, BS] matmul instead of the chunk tile's [C·G, BS]."""
+    if rows is None:
+        q = q_ref[0, 0].astype(jnp.float32).reshape(-1, q_ref.shape[-1])
+        sl = slice(None)
+    else:
+        # tagged decode item inside a chunk-shaped tile: first chunk row
+        q = q_ref[0, 0, 0].astype(jnp.float32).reshape(rows,
+                                                       q_ref.shape[-1])
+        sl = slice(0, rows)
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale                             # [BS, 1] row scales
+        v = v * v_scale
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [rows, BS]
+    s = s / math.sqrt(q.shape[-1])
+    idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    keep = idx < length
+    if qpos is not None:                 # qpos broadcastable to [rows, BS]
+        keep &= idx <= qpos
+    s = jnp.where(keep, s, NEG_INF)
+
+    m_prev = m_ref[sl, 0]                           # [rows]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                 # [rows, BS]
+    l_new = l_ref[sl, 0] * alpha + p.sum(axis=-1)
+    acc_ref[sl, :] = (acc_ref[sl, :] * alpha[:, None]
+                      + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_ref[sl, :] = jnp.broadcast_to(m_new[:, None], (q.shape[0],
+                                                     m_ref.shape[1]))
+    l_ref[sl, :] = jnp.broadcast_to(l_new[:, None], (q.shape[0],
+                                                     l_ref.shape[1]))
+
+
+def _flash_init(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _flash_finish(o_ref, l_ref, acc_ref):
+    l = l_ref[:, 0]
+    safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+    o_ref[0, 0] = out.reshape(o_ref.shape[2:])   # [G,Dh] / prefill [C,G,Dh]
+
+
+def flat_work_list(lengths, nbt: int, block_s: int, num_work: int):
+    """Flat (request, logical block) work list for the flattened grids —
+    pure jnp, so the serving engine builds it on device every step.
+
+    Items ``[0, Σ_b ceil(L_b/BS))`` enumerate every request's real blocks
+    (request-major, blocks in order); the tail up to ``num_work`` is
+    padding aliasing the last request with ``nbt`` (one past the table) as
+    its block index, which the kernels' ``start < length`` guard always
+    skips. Caller guarantees ``num_work >= Σ_b ceil(L_b/BS)``.
+    Returns int32 ``(work_req [num_work], work_blk [num_work])``."""
+    B = lengths.shape[0]
+    nb = jnp.maximum(-(-lengths // block_s), 0).astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(nb)])
+    total = offs[-1]
+    w = jnp.arange(num_work, dtype=jnp.int32)
+    b = jnp.clip(jnp.searchsorted(offs, w, side="right") - 1, 0, B - 1)
+    b = b.astype(jnp.int32)
+    j = w - offs[b]
+    # last request with any real work (argmax of reversed has-work mask);
+    # padding must alias it so the output index map never leaves its row
+    last_b = (B - 1 - jnp.argmax((nb > 0)[::-1])).astype(jnp.int32)
+    pad = w >= total
+    return (jnp.where(pad, last_b, b),
+            jnp.where(pad, jnp.int32(nbt), j))
 
 
 def _on_tpu() -> bool:
@@ -22,9 +122,12 @@ def _on_tpu() -> bool:
 
 def decode_attention(q, k, v, lengths, *, backend: str = "xla",
                      ragged: bool = False, block_s: int = 512):
+    from repro.kernels import ref
     if backend == "xla":
         return ref.decode_attention_ref(q, k, v, lengths)
     if backend == "pallas":
+        from repro.kernels.decode_attention import (
+            decode_attention as _decode_pallas)
         return _decode_pallas(q, k, v, lengths, block_s=block_s,
                               ragged=ragged, interpret=not _on_tpu())
     raise ValueError(f"unknown backend {backend!r}")
@@ -32,9 +135,12 @@ def decode_attention(q, k, v, lengths, *, backend: str = "xla",
 
 def prefill_attention(q, k, v, lengths=None, *, backend: str = "xla",
                       block_q: int = 256, block_k: int = 256):
+    from repro.kernels import ref
     if backend == "xla":
         return ref.prefill_attention_ref(q, k, v, lengths)
     if backend == "pallas":
+        from repro.kernels.prefill_attention import (
+            prefill_attention as _prefill_pallas)
         return _prefill_pallas(q, k, v, lengths, block_q=block_q,
                                block_k=block_k, interpret=not _on_tpu())
     raise ValueError(f"unknown backend {backend!r}")

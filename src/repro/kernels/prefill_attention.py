@@ -35,11 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.decode_attention import (_flash_block_update,
-                                            _flash_finish, _flash_init,
-                                            flat_work_list)
-
-NEG_INF = -1e30
+from repro.kernels.ops import (NEG_INF, _flash_block_update, _flash_finish,
+                               _flash_init, flat_work_list)
 
 
 def _round_up(n: int, m: int) -> int:

@@ -48,10 +48,17 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-slots", type=int, default=3)
     ap.add_argument("--attn-backend", default=None,
-                    choices=["dense", "grid", "flat"],
-                    help="paged decode attention backend "
-                         "(default: auto — flat kernel on TPU, dense XLA "
-                         "elsewhere; see DESIGN.md §Decode hot path)")
+                    choices=["dense", "grid", "flat", "fused"],
+                    help="paged attention backend (default: auto — the "
+                         "fused mixed-iteration kernel on TPU, dense XLA "
+                         "elsewhere; see DESIGN.md §Decode hot path and "
+                         "§Fused mixed-iteration attention)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8"],
+                    help="paged KV block pool dtype — int8 halves KV "
+                         "bytes (~2x resident requests; needs the fused "
+                         "or dense backend; DESIGN.md §Quantized KV "
+                         "blocks)")
     ap.add_argument("--host-loop", action="store_true",
                     help="use the legacy host-driven engine step loop")
     ap.add_argument("--prefill-budget", type=int, default=None,
@@ -84,6 +91,7 @@ def main() -> None:
                                   balancing=args.balancing, seed=args.seed),
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,
+                     kv_dtype=args.kv_dtype,
                      device_resident=False if args.host_loop else None,
                      prefill_token_budget=args.prefill_budget,
                      chunked_prefill=(False if args.no_chunked_prefill

@@ -28,19 +28,29 @@ NEG_INF = -1e30
 #           pays max-NBT grid steps (skipped blocks still cost a grid step).
 #   flat  — Pallas kernel over a flat work list of Σ_b ceil(L_b/BS) items:
 #           no gather AND no per-request padding at the grid level.
-PAGED_BACKENDS = ("dense", "grid", "flat")
+#   fused — Pallas kernel over ONE tagged work list covering decode rows
+#           AND prefill chunks of a mixed iteration: single launch per
+#           layer per step (DESIGN.md §Fused mixed-iteration attention).
+PAGED_BACKENDS = ("dense", "grid", "flat", "fused")
+
+# KV block-pool storage layouts (DESIGN.md §Quantized KV blocks):
+#   bf16 — the model dtype, full-width rows.
+#   int8 — symmetric per-(block, position, kv-head) int8 with f32 row
+#          scales; quantize-on-write, dequant in-register inside the
+#          flash core. Supported by the "fused" and "dense" backends.
+KV_DTYPES = ("bf16", "int8")
 
 
 def resolve_paged_backend(backend: Optional[str] = None):
     """(backend, interpret) for this process. Explicit arg wins, then the
-    REPRO_PAGED_ATTN env var, then auto: the flat Pallas kernel on TPU,
+    REPRO_PAGED_ATTN env var, then auto: the fused Pallas kernel on TPU,
     the dense XLA path elsewhere (Pallas off-TPU would need interpret
     mode, which is for validation, not speed). Asking for a kernel
     backend off-TPU gets interpret=True so it still runs."""
     choice = backend or os.environ.get("REPRO_PAGED_ATTN", "auto")
     on_tpu = jax.default_backend() == "tpu"
     if choice == "auto":
-        choice = "flat" if on_tpu else "dense"
+        choice = "fused" if on_tpu else "dense"
     assert choice in PAGED_BACKENDS, f"unknown paged backend {choice!r}"
     return choice, (choice != "dense" and not on_tpu)
 
@@ -261,6 +271,92 @@ class KVCache(NamedTuple):
     v: jnp.ndarray
 
 
+class QuantKVCache(NamedTuple):
+    """int8 paged block pool (DESIGN.md §Quantized KV blocks): K/V rows are
+    symmetric int8 over the head dim with f32 per-(block, position,
+    kv-head) scales — (Dh + 4)/(2·Dh) of the bf16 bytes, ≈ 1.94× resident
+    requests at Dh = 128. A pytree like :class:`KVCache`, so the generic
+    block gather/scatter/migration helpers work unchanged."""
+    k: jnp.ndarray        # [NB, BS, Hkv, Dh] int8
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # [NB, BS, Hkv] f32
+    v_scale: jnp.ndarray
+
+
+def quantize_kv(x):
+    """Symmetric int8 quantization over the last (head) axis:
+    ``x ≈ int8 * scale`` with ``scale = amax/127`` per leading index.
+    Returns ``(int8 values, f32 scales [x.shape[:-1]])``."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def scatter_pool(pool_l, blk, off, k, v):
+    """Write new K/V rows into one layer's pool slice at physical
+    ``(blk, off)`` — quantize-on-write when the pool is int8. ``blk``/
+    ``off`` are int32 of any matching shape S; ``k``/``v`` are [*S, Hkv,
+    Dh] in compute dtype."""
+    if isinstance(pool_l, QuantKVCache):
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return QuantKVCache(pool_l.k.at[blk, off].set(kq),
+                            pool_l.v.at[blk, off].set(vq),
+                            pool_l.k_scale.at[blk, off].set(ks),
+                            pool_l.v_scale.at[blk, off].set(vs))
+    return KVCache(pool_l.k.at[blk, off].set(k.astype(pool_l.k.dtype)),
+                   pool_l.v.at[blk, off].set(v.astype(pool_l.v.dtype)))
+
+
+def _pool_scales(pool_l):
+    """(k_scale, v_scale) kernel operands — (None, None) for bf16 pools."""
+    if isinstance(pool_l, QuantKVCache):
+        return pool_l.k_scale, pool_l.v_scale
+    return None, None
+
+
+def _gather_dequant(pool_l, block_tables):
+    """Dense-path gather of a request-contiguous [B, NBT·BS, Hkv, Dh]
+    view, dequantized to f32 when the pool is int8."""
+    k_seq = paged_gather(pool_l.k, block_tables)
+    v_seq = paged_gather(pool_l.v, block_tables)
+    if isinstance(pool_l, QuantKVCache):
+        ks = paged_gather(pool_l.k_scale, block_tables)   # [B, S, Hkv]
+        vs = paged_gather(pool_l.v_scale, block_tables)
+        k_seq = k_seq.astype(jnp.float32) * ks[..., None]
+        v_seq = v_seq.astype(jnp.float32) * vs[..., None]
+    return k_seq, v_seq
+
+
+def quantize_piece(piece):
+    """Contiguous full-precision KV piece (:class:`KVCache`, leaves
+    ``[..., Hkv, Dh]``) → its :class:`QuantKVCache` twin, for writing into
+    an int8 pool. Zero-padding commutes: padded rows quantize to int8 0
+    with scale 0, which dequantize back to exact zeros."""
+    kq, ks = quantize_kv(piece.k)
+    vq, vs = quantize_kv(piece.v)
+    return QuantKVCache(kq, vq, ks, vs)
+
+
+def dequantize_piece(piece, dtype):
+    """:class:`QuantKVCache` piece → contiguous full-precision
+    :class:`KVCache` in ``dtype``. Migration exports cross this, so the
+    wire format stays the full-width layout and mixed bf16/int8 clusters
+    interoperate (DESIGN.md §Migration wire format)."""
+    return KVCache(
+        (piece.k.astype(jnp.float32) * piece.k_scale[..., None]).astype(dtype),
+        (piece.v.astype(jnp.float32) * piece.v_scale[..., None]).astype(dtype))
+
+
+def _check_kv_backend(pool_l, attn_backend: str):
+    if isinstance(pool_l, QuantKVCache) and attn_backend in ("grid", "flat"):
+        raise ValueError(
+            f"int8 KV pools need the 'fused' or 'dense' backend, "
+            f"got {attn_backend!r}")
+
+
 def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos,
                      *, mrope_positions=None):
     """x [B, 1, D]; pos [B] int32 — number of tokens already in the cache.
@@ -364,13 +460,23 @@ def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
         q = apply_rope(q, pp, cfg.rope_theta)
         k = apply_rope(k, pp, cfg.rope_theta)
 
+    _check_kv_backend(pool_l, attn_backend)
     BS = pool_l.k.shape[1]
     blk = jnp.take_along_axis(block_tables, (pos // BS)[:, None], axis=1)[:, 0]
     off = pos % BS
-    new_k = pool_l.k.at[blk, off].set(k[:, 0].astype(pool_l.k.dtype))
-    new_v = pool_l.v.at[blk, off].set(v[:, 0].astype(pool_l.v.dtype))
+    new_pool = scatter_pool(pool_l, blk, off, k[:, 0], v[:, 0])
 
-    if attn_backend != "dense":
+    if attn_backend == "fused":
+        # one-launch mixed kernel degenerates to all-decode tags at C = 1;
+        # ctx = pos, seg = 1 (dead slots: total = 0 -> zero work items)
+        from repro.kernels.mixed_attention import paged_mixed_attention
+        ks, vs = _pool_scales(new_pool)
+        o = paged_mixed_attention(
+            q, new_pool.k, new_pool.v, block_tables, pos,
+            jnp.ones_like(pos), jnp.zeros_like(pos), ks, vs,
+            num_work=attn_num_work, interpret=attn_interpret)
+        out = o.astype(q.dtype)                  # [B, 1, H, Dh]
+    elif attn_backend != "dense":
         # Pallas path: the pool stays put; the kernel chases the block
         # table. lengths = pos + 1 (dead slots: 0 -> zero work items).
         from repro.kernels.decode_attention import (
@@ -378,20 +484,19 @@ def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
         lengths = pos + 1
         if attn_backend == "flat":
             o = paged_decode_attention_flat(
-                q[:, 0], new_k, new_v, block_tables, lengths,
+                q[:, 0], new_pool.k, new_pool.v, block_tables, lengths,
                 num_work=attn_num_work, interpret=attn_interpret)
         else:
             o = paged_decode_attention(
-                q[:, 0], new_k, new_v, block_tables, lengths,
+                q[:, 0], new_pool.k, new_pool.v, block_tables, lengths,
                 interpret=attn_interpret)
         out = o[:, None].astype(q.dtype)         # [B, 1, H, Dh]
     else:
-        k_seq = paged_gather(new_k, block_tables)   # [B, NBT*BS, Hkv, Dh]
-        v_seq = paged_gather(new_v, block_tables)
+        k_seq, v_seq = _gather_dequant(new_pool, block_tables)
         kpos = jnp.arange(k_seq.shape[1])[None, :]
         mask = (kpos <= pos[:, None])[:, None, None, None, :]
         out = _gqa_sdpa(q, k_seq, v_seq, mask)
-    return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
+    return (out.reshape(B, 1, -1) @ p["wo"]), new_pool
 
 
 def attention_prefill_chunk_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
@@ -434,35 +539,135 @@ def attention_prefill_chunk_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
 
+    _check_kv_backend(pool_l, attn_backend)
     BS = pool_l.k.shape[1]
     blk = jnp.take_along_axis(block_tables, positions // BS, axis=1)  # [B, C]
     off = positions % BS
     # chunk positions are distinct per request and requests never share
     # blocks, so the batched scatter has no duplicate (blk, off) pairs
-    new_k = pool_l.k.at[blk, off].set(k.astype(pool_l.k.dtype))
-    new_v = pool_l.v.at[blk, off].set(v.astype(pool_l.v.dtype))
+    new_pool = scatter_pool(pool_l, blk, off, k, v)
 
-    if attn_backend != "dense":
+    if attn_backend == "fused":
+        # one-launch mixed kernel with all-chunk tags
+        from repro.kernels.mixed_attention import paged_mixed_attention
+        ks, vs = _pool_scales(new_pool)
+        out = paged_mixed_attention(
+            q, new_pool.k, new_pool.v, block_tables, ctx, clen,
+            jnp.ones_like(ctx), ks, vs, interpret=attn_interpret)
+        out = out.astype(q.dtype)
+    elif attn_backend != "dense":
         # Pallas path: the pool stays in HBM; the flat work-list kernel
         # chases the block table (cost ∝ chunk × context blocks)
         from repro.kernels.prefill_attention import paged_prefill_attention
-        out = paged_prefill_attention(q, new_k, new_v, block_tables, ctx,
-                                      clen, interpret=attn_interpret)
+        out = paged_prefill_attention(q, new_pool.k, new_pool.v,
+                                      block_tables, ctx, clen,
+                                      interpret=attn_interpret)
         out = out.astype(q.dtype)
     else:
-        k_seq = paged_gather(new_k, block_tables)   # [B, NBT*BS, Hkv, Dh]
-        v_seq = paged_gather(new_v, block_tables)
+        k_seq, v_seq = _gather_dequant(new_pool, block_tables)
         kpos = jnp.arange(k_seq.shape[1])[None, None, :]        # [1, 1, S]
         mask = (kpos <= positions[:, :, None])[:, None, None]   # [B,1,1,C,S]
         out = _gqa_sdpa(q, k_seq, v_seq, mask)
-    return (out.reshape(B, C, -1) @ p["wo"]), KVCache(new_k, new_v)
+    return (out.reshape(B, C, -1) @ p["wo"]), new_pool
+
+
+def attention_mixed_paged(p, cfg: ModelConfig, x_dec, x_ck, pool_l,
+                          bt_dec, bt_ck, pos, ctx_len, chunk_len, *,
+                          attn_backend: str = "fused",
+                          attn_interpret: bool = False,
+                          attn_num_work: Optional[int] = None):
+    """ONE fused attention launch for a whole mixed iteration: the decode
+    batch advances one token while prompt chunks prefill beside it
+    (DESIGN.md §Fused mixed-iteration attention).
+
+    x_dec [Bd, 1, D] — the decode batch (``pos = -1`` marks dead slots);
+    x_ck  [Bp, C, D] — the prefill chunks (rows past ``chunk_len`` are
+    padding); pool_l — ONE layer's pool slice (:class:`KVCache` or
+    :class:`QuantKVCache`); bt_dec [Bd, NBT] / bt_ck [Bp, NBT'] block
+    tables (padded to a common width here); pos [Bd] tokens already
+    cached per decode slot; ctx_len/chunk_len [Bp] as in
+    :func:`attention_prefill_chunk_paged`.
+
+    Projection/RoPE/wo stay per-half — padding decode tokens through the
+    chunk width would inflate the MXU work C× — and only the attention
+    itself runs as one tagged work list: decode segments (tag 0,
+    ctx = pos, seg = 1) interleaved with chunk segments (tag 1). Returns
+    ``(out_dec [Bd, 1, D], out_ck [Bp, C, D], new_pool)``.
+    """
+    assert not cfg.sliding_window, "paged mixed step is full-attention only"
+    assert not cfg.use_mrope, "paged mixed step: RoPE / learned-pos only"
+    _check_kv_backend(pool_l, attn_backend)
+    Bd = x_dec.shape[0]
+    Bp, C, _ = x_ck.shape
+    ctx = jnp.broadcast_to(jnp.asarray(ctx_len, jnp.int32).reshape(-1), (Bp,))
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32).reshape(-1),
+                            (Bp,))
+    positions = ctx[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [Bp, C]
+
+    qd, kd, vd = _project_qkv(p, cfg, x_dec)
+    qc, kc, vc = _project_qkv(p, cfg, x_ck)
+    if not cfg.learned_pos:
+        qd = apply_rope(qd, pos[:, None], cfg.rope_theta)
+        kd = apply_rope(kd, pos[:, None], cfg.rope_theta)
+        qc = apply_rope(qc, positions, cfg.rope_theta)
+        kc = apply_rope(kc, positions, cfg.rope_theta)
+
+    BS = pool_l.k.shape[1]
+    blk_d = jnp.take_along_axis(bt_dec, (pos // BS)[:, None], axis=1)[:, 0]
+    blk_c = jnp.take_along_axis(bt_ck, positions // BS, axis=1)
+    pool1 = scatter_pool(pool_l, blk_d, pos % BS, kd[:, 0], vd[:, 0])
+    new_pool = scatter_pool(pool1, blk_c, positions % BS, kc, vc)
+
+    ctx_all = jnp.concatenate([pos, ctx])
+    slen_all = jnp.concatenate([jnp.ones_like(pos), clen])
+
+    if attn_backend == "fused":
+        from repro.kernels.mixed_attention import paged_mixed_attention
+        # decode q rides in row 0 of a chunk-wide tile; block tables pad
+        # to a common width (padded entries are only reached clamped, on
+        # work items the total guard skips)
+        NBT = max(bt_dec.shape[1], bt_ck.shape[1])
+        bt_all = jnp.concatenate([
+            jnp.pad(bt_dec, ((0, 0), (0, NBT - bt_dec.shape[1]))),
+            jnp.pad(bt_ck, ((0, 0), (0, NBT - bt_ck.shape[1])))])
+        q_all = jnp.concatenate([
+            jnp.pad(qd, ((0, 0), (0, C - 1), (0, 0), (0, 0))), qc])
+        tags = jnp.concatenate([jnp.zeros_like(pos), jnp.ones_like(ctx)])
+        ks, vs = _pool_scales(new_pool)
+        o = paged_mixed_attention(
+            q_all, new_pool.k, new_pool.v, bt_all, ctx_all, slen_all, tags,
+            ks, vs, num_work=attn_num_work, interpret=attn_interpret)
+        o = o.astype(qd.dtype)
+        out_d, out_c = o[:Bd, :1], o[Bd:]
+    else:
+        # dense bit-parity reference: the same two-gather SDPA halves the
+        # separate-kernel path runs (CPU/debug fallback)
+        kd_seq, vd_seq = _gather_dequant(new_pool, bt_dec)
+        kpos = jnp.arange(kd_seq.shape[1])[None, :]
+        mask = (kpos <= pos[:, None])[:, None, None, None, :]
+        out_d = _gqa_sdpa(qd, kd_seq, vd_seq, mask)
+        kc_seq, vc_seq = _gather_dequant(new_pool, bt_ck)
+        kpos = jnp.arange(kc_seq.shape[1])[None, None, :]
+        mask = (kpos <= positions[:, :, None])[:, None, None]
+        out_c = _gqa_sdpa(qc, kc_seq, vc_seq, mask)
+    return (out_d.reshape(Bd, 1, -1) @ p["wo"],
+            out_c.reshape(Bp, C, -1) @ p["wo"], new_pool)
 
 
 def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
-                    dtype=None) -> KVCache:
-    """Zeroed global block pool for ONE layer: [NB, BS, Hkv, Dh]."""
-    dt = dtype or cfg.dtype
+                    dtype=None, kv_dtype: str = "bf16"):
+    """Zeroed global block pool for ONE layer: [NB, BS, Hkv, Dh].
+    ``kv_dtype="int8"`` returns the quantized layout (zero scales, so
+    garbage blocks dequantize to exact zeros)."""
+    assert kv_dtype in KV_DTYPES, kv_dtype
     shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_dtype == "int8":
+        sshape = shape[:-1]
+        return QuantKVCache(jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(sshape, jnp.float32),
+                            jnp.zeros(sshape, jnp.float32))
+    dt = dtype or cfg.dtype
     return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
 
 

@@ -55,6 +55,14 @@ class Model:
     #                 chunk_len, *, attn_backend, attn_interpret)
     #       -> (last-real-token logits [B, V], new pool)
     prefill_chunk: Optional[Callable[..., Any]] = None
+    # Fused mixed iteration (DESIGN.md §Fused mixed-iteration attention):
+    # the decode batch and the prefill chunks of one engine step through
+    # the stack with ONE attention launch per layer.
+    #   mixed_step(params, pool, dec_token, ck_tokens, bt_dec, bt_ck, pos,
+    #              ctx_len, chunk_len, *, attn_backend, attn_interpret,
+    #              attn_num_work)
+    #       -> (dec_logits [Bd, V], ck_logits [Bp, V], new pool)
+    mixed_step: Optional[Callable[..., Any]] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -123,8 +131,10 @@ def _decoder_model(cfg: ModelConfig) -> Model:
         return transformer.forward_decode_paged(params, cfg, token, pool,
                                                 block_tables, pos, **extras)
 
-    def init_paged_cache(num_blocks: int, block_size: int):
-        return transformer.init_paged_cache(cfg, num_blocks, block_size)
+    def init_paged_cache(num_blocks: int, block_size: int,
+                         kv_dtype: str = "bf16"):
+        return transformer.init_paged_cache(cfg, num_blocks, block_size,
+                                            kv_dtype=kv_dtype)
 
     def prefill_bucketed(params, batch, true_len):
         tokens = batch["tokens"]
@@ -143,11 +153,20 @@ def _decoder_model(cfg: ModelConfig) -> Model:
             params, cfg, tokens, pool, block_tables, ctx_len, chunk_len,
             attn_backend=attn_backend, attn_interpret=attn_interpret)
 
+    def mixed_step(params, pool, dec_token, ck_tokens, bt_dec, bt_ck, pos,
+                   ctx_len, chunk_len, *, attn_backend: str = "fused",
+                   attn_interpret: bool = False, attn_num_work=None):
+        return transformer.forward_mixed(
+            params, cfg, dec_token, ck_tokens, pool, bt_dec, bt_ck, pos,
+            ctx_len, chunk_len, attn_backend=attn_backend,
+            attn_interpret=attn_interpret, attn_num_work=attn_num_work)
+
     return Model(cfg, init, loss, prefill, decode_step, init_cache,
                  init_paged_cache=init_paged_cache,
                  decode_step_paged=decode_step_paged,
                  prefill_bucketed=prefill_bucketed,
-                 prefill_chunk=prefill_chunk)
+                 prefill_chunk=prefill_chunk,
+                 mixed_step=mixed_step)
 
 
 # --------------------------------------------------------------------------

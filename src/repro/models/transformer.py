@@ -265,15 +265,78 @@ def forward_prefill_chunk(p, cfg: ModelConfig, tokens, pool: KVCache,
     return unembed(p, cfg, x)[:, 0], new_pool
 
 
+def block_mixed(pl, cfg: ModelConfig, x_dec, x_ck, pool_l, bt_dec, bt_ck,
+                pos, ctx_len, chunk_len, attn_backend: str = "fused",
+                attn_interpret: bool = False, attn_num_work=None):
+    hd = rms_norm(x_dec, pl["ln_attn"], cfg.norm_eps)
+    hc = rms_norm(x_ck, pl["ln_attn"], cfg.norm_eps)
+    ad, ac, new_pool = attn.attention_mixed_paged(
+        pl["attn"], cfg, hd, hc, pool_l, bt_dec, bt_ck, pos, ctx_len,
+        chunk_len, attn_backend=attn_backend, attn_interpret=attn_interpret,
+        attn_num_work=attn_num_work)
+    x_dec = x_dec + ad
+    x_ck = x_ck + ac
+    md, aux_d = _mlp_part(pl, cfg, x_dec)
+    mc, aux_c = _mlp_part(pl, cfg, x_ck)
+    return x_dec + md, x_ck + mc, new_pool, aux_d + aux_c
+
+
+def forward_mixed(p, cfg: ModelConfig, dec_token, ck_tokens, pool,
+                  bt_dec, bt_ck, pos, ctx_len, chunk_len, *,
+                  attn_backend: str = "fused", attn_interpret: bool = False,
+                  attn_num_work=None):
+    """One whole MIXED iteration through the stack: the decode batch
+    (``dec_token [Bd]``, ``pos [Bd]``, -1 = dead slot) advances one token
+    while prompt chunks (``ck_tokens [Bp, C]``, ``ctx_len``/``chunk_len``)
+    prefill beside it — each layer runs ONE fused attention launch over
+    the tagged decode+chunk work list (DESIGN.md §Fused mixed-iteration
+    attention). Activations stay per-half through embed/QKV/MLP so decode
+    tokens never pay the chunk width C in linear work. Returns
+    ``(dec_logits [Bd, V], ck_logits [Bp, V], new_pool)`` — ck_logits at
+    each chunk's last real position, as in :func:`forward_prefill_chunk`.
+    """
+    x_dec = embed_tokens(p, cfg, dec_token[:, None])
+    x_ck = embed_tokens(p, cfg, ck_tokens)
+    Bp, C = ck_tokens.shape
+
+    def body(carry, layer):
+        x_dec, x_ck = carry
+        pl_, pool_l = layer
+        x_dec, x_ck, new_pool_l, _ = block_mixed(
+            pl_, cfg, x_dec, x_ck, pool_l, bt_dec, bt_ck, pos, ctx_len,
+            chunk_len, attn_backend=attn_backend,
+            attn_interpret=attn_interpret, attn_num_work=attn_num_work)
+        return (x_dec, x_ck), new_pool_l
+
+    (x_dec, x_ck), new_pool = jax.lax.scan(body, (x_dec, x_ck),
+                                           (p["layers"], pool))
+    x_dec = rms_norm(x_dec, p["ln_f"], cfg.norm_eps)
+    x_ck = rms_norm(x_ck, p["ln_f"], cfg.norm_eps)
+    clen = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32).reshape(-1),
+                            (Bp,))
+    x_ck = jnp.take_along_axis(x_ck, (clen - 1)[:, None, None], axis=1)
+    return (unembed(p, cfg, x_dec)[:, 0], unembed(p, cfg, x_ck)[:, 0],
+            new_pool)
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
-                     dtype=None) -> KVCache:
+                     dtype=None, kv_dtype: str = "bf16"):
     """Global paged KV pool: leaves [L, NB, BS, Hkv, Dh] (DESIGN.md
-    §Block pool). Blocks are owned by requests via the engine's
-    BlockAllocator; the model never sees ownership, only block tables."""
+    §Block pool) — int8 rows + f32 [L, NB, BS, Hkv] scales when
+    ``kv_dtype="int8"`` (§Quantized KV blocks). Blocks are owned by
+    requests via the engine's BlockAllocator; the model never sees
+    ownership, only block tables."""
     assert not cfg.sliding_window, "paged cache is full-attention only"
-    dt = dtype or cfg.dtype
+    assert kv_dtype in attn.KV_DTYPES, kv_dtype
     shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
              cfg.head_dim)
+    if kv_dtype == "int8":
+        sshape = shape[:-1]
+        return attn.QuantKVCache(jnp.zeros(shape, jnp.int8),
+                                 jnp.zeros(shape, jnp.int8),
+                                 jnp.zeros(sshape, jnp.float32),
+                                 jnp.zeros(sshape, jnp.float32))
+    dt = dtype or cfg.dtype
     return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
 
 

@@ -57,7 +57,8 @@ import numpy as np
 from repro.core.migration import (gather_kv_blocks, kv_bytes,
                                   scatter_kv_blocks)
 from repro.kernels.cost import pow2_bucket
-from repro.models.attention import resolve_paged_backend
+from repro.models.attention import (QuantKVCache, dequantize_piece,
+                                    quantize_piece, resolve_paged_backend)
 from repro.models.model import Model
 from repro.serving.block_pool import (BlockAllocator, blocks_for, chain_hash,
                                       prompt_chain)
@@ -84,6 +85,23 @@ def d2h(x) -> np.ndarray:
     return np.asarray(x)
 
 
+# Running count of attention-bearing device calls (jitted forwards that
+# execute attention kernels) issued by all engines in this process. Launch
+# counters INSIDE a jitted function only tick at trace time, so the
+# one-launch-per-mixed-step contract is asserted here instead: every such
+# forward is routed through :func:`attn_call` (the launch-count twin of
+# :func:`d2h`), and a fused mixed step makes exactly ONE call where the
+# separate-kernel path makes two (chunk batch + decode burst).
+ATTN_CALLS = 0
+
+
+def attn_call(fn, *args, **kwargs):
+    """Issue one attention-bearing device call (and count it)."""
+    global ATTN_CALLS
+    ATTN_CALLS += 1
+    return fn(*args, **kwargs)
+
+
 _next_pow2 = pow2_bucket     # ONE bucketing policy (kernels/cost.py)
 
 
@@ -102,9 +120,11 @@ class Engine:
                  attn_backend: Optional[str] = None,
                  prefill_token_budget: Optional[int] = None,
                  chunked_prefill: Optional[bool] = None,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 kv_dtype: str = "bf16"):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
+        assert kv_dtype in ("bf16", "int8"), kv_dtype
         self.id = engine_id
         self.model = model
         self.params = params
@@ -127,14 +147,27 @@ class Engine:
             # slots and padded table rows write/read there by construction,
             # so the fixed-shape device loop cannot corrupt live blocks
             self.garbage_block = self.num_blocks
-            self.cache = model.init_paged_cache(self.num_blocks + 1,
-                                                block_size)
+            self.kv_dtype = kv_dtype
+            if kv_dtype == "int8":
+                # int8 pools halve KV bytes, so the same token_budget holds
+                # nearly 2x the blocks (DESIGN.md §Quantized KV blocks);
+                # quantized rows are only readable by the fused kernel and
+                # the dense gather
+                self.cache = model.init_paged_cache(self.num_blocks + 1,
+                                                    block_size,
+                                                    kv_dtype=kv_dtype)
+            else:
+                self.cache = model.init_paged_cache(self.num_blocks + 1,
+                                                    block_size)
             self.block_tables: List[List[int]] = [[] for _ in range(max_slots)]
             self._bytes_per_block = kv_bytes(self.cache) / (self.num_blocks + 1)
             self.device_resident = (device_resident
                                     if device_resident is not None else True)
             self.attn_backend, self.attn_interpret = \
                 resolve_paged_backend(attn_backend)
+            if kv_dtype == "int8":
+                assert self.attn_backend in ("fused", "dense"), \
+                    "int8 KV needs the 'fused' or 'dense' attention backend"
             if self.device_resident:
                 assert model.prefill_bucketed is not None, \
                     "device-resident loop needs Model.prefill_bucketed"
@@ -144,6 +177,7 @@ class Engine:
                 self._dev_len = jnp.zeros((max_slots,), jnp.int32)
                 self._dev_tok = jnp.zeros((max_slots,), jnp.int32)
                 self._burst_fns: Dict[Tuple[int, int], Callable] = {}
+                self._mixed_fns: Dict[int, Callable] = {}
                 self._prefill_bucketed = jax.jit(model.prefill_bucketed)
                 self._pending_first: List[Tuple[ServeRequest, jnp.ndarray]] = []
             else:
@@ -154,6 +188,8 @@ class Engine:
                     attn_backend=self.attn_backend,
                     attn_interpret=self.attn_interpret))
         else:
+            assert kv_dtype == "bf16", \
+                "quantized KV needs the paged block pool"
             self.block_size = 0
             self.device_resident = False
             self.cache = model.init_cache(max_slots, max_seq)
@@ -176,6 +212,16 @@ class Engine:
                 model.prefill_chunk,
                 attn_backend=self.attn_backend,
                 attn_interpret=self.attn_interpret))
+        # Fused mixed iterations (DESIGN.md §Fused mixed-iteration
+        # attention): when the backend is "fused" and the model has a
+        # mixed_step, the device loop runs the decode batch AND the step's
+        # prompt chunks through ONE attention-bearing device call (one
+        # kernel launch per layer). Otherwise mixed steps stay two calls —
+        # the bit-parity separate-kernel reference.
+        self.fused_mixed = bool(
+            self.chunked_prefill and self.device_resident
+            and self.attn_backend == "fused"
+            and getattr(model, "mixed_step", None) is not None)
         # Refcounted prefix cache (DESIGN.md §Prefix cache): admission
         # shares already-resident full prompt blocks and starts chunked
         # prefill at ctx_done = cached_tokens, so a warm request skips the
@@ -439,8 +485,8 @@ class Engine:
         if self.paged:
             # prompt-length cache piece [L, 1, T, ...] scattered into
             # freshly allocated blocks — no max_seq padding anywhere
-            logits, piece = self._prefill(self.params, {"tokens": tokens},
-                                          cache_len=None)
+            logits, piece = attn_call(self._prefill, self.params,
+                                      {"tokens": tokens}, cache_len=None)
             ids = self.allocator.allocate(
                 blocks_for(len(req.prompt), self.block_size))
             self.block_tables[slot] = ids
@@ -449,8 +495,9 @@ class Engine:
             self.prefill_work_blocks += len(ids)
             self.prefill_tokens_done += len(req.prompt)
         else:
-            logits, piece = self._prefill(self.params, {"tokens": tokens},
-                                          cache_len=self.max_seq)
+            logits, piece = attn_call(self._prefill, self.params,
+                                      {"tokens": tokens},
+                                      cache_len=self.max_seq)
             self.cache = _write_slot(self.cache, piece, slot)
         vec = logits if logits.ndim == 1 else logits[0]
         tok = int(d2h(jnp.argmax(vec)))
@@ -477,8 +524,9 @@ class Engine:
         P = min(_next_pow2(T), _next_pow2(self.max_seq))
         toks = np.zeros((1, P), np.int32)
         toks[0, :T] = req.prompt
-        logits, piece = self._prefill_bucketed(
-            self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(T))
+        logits, piece = attn_call(
+            self._prefill_bucketed, self.params,
+            {"tokens": jnp.asarray(toks)}, jnp.int32(T))
         piece = jax.tree.map(lambda a: a[:, :, :T], piece)
         ids = self.allocator.allocate(blocks_for(T, self.block_size))
         self.block_tables[slot] = ids
@@ -514,9 +562,27 @@ class Engine:
                                             List[ServeRequest]]:
         """Returns (rejected, completed): requests failed for never
         fitting, and requests whose LAST chunk landed this step (their
-        first token is sampled; device loops defer it to the step sync)."""
-        rejected: List[ServeRequest] = []
+        first token is sampled; device loops defer it to the step sync).
+        This is the two-call reference path; the fused device loop plans
+        with :meth:`_plan_chunks` and executes the chunks inside the ONE
+        mixed device call instead."""
+        rejected, plan = self._plan_chunks()
         completed: List[ServeRequest] = []
+        if plan:
+            arrays = self._prepare_chunk_arrays(plan)
+            logits, self.cache = attn_call(self._prefill_chunk,
+                                           self.params, self.cache, *arrays)
+            self._finish_chunks(
+                plan, jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                completed)
+        return rejected, completed
+
+    def _plan_chunks(self) -> Tuple[List[ServeRequest],
+                                    List[Tuple[int, int]]]:
+        """Admission + chunk planning of the mixed iteration — pure host
+        bookkeeping, no device work. Returns (rejected, plan) where plan
+        is [(slot, chunk_len)] under the prefill token budget."""
+        rejected: List[ServeRequest] = []
         budget = self.prefill_token_budget
         plan: List[Tuple[int, int]] = []            # (slot, chunk_len)
         for slot in list(self._prefill_order):      # oldest admitted first
@@ -563,19 +629,19 @@ class Engine:
             clen = min(len(req.prompt) - req.ctx_done, budget)
             plan.append((slot, clen))
             budget -= clen
-        if plan:
-            self._prefill_chunk_batch(plan, completed)
-        return rejected, completed
+        return rejected, plan
 
-    def _prefill_chunk_batch(self, plan: List[Tuple[int, int]],
-                             completed: List[ServeRequest]) -> None:
-        """ONE batched device call for ALL of the step's planned chunks —
-        the prompt half of the fused mixed iteration. Chunks are padded to
-        a common pow2 bucket and a common pow2 table width (compiles stay
-        O(slots · log budget · log max_seq)); each chunk's blocks are
-        allocated here, always covered by its admission reservation, so
-        allocation cannot fail. Table tails are the garbage block, so the
-        padding rows of short chunks never touch live data."""
+    def _prepare_chunk_arrays(self, plan: List[Tuple[int, int]]):
+        """Device arrays for ALL of the step's planned chunks — the prompt
+        half of the mixed iteration, consumed either by the separate
+        ``prefill_chunk`` call or by the fused mixed call. Chunks are
+        padded to a common pow2 bucket and a common pow2 table width
+        (compiles stay O(slots · log budget · log max_seq)); each chunk's
+        blocks are allocated here, always covered by its admission
+        reservation, so allocation cannot fail. Table tails are the
+        garbage block, so the padding rows of short chunks never touch
+        live data. Returns ``(tokens [B, C], tables [B, nbt], ctx [B],
+        clen [B])``."""
         B = len(plan)
         C = _next_pow2(max(clen for _, clen in plan))
         nbt = 1
@@ -601,9 +667,19 @@ class Engine:
             bt[j, :len(table)] = table
             ctxs[j] = ctx
             clens[j] = clen
-        logits, self.cache = self._prefill_chunk(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(bt),
-            jnp.asarray(ctxs), jnp.asarray(clens))
+        return (jnp.asarray(toks), jnp.asarray(bt), jnp.asarray(ctxs),
+                jnp.asarray(clens))
+
+    def _finish_chunks(self, plan: List[Tuple[int, int]], first_toks,
+                       completed: List[ServeRequest]) -> None:
+        """Post-chunk bookkeeping: advance ``ctx_done``, and for requests
+        whose LAST chunk just landed, record the (still on-device) first
+        token — ``first_toks`` is the int32 [B] argmax over each chunk's
+        final-position logits. On the fused path the completing slot was
+        dead during the device call (its device table row all-garbage, its
+        length 0), so publishing its table/length here — after the call —
+        means a request never decodes in the same step its prefill
+        finishes; token VALUES are unaffected."""
         for j, (slot, clen) in enumerate(plan):
             req = self.slots[slot]
             T = len(req.prompt)
@@ -616,7 +692,7 @@ class Engine:
             if self.prefix_cache:
                 self._publish_prompt(req, slot)
             self._prefill_order.remove(slot)
-            tok_dev = jnp.argmax(logits[j]).astype(jnp.int32)
+            tok_dev = first_toks[j]
             req.first_token_step = self.steps
             req.tokens_by_engine[self.id] = \
                 req.tokens_by_engine.get(self.id, 0) + 1
@@ -738,19 +814,56 @@ class Engine:
         self._burst_fns[key] = fn
         return fn
 
+    def _mixed_fn(self, num_work: int):
+        """Jitted FUSED mixed iteration: the whole decode batch and the
+        step's prompt chunks advance through the stack in this single
+        attention-bearing call — one tagged work-list kernel launch per
+        layer (DESIGN.md §Fused mixed-iteration attention). Cached per
+        pow2 ``num_work``; shape changes (table width, chunk bucket,
+        chunk count) retrace via jit."""
+        fn = self._mixed_fns.get(num_work)
+        if fn is not None:
+            return fn
+        mixed = functools.partial(self.model.mixed_step,
+                                  attn_backend=self.attn_backend,
+                                  attn_interpret=self.attn_interpret,
+                                  attn_num_work=num_work)
+
+        def step(params, cache, bt, tok, length, ck_tokens, bt_ck, ctx, clen):
+            live = length > 0
+            pos = length - 1            # dead slots: -1 -> 0 attn length
+            dec_logits, ck_logits, cache = mixed(
+                params, cache, tok, ck_tokens, bt, bt_ck, pos, ctx, clen)
+            new_tok = jnp.argmax(dec_logits, axis=-1).astype(jnp.int32)
+            tok = jnp.where(live, new_tok, tok)
+            length = jnp.where(live, length + 1, length)
+            ck_tok = jnp.argmax(ck_logits, axis=-1).astype(jnp.int32)
+            return cache, tok, length, new_tok, ck_tok
+
+        fn = jax.jit(step)
+        self._mixed_fns[num_work] = fn
+        return fn
+
     def _step_device(self, burst: int) -> List[ServeRequest]:
         self.steps += 1
         base = self.steps                  # engine step of the 1st iteration
         finished: List[ServeRequest] = []
         self._pending_first = []
         prefill_done: List[ServeRequest] = []
+        chunk_plan: List[Tuple[int, int]] = []
         if self.chunked_prefill:
-            rejected, prefilled = self._run_chunked_prefill()
-            finished.extend(rejected)
-            for r in prefilled:
-                if r.max_new_tokens <= 1:       # finishes at prefill; its
-                    prefill_done.append(r)      # token lands after the sync
-                    self._release(r.slot)
+            if self.fused_mixed:
+                # plan + admit only — the chunks execute INSIDE the fused
+                # mixed call below, not as a separate device call
+                rejected, chunk_plan = self._plan_chunks()
+                finished.extend(rejected)
+            else:
+                rejected, prefilled = self._run_chunked_prefill()
+                finished.extend(rejected)
+                for r in prefilled:
+                    if r.max_new_tokens <= 1:   # finishes at prefill; its
+                        prefill_done.append(r)  # token lands after the sync
+                        self._release(r.slot)
         else:
             for r in self._admit():
                 if r.rejected:                  # prompt can never fit
@@ -763,11 +876,60 @@ class Engine:
         # the fixed-shape batch treats them as dead slots
         live = [(i, r) for i, r in enumerate(self.slots)
                 if r is not None and not r.prefilling]
-        pending = list(self._pending_first)
-        pend_reqs = {id(r) for r, _ in pending}
         h = 0
         toks = None
-        if live:
+        if self.fused_mixed and chunk_plan:
+            # ---- ONE fused device call: decode batch + prompt chunks ----
+            # (DESIGN.md §Fused mixed-iteration attention.) h = 1 always —
+            # a step with chunk work is an admission opportunity, so it
+            # never bursts (same rule as the separate path's cap)
+            h = 1
+            # pre-grow decode tables for this step's write (pos slot_len-1)
+            for i, _ in live:
+                need = blocks_for(int(self.slot_len[i]), self.block_size)
+                table = self.block_tables[i]
+                if need > len(table):
+                    table.extend(self.allocator.allocate(need - len(table)))
+                    self._ensure_nbt_cap(need)
+                    self._dev_set_table(i, table)
+            ck_toks, bt_ck, ctxs, clens = \
+                self._prepare_chunk_arrays(chunk_plan)
+            dec_blocks = [blocks_for(int(self.slot_len[i]), self.block_size)
+                          for i, _ in live]
+            ck_blocks = [blocks_for(self.slots[s].ctx_done + c,
+                                    self.block_size) for s, c in chunk_plan]
+            real = sum(dec_blocks) + sum(ck_blocks)
+            # bucket = pow2(decode items) + pow2(chunk items), NOT
+            # pow2(sum): the padding tail then never exceeds what the two
+            # separate kernels would pad (pow2(a+b) can overshoot
+            # pow2(a)+pow2(b)), so fusing strictly saves the launch; the
+            # jit cache stays O(log²) keys
+            num_work = ((_next_pow2(sum(dec_blocks)) if live else 0)
+                        + _next_pow2(sum(ck_blocks)))
+            self.last_grid = {
+                "backend": "fused",
+                "flat_items": num_work,
+                "real_items": real,
+                "padded_items": (len(dec_blocks) + len(ck_blocks))
+                * max(dec_blocks + ck_blocks),
+            }
+            fn = self._mixed_fn(num_work)
+            (self.cache, self._dev_tok, self._dev_len, new_tok,
+             ck_tok) = attn_call(fn, self.params, self.cache, self._dev_bt,
+                                 self._dev_tok, self._dev_len, ck_toks,
+                                 bt_ck, ctxs, clens)
+            if live:
+                toks = new_tok[None]    # one horizon row for the step sync
+            else:
+                h = 0
+            chunk_completed: List[ServeRequest] = []
+            self._finish_chunks(chunk_plan, ck_tok, chunk_completed)
+            for r in chunk_completed:
+                if r.max_new_tokens <= 1:       # finishes at prefill; its
+                    prefill_done.append(r)      # token lands after the sync
+                    self._release(r.slot)
+        elif live:
+            pend_reqs = {id(r) for r, _ in self._pending_first}
             # fusion horizon: nobody may cross a count/capacity finish
             # boundary before the last fused iteration (eos finishes are
             # data-dependent and handled by truncation after the sync)
@@ -795,10 +957,11 @@ class Engine:
                     self._dev_set_table(i, table)   # one write per grown row
             real = sum(blocks_for(int(self.slot_len[i]) + h - 1,
                                   self.block_size) for i, _ in live)
-            # num_work only shapes the FLAT kernel's grid; for the other
-            # backends key the jit cache on a single value so pow2 growth
-            # of the live block count never forces a spurious recompile
-            num_work = _next_pow2(real) if self.attn_backend == "flat" else 0
+            # num_work only shapes the flat-work-list grids (flat/fused);
+            # for the other backends key the jit cache on a single value so
+            # pow2 growth of the live block count never forces a recompile
+            num_work = (_next_pow2(real)
+                        if self.attn_backend in ("flat", "fused") else 0)
             self.last_grid = {
                 "backend": self.attn_backend,
                 "flat_items": _next_pow2(real),
@@ -810,10 +973,11 @@ class Engine:
                     for i, _ in live),
             }
             fn = self._burst_fn(num_work, h)
-            self.cache, self._dev_tok, self._dev_len, toks = fn(
-                self.params, self.cache, self._dev_bt, self._dev_tok,
+            self.cache, self._dev_tok, self._dev_len, toks = attn_call(
+                fn, self.params, self.cache, self._dev_bt, self._dev_tok,
                 self._dev_len)
         # ---- the step's single device->host transfer ----
+        pending = list(self._pending_first)
         parts = [jnp.stack([t for _, t in pending])] if pending else []
         if toks is not None:
             parts.append(toks.reshape(-1))
@@ -858,7 +1022,8 @@ class Engine:
     def _decode_mono_live(self, live, last_tok, pos):
         idx = np.asarray([i for i, _ in live])
         sub_cache = jax.tree.map(lambda a: a[:, idx], self.cache)
-        logits, new_sub = self._decode(self.params, sub_cache, last_tok, pos)
+        logits, new_sub = attn_call(self._decode, self.params, sub_cache,
+                                    last_tok, pos)
         # one batched scatter over all live slots (slots never alias, so
         # there are no duplicate indices) instead of a per-slot update
         self.cache = jax.tree.map(
@@ -883,8 +1048,9 @@ class Engine:
         for j, (i, _) in enumerate(live):
             ids = self.block_tables[i]
             bt[j, :len(ids)] = ids
-        logits, self.cache = self._decode_paged(
-            self.params, self.cache, last_tok, jnp.asarray(bt), pos)
+        logits, self.cache = attn_call(
+            self._decode_paged, self.params, self.cache, last_tok,
+            jnp.asarray(bt), pos)
         return logits
 
     def _release(self, slot: int) -> None:
@@ -939,6 +1105,10 @@ class Engine:
             piece = jax.tree.map(
                 lambda a: a.reshape(a.shape[0], 1, -1, *a.shape[3:])[:, :, :length],
                 gathered)
+            if isinstance(piece, QuantKVCache):
+                # wire format stays full-width: mixed bf16/int8 clusters
+                # interoperate, receivers re-quantize on import
+                piece = dequantize_piece(piece, self.model.cfg.dtype)
         else:
             piece = jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
             if self.model.cfg.family != "ssm" \
@@ -1031,8 +1201,12 @@ def _write_slot(cache, piece, slot: int):
 
 def _write_prompt_blocks(pool, piece, block_ids, block_size: int):
     """Scatter a contiguous KV piece (leaves [L, 1, T, ...]) into physical
-    blocks ``block_ids`` of a paged pool (leaves [L, NB, BS, ...])."""
+    blocks ``block_ids`` of a paged pool (leaves [L, NB, BS, ...]).
+    Full-precision pieces headed for an int8 pool are quantized first
+    (scale leaves [L, 1, T, Hkv] pack on dim 2 like any other leaf)."""
     nb = len(block_ids)
+    if isinstance(pool, QuantKVCache) and not isinstance(piece, QuantKVCache):
+        piece = quantize_piece(piece)
 
     def pack(p):
         T = p.shape[2]

@@ -46,6 +46,8 @@ class ServerConfig:
     balance_every: int = 8
     max_migrations_per_step: int = 3   # §5 concurrency cap
     seed: int = 0
+    attn_backend: Optional[str] = None  # dense | grid | flat | fused | None=auto
+    kv_dtype: str = "bf16"             # bf16 | int8 (DESIGN.md §Quantized KV)
 
 
 class EngineView:
@@ -127,11 +129,15 @@ class MILSServer:
                  prefill_token_budget: Optional[int] = None,
                  chunked_prefill: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
+                 kv_dtype: Optional[str] = None,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
         self.plan = plan
         self.on_token = on_token
+        # constructor kwargs override the ServerConfig defaults
+        attn_backend = attn_backend or cfg.attn_backend
+        kv_dtype = kv_dtype or cfg.kv_dtype
         if engine_factory is None:
             def engine_factory(i):
                 return Engine(i, model, params, max_slots=max_slots,
@@ -141,7 +147,8 @@ class MILSServer:
                               attn_backend=attn_backend,
                               prefill_token_budget=prefill_token_budget,
                               chunked_prefill=chunked_prefill,
-                              prefix_cache=prefix_cache)
+                              prefix_cache=prefix_cache,
+                              kv_dtype=kv_dtype)
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(

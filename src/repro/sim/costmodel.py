@@ -21,8 +21,8 @@ import math
 from typing import Sequence
 
 from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
-                                decode_attn_time_s, mixed_iter_time_s,
-                                prefill_flops)
+                                decode_attn_time_s, kv_bytes_per_elem,
+                                mixed_iter_time_s, prefill_flops)
 from repro.models.common import ModelConfig
 
 
@@ -39,6 +39,8 @@ class HardwareProfile:
     hbm: float = HBM_BW
     attn_frac: float = 1.0         # hybrid archs: fraction of layers w/ attn
     ragged_backend: bool = False   # beyond-paper kernel flag
+    fused_backend: bool = False    # ONE-launch fused mixed iterations
+    kv_dtype: str = "bf16"         # bf16 | int8 block pool
 
     @property
     def t_weights(self) -> float:
@@ -47,9 +49,14 @@ class HardwareProfile:
 
 
 def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
-                        ragged_backend: bool = False) -> HardwareProfile:
+                        ragged_backend: bool = False,
+                        fused_backend: bool = False,
+                        kv_dtype: str = "bf16") -> HardwareProfile:
     """Build a per-instance hardware profile from a model config.
-    ``tp``: tensor-parallel ways (divides weights + KV per chip)."""
+    ``tp``: tensor-parallel ways (divides weights + KV per chip).
+    ``kv_dtype="int8"`` prices the quantized block pool — per-token KV
+    bytes (and so block bytes / capacity) shrink by ``(Dh+4)/(2·Dh)``,
+    and every attention DMA term moves the smaller bytes."""
     d, L = cfg.d_model, cfg.num_layers
     if cfg.num_experts:
         ffn_p = 3 * d * cfg.d_ff
@@ -62,8 +69,10 @@ def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
     if cfg.num_heads:
         attn_p = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
             + cfg.num_heads * cfg.head_dim * d
-        spec = AttnSpec(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
-        kv_tok = 2 * cfg.num_kv_heads * cfg.head_dim * 2  # K+V bf16
+        kv_elem = kv_bytes_per_elem(kv_dtype, cfg.head_dim)
+        spec = AttnSpec(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                        kv_bytes=kv_elem)
+        kv_tok = 2 * cfg.num_kv_heads * cfg.head_dim * kv_elem  # K+V
         attn_layers = (L // cfg.attn_every) if cfg.attn_every else L
     else:  # attention-free (rwkv): state is O(1); no per-token KV
         attn_p = 4 * d * d
@@ -82,6 +91,8 @@ def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
         weight_bytes=2.0 * n_total / tp,
         attn_frac=attn_layers / max(L, 1),
         ragged_backend=ragged_backend,
+        fused_backend=fused_backend,
+        kv_dtype=kv_dtype,
     )
 
 
@@ -136,7 +147,8 @@ def mixed_iter_time(chunks: Sequence, decode_lengths: Sequence[int],
     chunk_toks = sum(int(c) for c, _ in chunks)
     t_linear = 2.0 * prof.params * chunk_toks / prof.peak
     attn_layers = round(prof.num_layers * prof.attn_frac)
-    backend = "ragged" if prof.ragged_backend else "padded"
+    backend = ("fused" if prof.fused_backend
+               else "ragged" if prof.ragged_backend else "padded")
     t_attn = (mixed_iter_time_s(chunks, decode_lengths, prof.attn_spec,
                                 decode_backend=backend)
               * attn_layers if attn_layers else 0.0)
