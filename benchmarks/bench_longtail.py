@@ -12,7 +12,7 @@ shows up directly in a short request's p95 TPOT; chunking removes it.
 """
 from __future__ import annotations
 
-from benchmarks.common import ARCH, CAPACITY, E, row
+from benchmarks.common import ARCH, CAPACITY, E, row, standalone
 from repro.sim.experiment import compare_policies
 
 RATE = 6.0
@@ -36,3 +36,7 @@ def run():
                 tpot_mean=s["tpot_mean"], tpot_p95=s["tpot_p95"],
                 completed=s["completed"]))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("bench_longtail", run)

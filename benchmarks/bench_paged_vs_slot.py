@@ -25,6 +25,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 import numpy as np
 
+try:
+    from benchmarks.common import row, write_artifact
+except ImportError:                     # run as a plain script
+    from common import row, write_artifact
+
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving.engine import Engine
@@ -74,6 +79,12 @@ def main():
     (ms_s, peak_s), (ms_p, peak_p) = results[False], results[True]
     print(f"peak KV bytes: paged/slot = {peak_p/peak_s:.3f}x "
           f"({'OK' if peak_p < peak_s else 'FAIL: paged must pin less'})")
+    write_artifact("paged_vs_slot", {
+        "slot": {"decode_step_ms": ms_s, "peak_kv_bytes": peak_s},
+        "paged": {"decode_step_ms": ms_p, "peak_kv_bytes": peak_p},
+        "peak_ratio_paged_over_slot": peak_p / peak_s,
+    }, rows=[row("paged_vs_slot/slot", ms_s * 1e3, peak_kv_mb=peak_s / 1e6),
+             row("paged_vs_slot/paged", ms_p * 1e3, peak_kv_mb=peak_p / 1e6)])
     assert peak_p < peak_s, "acceptance: paged must pin strictly fewer bytes"
 
 

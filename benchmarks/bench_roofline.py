@@ -6,7 +6,7 @@ from __future__ import annotations
 import json
 import os
 
-from benchmarks.common import row
+from benchmarks.common import row, standalone
 
 
 def run():
@@ -29,3 +29,7 @@ def run():
                        t_coll=r["t_collective"],
                        useful=r["useful_ratio"]))
     return out
+
+
+if __name__ == "__main__":
+    standalone("bench_roofline", run)

@@ -1,0 +1,196 @@
+"""SLO-tiered preemptive scheduler vs FCFS (DESIGN.md §SLO scheduling).
+
+The acceptance experiment for the tiered scheduler, run in BOTH drivers
+of the shared control plane:
+
+  * the discrete-event simulator on the open-loop diurnal+bursty SLO
+    workload (``sim.workload.slo_spec``) at a saturating rate, and
+  * the real-JAX-engine ``MILSServer`` on a deterministic contention
+    trace (batch work holding every seat when interactive work lands).
+
+Asserted on every run (this file is the CI smoke for the subsystem):
+
+  * preemption strictly beats FCFS on interactive goodput-under-SLO in
+    both drivers, and preemptions actually fired;
+  * a park-preempted AND a recompute-preempted request finish with
+    bit-identical tokens to an unpreempted reference run.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_slo_sched
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, standalone
+from repro.sim.experiment import make_policy, run_policy
+from repro.sim.workload import generate_slo, slo_spec
+
+SIM_ARCH = "llama3.2-3b"
+SIM_RATE = 14.0
+SIM_DURATION = 40.0
+SIM_E = 2
+SIM_CAPACITY = 14_000.0
+
+SRV_ARCH = "smollm-360m"
+
+
+def _sim_goodput() -> list:
+    """Saturated sim cluster: preemption on vs off, same trace."""
+    reqs = generate_slo(slo_spec(SIM_RATE, SIM_DURATION, seed=7,
+                                 max_context=8192))
+    rows, results = [], {}
+    for preempt in (False, True):
+        pol = make_policy("cascade", SIM_ARCH, SIM_E)
+        res = run_policy(SIM_ARCH, pol, reqs, SIM_DURATION, E=SIM_E,
+                         capacity_tokens=SIM_CAPACITY, seed=0,
+                         prefill_token_budget=512, preemption=preempt)
+        results[preempt] = res
+        name = "preemptive" if preempt else "fcfs"
+        per = res.slo_summary()
+        ps = res.preemption_stats()
+        for cls in sorted(per):
+            d = per[cls]
+            rows.append(row(f"slo_sched/sim_{name}_{cls}",
+                            0.0, attainment=d["attainment"],
+                            goodput_tok_s=d["goodput_tok_s"],
+                            requests=d["requests"],
+                            preemptions=ps["preemptions"]))
+    g_fcfs = results[False].slo_summary()["interactive"]["goodput_tok_s"]
+    g_pre = results[True].slo_summary()["interactive"]["goodput_tok_s"]
+    n_pre = results[True].preemption_stats()["preemptions"]
+    assert n_pre > 0, "saturated sim run fired no preemptions"
+    assert g_pre > g_fcfs, (
+        f"preemptive interactive goodput {g_pre:.1f} must beat "
+        f"FCFS {g_fcfs:.1f}")
+    rows.append(row("slo_sched/sim_interactive_gain", 0.0,
+                    fcfs=g_fcfs, preemptive=g_pre,
+                    gain=g_pre / max(g_fcfs, 1e-9)))
+    return rows
+
+
+def _build_server(model, params, preemption: bool):
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.serving.server import MILSServer, ServerConfig
+    plan = PipelinePlan([Stage(0.0, float("inf"), 1)], 0.0)
+    cfg = ServerConfig(policy="cascade", refinement="none",
+                       balancing="inter-stage", preemption=preemption,
+                       slo_time_scale=40.0)
+    return MILSServer(model, params, plan, None, cfg,
+                      max_slots=2, max_seq=128, paged=True)
+
+
+def _server_trace(vocab_size: int):
+    from repro.serving.request import ServeRequest
+    rng = np.random.default_rng(3)
+    trace = []
+    for i in range(2):               # batch work grabs every seat at t=0
+        r = ServeRequest(i, rng.integers(0, vocab_size, 16)
+                         .astype(np.int32), 70)
+        r.slo_class = "batch"
+        trace.append((r, 0))
+    for i in range(2):               # interactive lands mid-decode
+        r = ServeRequest(10 + i, rng.integers(0, vocab_size, 12)
+                         .astype(np.int32), 8)
+        r.slo_class = "interactive"
+        trace.append((r, 10))
+    return trace
+
+
+def _server_goodput() -> list:
+    """Real engines: batch holds both seats, interactive arrives later.
+    FCFS serves interactive only after a batch request drains; the
+    preemptive scheduler parks/recomputes a batch victim immediately."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(SRV_ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rows, results = [], {}
+    for preempt in (False, True):
+        srv = _build_server(model, params, preempt)
+        for req, step in _server_trace(cfg.vocab_size):
+            srv.submit_at(req, step)
+        srv.run(max_steps=600)
+        s = srv.summary()
+        results[preempt] = s
+        name = "preemptive" if preempt else "fcfs"
+        rows.append(row(
+            f"slo_sched/server_{name}", 0.0,
+            interactive_goodput=s.get("slo_interactive_goodput_tok_step",
+                                      0.0),
+            interactive_attainment=s.get("slo_interactive_attainment", 0.0),
+            preemptions=s["preemptions"], resumes=s["resumes"]))
+    g_fcfs = results[False].get("slo_interactive_goodput_tok_step", 0.0)
+    g_pre = results[True].get("slo_interactive_goodput_tok_step", 0.0)
+    assert results[True]["preemptions"] > 0, \
+        "server contention trace fired no preemptions"
+    assert g_pre > g_fcfs, (
+        f"server preemptive interactive goodput {g_pre:.4f} must beat "
+        f"FCFS {g_fcfs:.4f}")
+    rows.append(row("slo_sched/server_interactive_gain", 0.0,
+                    fcfs=g_fcfs, preemptive=g_pre))
+    return rows
+
+
+def _bit_identity() -> list:
+    """Park and recompute round-trips reproduce the unpreempted tokens
+    exactly (greedy decode ⇒ any divergence is a correctness bug)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import Engine
+    from repro.serving.request import ServeRequest, State
+
+    cfg = get_config(SRV_ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shapes = [(10, 12), (14, 12), (8, 10)]
+
+    def mkreqs():
+        rng = np.random.default_rng(0)
+        return [ServeRequest(i, rng.integers(0, cfg.vocab_size, p)
+                             .astype(np.int32), n)
+                for i, (p, n) in enumerate(shapes)]
+
+    def drive(eng, reqs, preempt_mode=None):
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(6):
+            eng.step()
+        if preempt_mode is not None:
+            slot = next(s for s, r in enumerate(eng.slots)
+                        if r is not None and r.generated
+                        and not r.prefilling)
+            getattr(eng, preempt_mode)(slot)
+        for _ in range(300):
+            eng.step()
+            eng.allocator.check_invariants()
+            if all(r.state is State.FINISHED for r in reqs):
+                break
+        assert all(r.state is State.FINISHED for r in reqs)
+        return [list(r.generated) for r in reqs]
+
+    def fresh(preemption):
+        return Engine(0, model, params, max_slots=4, max_seq=96,
+                      paged=True, preemption=preemption)
+
+    ref = drive(fresh(False), mkreqs())
+    rows = []
+    for mode in ("_preempt_park", "_preempt_recompute"):
+        eng = fresh(True)
+        got = drive(eng, mkreqs(), preempt_mode=mode)
+        assert got == ref, f"{mode} diverged from the unpreempted run"
+        rows.append(row(f"slo_sched/bit_identity{mode}", 0.0,
+                        identical=1, preemptions=eng.preemptions,
+                        resumes=eng.resumes))
+    return rows
+
+
+def run():
+    return _sim_goodput() + _server_goodput() + _bit_identity()
+
+
+if __name__ == "__main__":
+    standalone("bench_slo_sched", run)

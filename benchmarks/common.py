@@ -78,3 +78,29 @@ def timed(fn: Callable, *args, repeats: int = 3, **kw):
         out = fn(*args, **kw)
     us = (time.perf_counter() - t0) / repeats * 1e6
     return out, us
+
+
+def standalone(name: str, run: Callable[[], List[Dict]]) -> Path:
+    """Run one ``run() -> rows`` benchmark module directly (outside
+    ``benchmarks.run``) with the SAME output contract: the CSV on stdout
+    and ``BENCH_<name>.json`` at the repo root, folded into the summary.
+    Modules call this from their ``__main__`` block so every benchmark is
+    individually runnable and always leaves an artifact behind."""
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    rows = []
+    status = "ok"
+    try:
+        for r in run():
+            rows.append(r)
+            print(f"{r['name']},{r['us_per_call']:.3f},{r['derived']}",
+                  flush=True)
+    except Exception as e:  # noqa: BLE001 — still record the failure
+        status = f"ERROR={type(e).__name__}:{e}"
+        print(f"{name},nan,{status}", flush=True)
+    path = write_artifact(name, {"status": status,
+                                 "wall_s": time.perf_counter() - t0},
+                          rows=rows)
+    if status != "ok":
+        raise SystemExit(1)
+    return path

@@ -1,7 +1,7 @@
 """Paper Figs. 9/10/11: system throughput across request rates."""
 from __future__ import annotations
 
-from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row, standalone
 from repro.sim.experiment import compare_policies
 
 
@@ -18,3 +18,7 @@ def run():
                         x_vs_llumnix=thr["cascade"] / max(thr["llumnix"],
                                                           1e-9)))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig10_throughput", run)

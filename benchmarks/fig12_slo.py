@@ -1,7 +1,7 @@
 """Paper Fig. 12: SLO attainment at Nx the minimum-load SLO."""
 from __future__ import annotations
 
-from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row, standalone
 from repro.configs import get_config
 from repro.sim.costmodel import (decode_iter_time, prefill_time,
                                  profile_from_config)
@@ -30,3 +30,7 @@ def run():
                         x_vs_rr=att["cascade"] / max(att["round-robin"],
                                                      1e-9)))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig12_slo", run)

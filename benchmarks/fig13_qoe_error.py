@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ARCH, row
+from benchmarks.common import ARCH, row, standalone
 from repro.configs import get_config
 from repro.core.qoe import fit_qoe, relative_errors, static_baseline_errors
 from repro.sim.costmodel import profile_from_config
@@ -28,3 +28,7 @@ def run():
                 model_median_err=float(np.median(err)),
                 static_mean_err=float(base.mean()),
                 paper="model 8.9% vs static 64%")]
+
+
+if __name__ == "__main__":
+    standalone("fig13_qoe_error", run)

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row, standalone
 from repro.sim.cluster import CascadePolicy
 from repro.sim.experiment import (chain_plan, fitted_qoe, no_pipeline_plan,
                                   plan_pipeline, run_policy)
@@ -33,3 +33,7 @@ def run():
                         thr_vs_cascade=thr / base[1],
                         completed=f"{len(res.completed)}/{res.num_submitted}"))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig14_layouts", run)

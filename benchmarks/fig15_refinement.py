@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ARCH, CAPACITY, DURATION, E, row
+from benchmarks.common import ARCH, CAPACITY, DURATION, E, row, standalone
 from repro.sim.cluster import CascadePolicy
 from repro.sim.experiment import fitted_qoe, plan_pipeline, run_policy
 from repro.sim.workload import WorkloadSpec, generate
@@ -26,3 +26,7 @@ def run():
         rows.append(row(f"fig15/{mode}", nl * 1e6, norm_latency=nl,
                         throughput=thr, nl_vs_adaptive=nl / base[0]))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig15_refinement", run)

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ARCH, CAPACITY, DURATION, row
+from benchmarks.common import ARCH, CAPACITY, DURATION, row, standalone
 from repro.core.partition import PipelinePlan, Stage
 from repro.sim.cluster import CascadePolicy
 from repro.sim.experiment import fitted_qoe, run_policy
@@ -59,3 +59,7 @@ def run():
                     / cvs["inter-stage-only"],
                     paper="40% vs inter-stage, 47% vs rr"))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig16_bidask", run)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, timed
+from benchmarks.common import row, standalone, timed
 from repro.kernels.cost import AttnSpec, decode_attn_time_s, heterogeneity_tax
 
 
@@ -48,3 +48,7 @@ def run():
     rows.append(row("fig2/kernel_interpret", us_pad, padded_us=us_pad,
                     ragged_us=us_rag, note="toy-scale structural check"))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig2_heterogeneity", run)

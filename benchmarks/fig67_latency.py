@@ -8,7 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ARCH, CAPACITY, DURATION, E, HEAVY_RATE,
-                               LIGHT_RATE, row)
+                               LIGHT_RATE, row, standalone)
 from repro.sim.experiment import compare_policies
 
 
@@ -30,3 +30,7 @@ def run():
                             / max(base.summary()["tpot_mean"], 1e-12)),
                 completed=s["completed"]))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig67_latency", run)

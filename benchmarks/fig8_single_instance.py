@@ -2,7 +2,7 @@
 adds no overhead at E=1 (matches the engine baseline)."""
 from __future__ import annotations
 
-from benchmarks.common import ARCH, CAPACITY, row
+from benchmarks.common import ARCH, CAPACITY, row, standalone
 from repro.core.partition import PipelinePlan, Stage
 from repro.sim.cluster import CascadePolicy, RoundRobinPolicy
 from repro.sim.experiment import fitted_qoe, run_policy
@@ -22,3 +22,7 @@ def run():
                 engine_tpot=s_rr["tpot_mean"],
                 overhead=(s_ca["tpot_mean"] / max(s_rr["tpot_mean"], 1e-12)
                           - 1.0))]
+
+
+if __name__ == "__main__":
+    standalone("fig8_single_instance", run)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ARCH, DURATION, row
+from benchmarks.common import ARCH, DURATION, row, standalone
 from repro.sim.experiment import compare_policies
 
 
@@ -56,3 +56,7 @@ def run():
                                     / max(rr.summary()["tpot_mean"], 1e-9)),
                         instances=E))
     return rows
+
+
+if __name__ == "__main__":
+    standalone("fig9_11_testbeds_tp", run)

@@ -33,6 +33,8 @@ MODULES = [
                               # chunked vs monolithic sim iterations
     "bench_prefix_cache",     # §Prefix cache: cold vs warm TTFT +
                               # prefill work skipped; shared-prefix sim
+    "bench_slo_sched",        # §SLO scheduling: preemptive vs FCFS
+                              # goodput-under-SLO + bit-identical resume
 ]
 
 

@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, standalone
 from repro.core.partition import full_dp, naive_cost_estimate, two_phase
 from repro.core.qoe import QoEModel
 from repro.core.workload_stats import build_stats, exp_bucket_edges
@@ -35,3 +35,7 @@ def run():
                 speedup=naive_s / max(t_fast, 1e-9),
                 quality_gap=(plan_fast.quality - plan_full.quality)
                 / max(plan_full.quality, 1e-9))]
+
+
+if __name__ == "__main__":
+    standalone("tab_partition_speed", run)

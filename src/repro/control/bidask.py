@@ -38,6 +38,10 @@ class MigRequest:
     src: int
     priority: float = 0.0        # sender load at ask time
     dst: Optional[int] = None
+    # SLO class priority (repro.sched.slo: 0=interactive .. 2=batch).
+    # Receivers pull lower values first so an interactive migration is
+    # never parked behind a batch transfer of higher sender load.
+    slo_priority: int = 1
 
 
 def select_receiver(bids: Sequence[Bid]) -> Optional[int]:
@@ -122,13 +126,13 @@ class ReceiverState:
     def __init__(self, instance_id: int, throughput: float = 1.0):
         self.instance_id = instance_id
         self.throughput = max(throughput, 1e-9)
-        self._heap: List[Tuple[float, int, int, MigRequest]] = []
+        self._heap: List[Tuple[int, float, int, int, MigRequest]] = []
         self._tie = itertools.count()
         self.fails: Dict[int, int] = {}
         self.waiting_for: Optional[int] = None   # starvation: block on req
 
     def buffered_tokens(self) -> float:
-        return float(sum(item[3].seq_len for item in self._heap))
+        return float(sum(item[-1].seq_len for item in self._heap))
 
     def earliest_start(self) -> float:
         """Bid payload: buffered work / measured throughput."""
@@ -136,8 +140,8 @@ class ReceiverState:
 
     def win(self, req: MigRequest) -> None:
         req.dst = self.instance_id
-        heapq.heappush(self._heap, (-req.priority, req.req_id,
-                                    next(self._tie), req))
+        heapq.heappush(self._heap, (req.slo_priority, -req.priority,
+                                    req.req_id, next(self._tie), req))
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -157,7 +161,7 @@ class ReceiverState:
         chosen: Optional[MigRequest] = None
         while self._heap:
             item = heapq.heappop(self._heap)
-            req = item[3]
+            req = item[-1]
             if not sender_busy(req.src):
                 chosen = req
                 break
@@ -175,13 +179,13 @@ class ReceiverState:
     def take(self, req_id: int) -> Optional[MigRequest]:
         """Remove a specific request (starvation hand-off arriving)."""
         for i, item in enumerate(self._heap):
-            if item[3].req_id == req_id:
+            if item[-1].req_id == req_id:
                 self._heap.pop(i)
                 heapq.heapify(self._heap)
                 if self.waiting_for == req_id:
                     self.waiting_for = None
                 self.fails.pop(req_id, None)
-                return item[3]
+                return item[-1]
         return None
 
     def complete(self, req_id: int) -> None:

@@ -39,6 +39,7 @@ from repro.control.protocol import (MIG_COMPLETED, MIG_FAILED, MIG_STARTED,
 from repro.control.refinement import (BoundaryRefiner, memory_based_split,
                                       quantity_based_split)
 from repro.core.partition import PipelinePlan
+from repro.sched.slo import priority_of
 
 POLICIES = ("cascade", "round-robin", "least-loaded")
 REFINEMENTS = ("adaptive", "quantity", "memory", "none")   # Fig. 15
@@ -122,7 +123,8 @@ class ControlPlane:
 
     def route(self, req_id: int, length: float, *,
               cached_tokens: float = 0.0,
-              prefix_digest: Optional[int] = None) -> int:
+              prefix_digest: Optional[int] = None,
+              slo_class: str = "standard") -> int:
         """Pure placement decision for one arrival.
 
         Cache-aware routing (DESIGN.md §Prefix cache): the length that
@@ -132,7 +134,13 @@ class ControlPlane:
         still cover true length). Within the stage, dispatch tie-breaks
         toward instances advertising the request's prefix-head digest, so
         repeat prefixes land where their blocks already live; the stage RR
-        counter advances either way, keeping placement deterministic."""
+        counter advances either way, keeping placement deterministic.
+
+        SLO-aware dispatch (DESIGN.md §SLO scheduling): interactive
+        arrivals pick the least-queued instance of the candidate set —
+        their TTFT deadline cannot absorb a deep queue RR might assign —
+        while standard/batch keep the RR rotation that spreads prefix
+        diversity."""
         if self.cfg.policy == "round-robin":
             c = self._rr.get(_RR_GLOBAL, 0)
             self._rr[_RR_GLOBAL] = c + 1
@@ -149,16 +157,21 @@ class ControlPlane:
                         if prefix_digest in self.instances[i].prefix_digests()]
                 if warm:
                     ids = warm
-            iid = ids[c % len(ids)]
+            if priority_of(slo_class) == 0 and len(ids) > 1:
+                iid = min(ids,
+                          key=lambda i: (self.instances[i].queued_tokens(), i))
+            else:
+                iid = ids[c % len(ids)]
         self.decisions.append(("route", req_id, iid))
         return iid
 
     def submit(self, ref: Any, req_id: int, length: float, *,
                cached_tokens: float = 0.0,
-               prefix_digest: Optional[int] = None) -> int:
+               prefix_digest: Optional[int] = None,
+               slo_class: str = "standard") -> int:
         """Route an arrival and hand it to the backend."""
         iid = self.route(req_id, length, cached_tokens=cached_tokens,
-                         prefix_digest=prefix_digest)
+                         prefix_digest=prefix_digest, slo_class=slo_class)
         self.ops.dispatch(ref, iid)
         return iid
 
@@ -192,7 +205,8 @@ class ControlPlane:
     def _offer(self, src_id: int, rv: ReqView,
                candidate_ids: Sequence[int]) -> None:
         sender = self.senders[src_id]
-        mig = MigRequest(rv.req_id, int(rv.length), src_id)
+        mig = MigRequest(rv.req_id, int(rv.length), src_id,
+                         slo_priority=priority_of(rv.slo_class))
         sender.offer(mig)
         self._pending[rv.req_id] = (rv.ref, src_id)
         cands = [self.instances[i] for i in candidate_ids
@@ -345,7 +359,14 @@ class ControlPlane:
                          if rv.req_id not in self._pending]
                 if not cands:
                     continue
-                victim = max(cands, key=lambda rv: rv.length)  # memory-aware
+                # memory-aware AND SLO-aware: among the migratable
+                # requests, move the largest KV footprint of the LOWEST
+                # service class first (batch before standard before
+                # interactive) — rebalancing should never add transfer
+                # latency to a tight-deadline request while batch work is
+                # available to move
+                victim = max(cands, key=lambda rv: (priority_of(rv.slo_class),
+                                                    rv.length))
                 self._offer(i, victim, [j for j in ids if j != i])
 
     # ---- boundary refinement (§4.3, Fig. 15) --------------------------------

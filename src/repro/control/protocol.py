@@ -51,6 +51,11 @@ class ReqView:
     # queue accounting; migration reservations still use true length,
     # because a migrated shared prefix re-imports as private.
     cached_tokens: float = 0.0
+    # SLO service class (repro.sched.slo.SLO_CLASSES). Routing prefers
+    # least-queued instances for interactive arrivals, and bid-ask victim
+    # selection / receiver queues order by class priority so interactive
+    # work is never parked behind batch transfers.
+    slo_class: str = "standard"
 
     @property
     def prefill_done(self) -> bool:

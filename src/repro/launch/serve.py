@@ -10,6 +10,7 @@ the shared control plane (`repro.control`).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -18,6 +19,7 @@ from repro.configs import get_config
 from repro.core.partition import PipelinePlan, Stage
 from repro.core.qoe import QoEModel
 from repro.models import build_model
+from repro.sched import assign_classes, parse_class_mix
 from repro.serving.server import (MILSServer, ServerConfig,
                                   requests_from_trace)
 from repro.sim.workload import WorkloadSpec, generate
@@ -77,6 +79,22 @@ def main() -> None:
                          "legacy allocator path")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="workload arrivals/s, replayed at 1 step/s")
+    ap.add_argument("--slo-class-mix", default=None,
+                    help="SLO service-class mix for the replayed trace, "
+                         "e.g. 'interactive:0.5,standard:0.3,batch:0.2' "
+                         "(classes: repro.sched.SLO_CLASSES; default: "
+                         "all standard)")
+    ap.add_argument("--preemption", dest="preemption",
+                    action="store_true", default=True,
+                    help="SLO-tiered preemptive scheduling (DESIGN.md "
+                         "§SLO scheduling; the default)")
+    ap.add_argument("--no-preemption", dest="preemption",
+                    action="store_false",
+                    help="disable preemption — bit-parity FCFS queues")
+    ap.add_argument("--slo-scale", type=float, default=1.0,
+                    help="SLO-scale sweep knob (paper §6.4)")
+    ap.add_argument("--slo-time-scale", type=float, default=1.0,
+                    help="engine steps per abstract SLO second")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -88,7 +106,10 @@ def main() -> None:
     srv = MILSServer(model, params, plan, qoe,
                      ServerConfig(policy=args.policy,
                                   refinement=args.refinement,
-                                  balancing=args.balancing, seed=args.seed),
+                                  balancing=args.balancing, seed=args.seed,
+                                  preemption=args.preemption,
+                                  slo_scale=args.slo_scale,
+                                  slo_time_scale=args.slo_time_scale),
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,
                      kv_dtype=args.kv_dtype,
@@ -103,6 +124,12 @@ def main() -> None:
                         duration=args.requests / args.arrival_rate,
                         seed=args.seed)
     trace = generate(spec)[:args.requests]
+    if args.slo_class_mix:
+        mix = parse_class_mix(args.slo_class_mix)
+        classes = assign_classes(len(trace),
+                                 mix, np.random.default_rng(args.seed))
+        trace = [dataclasses.replace(r, slo_class=c)
+                 for r, c in zip(trace, classes)]
     for req, step in requests_from_trace(trace, vocab_size=cfg.vocab_size,
                                          max_seq=args.max_seq,
                                          seed=args.seed):

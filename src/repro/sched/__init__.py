@@ -1,0 +1,20 @@
+"""SLO-tiered scheduling: per-request service classes, deadline- and
+size-aware queue ordering, and the park-vs-recompute preemption policy
+(DESIGN.md §SLO scheduling & preemption).
+
+The package is deliberately backend-free: `repro.serving.engine.Engine`
+and `repro.sim.instance.Instance` both order their waiting queues with
+`queue_key`/`insert_sorted` and price preemption with
+`park_or_recompute`, so the sim remains a faithful mirror of the real
+engine's scheduling decisions.
+"""
+from .slo import (SLO_CLASSES, DEFAULT_CLASS, SLOSpec, slo_of, priority_of,
+                  queue_key, insert_sorted, parse_class_mix, assign_classes)
+from .policy import (PARK_RESTORE_COST_S, recompute_cost_s,
+                     park_or_recompute)
+
+__all__ = [
+    "SLO_CLASSES", "DEFAULT_CLASS", "SLOSpec", "slo_of", "priority_of",
+    "queue_key", "insert_sorted", "parse_class_mix", "assign_classes",
+    "PARK_RESTORE_COST_S", "recompute_cost_s", "park_or_recompute",
+]

@@ -1,0 +1,63 @@
+"""Park-vs-recompute: what to do with a preempted decode's KV.
+
+Two exits for a victim (DESIGN.md §SLO scheduling & preemption):
+
+* **park** — keep its KV blocks and allocator reservation, free only
+  the batch slot. Zero restore cost beyond re-entering the batch (one
+  extra kernel-launch epsilon), but frees no memory.
+* **recompute** — release everything and re-enqueue the request with a
+  resume prefix (prompt + generated-so-far); the chunked-prefill path
+  rebuilds the KV. Frees ``victim_blocks`` immediately at the price of
+  re-running prefill attention over ``kv_tokens`` rows.
+
+The decision is priced by the same `kernels/cost.py` terms the engine
+and sim already trust: ``recompute_cost_s`` sums
+`prefill_chunk_attn_time_s` over the resume chunks, and parking's
+restore price is one extra launch (`LAUNCH_OVERHEAD_S`). When the
+preemption must actually free blocks (memory pressure, not just a slot
+shortage) parking is useless and recompute is forced.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.kernels.cost import (AttnSpec, LAUNCH_OVERHEAD_S,
+                                prefill_chunk_attn_time_s)
+
+# Restoring a parked request costs one extra kernel launch worth of
+# overhead (its blocks never moved); used as the recompute break-even.
+PARK_RESTORE_COST_S = LAUNCH_OVERHEAD_S
+
+
+def recompute_cost_s(kv_tokens: int, spec: AttnSpec,
+                     chunk: int = 256) -> float:
+    """Wall time to rebuild ``kv_tokens`` KV rows via chunked prefill."""
+    kv_tokens = int(kv_tokens)
+    if kv_tokens <= 0:
+        return 0.0
+    chunk = max(int(chunk), 1)
+    t = 0.0
+    for ctx in range(0, kv_tokens, chunk):
+        t += prefill_chunk_attn_time_s(min(chunk, kv_tokens - ctx), ctx, spec)
+    return t + math.ceil(kv_tokens / chunk) * LAUNCH_OVERHEAD_S
+
+
+def park_or_recompute(*, must_free_blocks: int, kv_tokens: int,
+                      spec: Optional[AttnSpec] = None,
+                      chunk: int = 256) -> str:
+    """Pick the victim's exit: ``"park"`` or ``"recompute"``.
+
+    ``must_free_blocks > 0`` means the preemptor is blocked on memory,
+    not just a slot — parking (which pins the victim's blocks) cannot
+    help, so recompute is forced. Otherwise park unless the cost model
+    says rebuilding the victim's KV is at least as cheap as the parked
+    restore (true only for tiny contexts, where recompute also returns
+    memory to the pool for free).
+    """
+    if must_free_blocks > 0:
+        return "recompute"
+    if spec is not None and (recompute_cost_s(kv_tokens, spec, chunk)
+                             <= PARK_RESTORE_COST_S):
+        return "recompute"
+    return "park"

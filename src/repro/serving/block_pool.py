@@ -100,6 +100,12 @@ class BlockAllocator:
         # least-recently-released first)
         self._reclaimable: Dict[int, None] = {}
         self._cached_live = 0        # cached AND referenced (implicit resv)
+        # parked blocks (DESIGN.md §SLO scheduling & preemption): per-block
+        # count of park-preempted requests pinning it. A parked block keeps
+        # its references and its covering reservation — parking frees a
+        # batch slot, never memory — so it must not be reclaimed or freed
+        # while any parker holds it.
+        self._parked: Dict[int, int] = {}
         # telemetry
         self.cache_evictions = 0     # cached blocks reclaimed under pressure
 
@@ -133,6 +139,16 @@ class BlockAllocator:
 
     def ref(self, block_id: int) -> int:
         return self._refs[block_id]
+
+    @property
+    def parked_blocks(self) -> int:
+        """Blocks pinned by at least one park-preempted request."""
+        return len(self._parked)
+
+    @property
+    def headroom_blocks(self) -> int:
+        """Blocks an admission gate could still reserve."""
+        return self.num_blocks - self._reserved - self._cached_live
 
     # ---- admission reservation ----------------------------------------------
     def can_reserve(self, n_blocks: int) -> bool:
@@ -202,6 +218,8 @@ class BlockAllocator:
             assert 0 <= b < self.num_blocks and b not in self._free_set, \
                 f"double free / bad block id {b}"
             assert self._refs[b] > 0, f"double free / bad block id {b}"
+            assert self._refs[b] - 1 >= self._parked.get(b, 0), \
+                f"release would strand parked block {b}"
             self._refs[b] -= 1
             cached = b in self._hash_of
             assert cached or self._refs[b] == 0, \
@@ -234,6 +252,31 @@ class BlockAllocator:
                 del self._reclaimable[b]
                 self._cached_live += 1
             self._refs[b] += 1
+
+    # ---- preemption park/unpark ---------------------------------------------
+    def park(self, block_ids: Sequence[int]) -> None:
+        """Pin live blocks on behalf of a park-preempted request. The
+        parker KEEPS its references and its reservation — parking only
+        records that the blocks must survive until ``unpark``. A shared
+        block may be parked by several preempted sharers at once."""
+        for b in block_ids:
+            assert self._refs[b] > 0, f"park of unreferenced block {b}"
+            assert b not in self._free_set
+            self._parked[b] = self._parked.get(b, 0) + 1
+            assert self._refs[b] >= self._parked[b], \
+                f"parked count exceeds refs on block {b}"
+
+    def unpark(self, block_ids: Sequence[int]) -> None:
+        """Drop one parker from each block (resume or recompute-preempt of
+        a parked request). References are untouched — the caller still
+        owns them and releases them through the normal paths."""
+        for b in block_ids:
+            n = self._parked.get(b, 0)
+            assert n > 0, f"unpark of unparked block {b}"
+            if n == 1:
+                del self._parked[b]
+            else:
+                self._parked[b] = n - 1
 
     # ---- prefix index --------------------------------------------------------
     def publish(self, block_id: int, digest: int, *, head: bool = False) -> bool:
@@ -295,3 +338,7 @@ class BlockAllocator:
                                              if self._refs[b] > 0)
         assert self._reserved + self._cached_live <= self.num_blocks
         assert {h: b for b, h in self._hash_of.items()} == self._index
+        for b, n in self._parked.items():
+            assert n > 0 and self._refs[b] >= n, \
+                f"parked block {b} under-referenced"
+            assert b not in self._free_set and b not in self._reclaimable

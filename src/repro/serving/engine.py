@@ -60,6 +60,8 @@ from repro.kernels.cost import pow2_bucket
 from repro.models.attention import (QuantKVCache, dequantize_piece,
                                     quantize_piece, resolve_paged_backend)
 from repro.models.model import Model
+from repro.sched.policy import park_or_recompute
+from repro.sched.slo import insert_sorted, priority_of, queue_key
 from repro.serving.block_pool import (BlockAllocator, blocks_for, chain_hash,
                                       prompt_chain)
 from repro.serving.request import ServeRequest, State
@@ -110,6 +112,18 @@ def _pow2_floor(n: int) -> int:
     return 1 << (n.bit_length() - 1)
 
 
+@dataclasses.dataclass
+class _Parked:
+    """A park-preempted request: off its batch slot, KV blocks (and the
+    covering reservation) intact. ``_unpark`` restores it into any free
+    slot with bit-identical continuation (DESIGN.md §SLO scheduling)."""
+    req: ServeRequest
+    table: List[int]
+    shared: int          # shared prefix-head blocks (released owned=False)
+    rblocks: int         # reservation units the request still holds
+    slot_len: int
+
+
 class Engine:
     def __init__(self, engine_id: int, model: Model, params, *,
                  max_slots: int = 8, max_seq: int = 512,
@@ -121,7 +135,9 @@ class Engine:
                  prefill_token_budget: Optional[int] = None,
                  chunked_prefill: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
-                 kv_dtype: str = "bf16"):
+                 kv_dtype: str = "bf16",
+                 preemption: Optional[bool] = None,
+                 slo_time_scale: float = 1.0):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
         assert kv_dtype in ("bf16", "int8"), kv_dtype
@@ -237,6 +253,19 @@ class Engine:
         self.slots: List[Optional[ServeRequest]] = [None] * max_slots
         self.slot_reserved = np.zeros(max_slots, np.int64)  # worst-case tokens
         self.waiting: Deque[ServeRequest] = deque()
+        # SLO-tiered preemptive scheduling (DESIGN.md §SLO scheduling &
+        # preemption): off by default on direct construction — the
+        # bit-parity FCFS legacy path. When on, the waiting queue is kept
+        # sorted by repro.sched.slo.queue_key and a blocked higher-class
+        # request may park (slot shortage) or recompute-preempt (memory
+        # shortage) the lowest-class resident decode.
+        self.slo_sched = bool(preemption)
+        self.slo_time_scale = float(slo_time_scale)
+        self.parked: List[_Parked] = []
+        self._seq = 0                # submission tie-break for queue_key
+        self.preemptions = 0         # victim pauses (park + recompute)
+        self.preempt_recomputes = 0  # victims whose KV was dropped
+        self.resumes = 0             # park restores + recompute completions
         self.steps = 0
         self.tokens_out = 0
         self.peak_kv_bytes = 0.0
@@ -284,8 +313,8 @@ class Engine:
         up in ``used_tokens`` — one token never counts twice, and a warm
         30K prompt whose first 28K tokens are resident queues as the
         short request it effectively is (DESIGN.md §Prefix cache)."""
-        q = sum(len(r.prompt) - r.cached_tokens for r in self.waiting)
-        q += sum(len(r.prompt) - r.ctx_done
+        q = sum(r.prefill_target_len - r.cached_tokens for r in self.waiting)
+        q += sum(r.prefill_target_len - r.ctx_done
                  for r in self.active() if r.prefilling)
         return int(q)
 
@@ -380,7 +409,14 @@ class Engine:
         # (refreshed authoritatively at admission)
         req.cached_tokens = (len(self._cached_chain(req)) * self.block_size
                              if self.paged and self.prefix_cache else 0)
-        self.waiting.append(req)
+        if self.slo_sched:
+            self._seq += 1
+            req.sched_key = queue_key(req.slo_class, req.arrival_step,
+                                      self._worst_tokens(req), self._seq,
+                                      time_scale=self.slo_time_scale)
+            insert_sorted(self.waiting, req)
+        else:
+            self.waiting.append(req)
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
@@ -427,6 +463,8 @@ class Engine:
         engine are failed (rejected=True) instead of wedging the queue —
         matching sim.Instance's documented semantics."""
         admitted = []
+        if self.slo_sched:
+            self._resume_ready()
         while self.waiting:
             req = self.waiting[0]
             if len(req.prompt) + 1 > self.max_seq:
@@ -438,11 +476,15 @@ class Engine:
                 admitted.append(req)
                 continue
             if not self.can_accept(req):
+                if self.slo_sched and self._preempt_for(req):
+                    continue
                 break
             slot = self._free_slot()
             self.waiting.popleft()
             self._prefill_into_slot(req, slot)
             admitted.append(req)
+        if self.slo_sched:
+            self._resume_ready()
         return admitted
 
     def _reserve(self, req: ServeRequest, slot: int,
@@ -583,13 +625,15 @@ class Engine:
         bookkeeping, no device work. Returns (rejected, plan) where plan
         is [(slot, chunk_len)] under the prefill token budget."""
         rejected: List[ServeRequest] = []
+        if self.slo_sched:
+            self._resume_ready()
         budget = self.prefill_token_budget
         plan: List[Tuple[int, int]] = []            # (slot, chunk_len)
         for slot in list(self._prefill_order):      # oldest admitted first
             if budget <= 0:
                 break
             req = self.slots[slot]
-            clen = min(len(req.prompt) - req.ctx_done, budget)
+            clen = min(req.prefill_target_len - req.ctx_done, budget)
             plan.append((slot, clen))
             budget -= clen
         while self.waiting and budget > 0:
@@ -603,6 +647,8 @@ class Engine:
                 rejected.append(req)
                 continue
             if not self.can_accept(req):
+                if self.slo_sched and self._preempt_for(req):
+                    continue
                 break
             slot = self._free_slot()
             self.waiting.popleft()
@@ -626,9 +672,11 @@ class Engine:
             self.slots[slot] = req
             self.slot_len[slot] = req.ctx_done
             self._prefill_order.append(slot)
-            clen = min(len(req.prompt) - req.ctx_done, budget)
+            clen = min(req.prefill_target_len - req.ctx_done, budget)
             plan.append((slot, clen))
             budget -= clen
+        if self.slo_sched:
+            self._resume_ready()
         return rejected, plan
 
     def _prepare_chunk_arrays(self, plan: List[Tuple[int, int]]):
@@ -662,7 +710,11 @@ class Engine:
         for j, (slot, clen) in enumerate(plan):
             req = self.slots[slot]
             ctx = req.ctx_done
-            toks[j, :clen] = req.prompt[ctx:ctx + clen]
+            # recompute-preempted requests rebuild KV for the resume
+            # prefix (prompt + generated-so-far) instead of the prompt
+            src = (req.resume_tokens if req.resume_tokens is not None
+                   else req.prompt)
+            toks[j, :clen] = src[ctx:ctx + clen]
             table = self.block_tables[slot]
             bt[j, :len(table)] = table
             ctxs[j] = ctx
@@ -682,10 +734,17 @@ class Engine:
         finishes; token VALUES are unaffected."""
         for j, (slot, clen) in enumerate(plan):
             req = self.slots[slot]
-            T = len(req.prompt)
+            T = req.prefill_target_len
             req.ctx_done += clen
             self.slot_len[slot] = req.ctx_done
             if req.ctx_done < T:
+                continue
+            if req.prefill_target is not None:
+                # recompute resume complete: rows 0..T-1 rebuilt, decoding
+                # continues from generated[-1] at position T next decode.
+                # The chunk's final-position logits reproduce that token's
+                # argmax — discarded, no new sample, no re-publish.
+                self._finish_resume(req, slot, T)
                 continue
             # final chunk: the first token exists; the finished prompt's
             # full blocks become shareable for every later arrival
@@ -710,6 +769,186 @@ class Engine:
             else:
                 req.generated.append(int(d2h(tok_dev)))
             completed.append(req)
+
+    # ---- SLO preemption (DESIGN.md §SLO scheduling & preemption) -------------
+    def _victim_slots(self, pr: int) -> List[int]:
+        """Preemptable slots for a priority-``pr`` preemptor: strictly
+        lower class (so uniform-class traffic never preempts and cannot
+        thrash), fully prefilled, with >= 1 synced generated token (a
+        device-path request whose first token is still in-flight has no
+        host-visible continuation point yet)."""
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and not r.prefilling and r.generated
+                and priority_of(r.slo_class) > pr]
+
+    def _mem_shortfall(self, req: ServeRequest) -> int:
+        """Blocks the allocator is short of admitting ``req`` (<= 0 means
+        the blocker is a slot, not memory)."""
+        if not self.paged:
+            return 0
+        need = blocks_for(self._worst_tokens(req), self.block_size)
+        if req.state is not State.RUNNING:
+            chain = self._cached_chain(req)
+            need += self.allocator.revival_cost(chain) - len(chain)
+        return need - self.allocator.headroom_blocks
+
+    def _preempt_for(self, req: ServeRequest) -> bool:
+        """Make room for a blocked higher-class request by preempting the
+        lowest-class, largest resident victim: park it (slot shortage —
+        blocks and reservation stay put) or drop-and-recompute its KV
+        (memory shortage — parking frees nothing). Returns True if a
+        victim was preempted; the caller re-checks admission."""
+        if not self.paged:
+            return False        # a monolithic slot IS its memory: no park
+        pr = priority_of(req.slo_class)
+        short = self._mem_shortfall(req)
+        cands = self._victim_slots(pr)
+        if not cands:
+            # memory may be pinned only by parked lower-class requests:
+            # recompute-preempt the largest of those instead
+            return short > 0 and self._preempt_parked(pr)
+        slot = max(cands, key=lambda i: (
+            priority_of(self.slots[i].slo_class), len(self.block_tables[i])))
+        mode = park_or_recompute(must_free_blocks=max(short, 0),
+                                 kv_tokens=int(self.slot_len[slot]) - 1)
+        if mode == "recompute":
+            if not self.chunked_prefill:
+                return False    # nowhere to rebuild the KV from
+            self._preempt_recompute(slot)
+        else:
+            self._preempt_park(slot)
+        return True
+
+    def _preempt_park(self, slot: int) -> None:
+        """Pause a resident decode keeping its KV: blocks pin via
+        ``BlockAllocator.park`` and the reservation stays, so resume is a
+        pure bookkeeping restore — bit-identical continuation."""
+        req = self.slots[slot]
+        table = self.block_tables[slot]
+        self.allocator.park(table)
+        self._seq += 1
+        # size 0: a parked request outranks an equal-deadline waiting one
+        # (its restore is free; re-admitting the other is not)
+        req.sched_key = queue_key(req.slo_class, req.arrival_step, 0.0,
+                                  self._seq, time_scale=self.slo_time_scale)
+        self.parked.append(_Parked(req, table, self._slot_shared[slot],
+                                   self._slot_rblocks[slot],
+                                   int(self.slot_len[slot])))
+        self._slot_shared[slot] = 0
+        self._slot_rblocks[slot] = 0
+        self.block_tables[slot] = []
+        if self.device_resident:
+            self._dev_clear_slot(slot)
+        self.slots[slot] = None
+        self.slot_len[slot] = 0
+        self.slot_reserved[slot] = 0
+        req.slot = None
+        req.state = State.PREEMPTED
+        req.preemptions += 1
+        self.preemptions += 1
+
+    def _preempt_recompute(self, slot: int) -> None:
+        """Drop a resident decode's KV entirely (blocks + reservation) and
+        re-enqueue it to rebuild via chunked prefill over its resume
+        prefix — the memory-pressure exit."""
+        req = self.slots[slot]
+        written = int(self.slot_len[slot]) - 1
+        self._release(slot)
+        self._requeue_recompute(req, written)
+
+    def _preempt_parked(self, pr: int) -> bool:
+        """Recompute-preempt the largest parked request of a class below
+        ``pr``: the only way to free memory held by parked victims."""
+        if not self.chunked_prefill:
+            return False
+        cands = [p for p in self.parked if priority_of(p.req.slo_class) > pr]
+        if not cands:
+            return False
+        rec = max(cands, key=lambda p: (priority_of(p.req.slo_class),
+                                        len(p.table)))
+        self.parked.remove(rec)
+        self.allocator.unpark(rec.table)
+        if rec.shared:
+            self.allocator.release(rec.table[:rec.shared], owned=False)
+            self.allocator.release(rec.table[rec.shared:], owned=True)
+        else:
+            self.allocator.release(rec.table, owned=True)
+        self.allocator.unreserve(rec.rblocks)
+        self._requeue_recompute(rec.req, rec.slot_len - 1)
+        return True
+
+    def _requeue_recompute(self, req: ServeRequest, written: int) -> None:
+        """Re-enqueue a preempted decode as a resume job: prefill must
+        rebuild ``written`` rows (= prompt + generated[:-1]); the last
+        sampled token then decodes at position ``written`` exactly as it
+        would have unpreempted."""
+        req.prefill_target = written
+        req.resume_tokens = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.generated[:-1], np.int32)])
+        assert len(req.resume_tokens) == written
+        req.ctx_done = 0
+        req.cached_tokens = 0
+        req.slot = None
+        req.state = State.WAITING
+        req.preemptions += 1
+        self.preemptions += 1
+        self.preempt_recomputes += 1
+        self._seq += 1
+        req.sched_key = queue_key(req.slo_class, req.arrival_step,
+                                  self._worst_tokens(req), self._seq,
+                                  time_scale=self.slo_time_scale)
+        insert_sorted(self.waiting, req)
+
+    def _resume_ready(self) -> None:
+        """Restore parked requests into free slots — unless a waiting
+        request outranks the best parked one (preemption must not invert
+        the queue order it enforced)."""
+        while self.parked:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            rec = min(self.parked, key=lambda p: p.req.sched_key)
+            if self.waiting and self.waiting[0].sched_key < rec.req.sched_key:
+                return
+            self.parked.remove(rec)
+            self._unpark(rec, slot)
+
+    def _unpark(self, rec: _Parked, slot: int) -> None:
+        req = rec.req
+        self.allocator.unpark(rec.table)
+        self.block_tables[slot] = rec.table
+        self._slot_shared[slot] = rec.shared
+        self._slot_rblocks[slot] = rec.rblocks
+        self.slots[slot] = req
+        self.slot_len[slot] = rec.slot_len
+        self.slot_reserved[slot] = self._worst_tokens(req)
+        req.slot = slot
+        req.state = State.RUNNING
+        self.resumes += 1
+        if self.device_resident:
+            self._ensure_nbt_cap(len(rec.table))
+            self._dev_set_table(slot, rec.table)
+            self._dev_len = self._dev_len.at[slot].set(rec.slot_len)
+            self._dev_tok = self._dev_tok.at[slot].set(int(req.generated[-1]))
+
+    def _finish_resume(self, req: ServeRequest, slot: int, T: int) -> None:
+        """A recompute resume's last chunk landed: rows 0..T-1 are back;
+        re-arm decode so ``generated[-1]`` writes row T next step. No
+        token is sampled and nothing is re-published — the continuation
+        is the original request's, bit for bit."""
+        self._prefill_order.remove(slot)
+        req.prefill_target = None
+        req.resume_tokens = None
+        req.ctx_done = len(req.prompt)
+        self.slot_len[slot] = T + 1
+        self.resumes += 1
+        if self.device_resident:
+            table = self.block_tables[slot]
+            self._ensure_nbt_cap(len(table))
+            self._dev_set_table(slot, table)
+            self._dev_len = self._dev_len.at[slot].set(T + 1)
+            self._dev_tok = self._dev_tok.at[slot].set(int(req.generated[-1]))
 
     # ---- one continuous-batching iteration ----------------------------------
     def step(self, burst: int = 1) -> List[ServeRequest]:
@@ -941,7 +1180,8 @@ class Engine:
             # prompt mid-chunked-prefill) every step is an admission /
             # chunk opportunity, so stay at h=1 — this is also what caps a
             # decode request's inter-token gap at ONE mixed iteration
-            cap = 1 if (self.waiting or self._prefill_order) else burst
+            cap = 1 if (self.waiting or self._prefill_order
+                        or self.parked) else burst
             h = max(1, min([cap] + [_until_finish(i, r) for i, r in live]))
             h = _pow2_floor(h)
             # pre-grow block tables to cover every write of the burst

@@ -12,6 +12,7 @@ class State(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
     MIGRATING = "migrating"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -51,14 +52,34 @@ class ServeRequest:
         default=None, repr=False, compare=False)
     # per-engine token counts (load-balance accounting, Fig. 16)
     tokens_by_engine: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # --- SLO scheduling & preemption (DESIGN.md §SLO scheduling) ---
+    # service class (repro.sched.slo.SLO_CLASSES; unknown -> standard)
+    slo_class: str = "standard"
+    # recompute-preemption resume state: when set, prefill rebuilds KV for
+    # resume_tokens[:prefill_target] (= prompt + generated[:-1]) instead of
+    # the bare prompt, then decoding continues from generated[-1].
+    resume_tokens: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    prefill_target: Optional[int] = None
+    # waiting-queue sort key (repro.sched.slo.queue_key), stamped at submit
+    sched_key: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    preemptions: int = 0
 
     @property
     def length(self) -> int:
         return len(self.prompt) + len(self.generated)
 
     @property
+    def prefill_target_len(self) -> int:
+        """Rows prefill must write before decode (re)starts: the prompt
+        for fresh requests, the resume prefix for recompute-preempted."""
+        return (self.prefill_target if self.prefill_target is not None
+                else len(self.prompt))
+
+    @property
     def prefilling(self) -> bool:
-        return self.ctx_done < len(self.prompt)
+        return self.ctx_done < self.prefill_target_len
 
     @property
     def done(self) -> bool:

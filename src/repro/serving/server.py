@@ -32,6 +32,7 @@ from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
 from repro.serving.engine import Engine
 from repro.serving.request import ServeRequest, State
+from repro.sim.metrics import class_slo_summary
 from repro.sim.workload import Request
 
 TokenCallback = Callable[[ServeRequest, int], None]
@@ -48,6 +49,14 @@ class ServerConfig:
     seed: int = 0
     attn_backend: Optional[str] = None  # dense | grid | flat | fused | None=auto
     kv_dtype: str = "bf16"             # bf16 | int8 (DESIGN.md §Quantized KV)
+    # SLO-tiered preemptive scheduling (DESIGN.md §SLO scheduling).
+    # ``preemption=False`` restores bit-identical FCFS queues. With
+    # uniform-class traffic and distinct arrival steps the SLO queue
+    # order equals FCFS and no preemption can fire, so the default is
+    # safe for legacy traces.
+    preemption: bool = True
+    slo_scale: float = 1.0             # paper §6.4 SLO-scale sweep knob
+    slo_time_scale: float = 1.0        # engine steps per abstract SLO second
 
 
 class EngineView:
@@ -72,8 +81,9 @@ class EngineView:
     def requests(self) -> List[ReqView]:
         return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length),
                         ctx_done=float(r.ctx_done),
-                        ctx_total=float(len(r.prompt)),
-                        cached_tokens=float(r.cached_tokens))
+                        ctx_total=float(r.prefill_target_len),
+                        cached_tokens=float(r.cached_tokens),
+                        slo_class=r.slo_class)
                 for r in self.eng.slots if r is not None]
 
     def prefix_digests(self) -> frozenset:
@@ -148,7 +158,9 @@ class MILSServer:
                               prefill_token_budget=prefill_token_budget,
                               chunked_prefill=chunked_prefill,
                               prefix_cache=prefix_cache,
-                              kv_dtype=kv_dtype)
+                              kv_dtype=kv_dtype,
+                              preemption=cfg.preemption,
+                              slo_time_scale=cfg.slo_time_scale)
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(
@@ -199,7 +211,8 @@ class MILSServer:
         self.submitted += 1
         digest, cached = self._prefix_hint(req)
         self.plane.submit(req, req.req_id, float(len(req.prompt)),
-                          cached_tokens=cached, prefix_digest=digest)
+                          cached_tokens=cached, prefix_digest=digest,
+                          slo_class=req.slo_class)
 
     def submit_at(self, req: ServeRequest, step: int) -> None:
         """Open-loop submission: the request arrives at ``step`` (replays
@@ -214,7 +227,8 @@ class MILSServer:
             req.arrival_step = self.steps
             digest, cached = self._prefix_hint(req)
             self.plane.submit(req, req.req_id, float(len(req.prompt)),
-                              cached_tokens=cached, prefix_digest=digest)
+                              cached_tokens=cached, prefix_digest=digest,
+                              slo_class=req.slo_class)
 
     # ---- token streaming -----------------------------------------------------
     def _stream(self, reqs: Sequence[ServeRequest]) -> None:
@@ -297,6 +311,30 @@ class MILSServer:
                 out[f"{name}_mean"] = float(arr.mean())
                 for p in (50, 95, 99):
                     out[f"{name}_p{p}"] = float(np.percentile(arr, p))
+        # per-class SLO attainment + goodput-under-SLO, through the SAME
+        # formula the simulator reports (sim.metrics.class_slo_summary) —
+        # ``slo_time_scale`` converts the abstract class deadlines into
+        # steps, ``slo_scale`` is the paper's SLO-scale sweep knob
+        entries = []
+        for r in served:
+            ttft_r = float(r.first_token_step - r.arrival_step)
+            tpot_r = (float(r.finish_step - r.first_token_step)
+                      / max(len(r.generated) - 1, 1))
+            entries.append((r.slo_class, ttft_r, tpot_r, len(r.generated)))
+        per = class_slo_summary(entries, float(self.steps),
+                                scale=self.cfg.slo_scale,
+                                time_scale=self.cfg.slo_time_scale)
+        for cls, d in sorted(per.items()):
+            out[f"slo_{cls}_attainment"] = d["attainment"]
+            out[f"slo_{cls}_goodput_tok_step"] = d["goodput_tok_s"]
+            out[f"slo_{cls}_requests"] = d["requests"]
+        # getattr: custom engine_factory backends (FakeEngine parity
+        # harnesses) may predate the preemption counters
+        out["preemptions"] = sum(getattr(e, "preemptions", 0)
+                                 for e in self.engines)
+        out["preempt_recomputes"] = sum(getattr(e, "preempt_recomputes", 0)
+                                        for e in self.engines)
+        out["resumes"] = sum(getattr(e, "resumes", 0) for e in self.engines)
         return out
 
 
@@ -339,5 +377,6 @@ def requests_from_trace(trace: Sequence[Request], *, vocab_size: int,
         req = ServeRequest(r.req_id, prompt, new)
         req.prefix_group = pg
         req.prefix_len = pfx_len
+        req.slo_class = getattr(r, "slo_class", "standard")
         out.append((req, int(round(r.arrival * steps_per_second))))
     return out

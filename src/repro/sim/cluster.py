@@ -39,6 +39,10 @@ class ClusterConfig:
     # active only for chunked instances on workloads carrying prefix
     # groups, so legacy runs are bit-identical either way
     prefix_cache: bool = True
+    # SLO-tiered preemptive scheduling (DESIGN.md §SLO scheduling):
+    # deadline-ordered queues + seat/memory preemption of lower classes.
+    # Uniform-class traffic with distinct arrivals is FCFS either way.
+    preemption: bool = True
     bandwidth: float = 25e9            # inter-instance KV path
     # hand-off disruption: final stop-and-copy stall + scheduler/alloc
     # coordination on both ends (Llumnix reports tens of ms per migration);
@@ -81,7 +85,8 @@ class Cluster:
             Instance(i, profile, cfg.capacity_tokens, self.events,
                      block_size=cfg.kv_block_size,
                      prefill_budget=cfg.prefill_token_budget,
-                     prefix_cache=cfg.prefix_cache)
+                     prefix_cache=cfg.prefix_cache,
+                     preemption=cfg.preemption)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
         self.policy = policy
@@ -282,8 +287,9 @@ class SimInstanceView:
     def requests(self) -> List[ReqView]:
         return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),
                         float(sr.length), ctx_done=float(sr.ctx_done),
-                        ctx_total=float(sr.req.input_len),
-                        cached_tokens=float(sr.cached_tokens))
+                        ctx_total=float(sr.prefill_target_len),
+                        cached_tokens=float(sr.cached_tokens),
+                        slo_class=sr.req.slo_class)
                 for sr in self.inst.running if not sr.migrating]
 
     def prefix_digests(self) -> frozenset:
@@ -379,7 +385,8 @@ class CascadePolicy(Policy):
     def dispatch(self, sr: SimRequest, t: float) -> None:
         digest, cached = self._prefix_hint(sr)
         self.plane.submit(sr, sr.req.req_id, sr.length,
-                          cached_tokens=cached, prefix_digest=digest)
+                          cached_tokens=cached, prefix_digest=digest,
+                          slo_class=sr.req.slo_class)
 
     def on_iteration_end(self, inst, t):
         self.plane.on_instance_iteration(inst.id)

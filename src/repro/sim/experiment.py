@@ -19,8 +19,9 @@ from repro.sim.costmodel import HardwareProfile, profile_from_config
 from repro.sim.metrics import SimResult
 from repro.sim.profiler import profile_and_fit
 from repro.sim.workload import (Request, WorkloadSpec, generate,
-                                generate_shared_prefix, longtail_spec,
-                                sample_lengths, shared_prefix_spec)
+                                generate_shared_prefix, generate_slo,
+                                longtail_spec, sample_lengths,
+                                shared_prefix_spec, slo_spec)
 
 
 @functools.lru_cache(maxsize=8)
@@ -88,13 +89,15 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                tp: int = 1, ragged_backend: bool = False,
                bandwidth: float = 25e9,
                prefill_token_budget: Optional[int] = None,
-               prefix_cache: bool = True) -> SimResult:
+               prefix_cache: bool = True,
+               preemption: bool = True) -> SimResult:
     prof = profile_from_config(get_config(arch), tp=tp,
                                ragged_backend=ragged_backend)
     cfg = ClusterConfig(num_instances=E, capacity_tokens=capacity_tokens,
                         seed=seed, bandwidth=bandwidth,
                         prefill_token_budget=prefill_token_budget,
-                        prefix_cache=prefix_cache)
+                        prefix_cache=prefix_cache,
+                        preemption=preemption)
     cluster = Cluster(prof, policy, cfg)
     return cluster.run(requests, duration)
 
@@ -105,6 +108,7 @@ def compare_policies(arch: str, rate: float, duration: float, *,
                      workload: str = "sharegpt",
                      prefill_token_budget: Optional[int] = None,
                      prefix_cache: bool = True,
+                     preemption: bool = True,
                      kinds: Sequence[str] = ("round-robin", "llumnix",
                                              "cascade")) -> Dict[str, SimResult]:
     """Same workload, all policies — the Fig. 6/7/10 experiment.
@@ -115,9 +119,17 @@ def compare_policies(arch: str, rate: float, duration: float, *,
     chunked prefill targets. ``workload="shared_prefix"`` runs the
     system-prompt/multi-turn trace (``sim.workload.shared_prefix_spec``)
     with the group-granular prefix-cache mirror — the cascade-vs-baseline
-    comparison under prefix caching (``prefix_cache=False`` ablates it)."""
+    comparison under prefix caching (``prefix_cache=False`` ablates it).
+    ``workload="slo"`` runs the open-loop SLO-class mix with diurnal +
+    bursty arrivals (``sim.workload.slo_spec``) — the goodput-under-SLO
+    experiment (``preemption=False`` ablates the tiered scheduler back
+    to FCFS)."""
     if workload == "longtail":
         requests = generate(longtail_spec(rate, duration, seed=seed))
+    elif workload == "slo":
+        requests = generate_slo(slo_spec(rate, duration, seed=seed))
+        if prefill_token_budget is None:
+            prefill_token_budget = 512
     elif workload == "shared_prefix":
         requests = generate_shared_prefix(
             shared_prefix_spec(rate, duration, seed=seed))
@@ -133,5 +145,6 @@ def compare_policies(arch: str, rate: float, duration: float, *,
         out[kind] = run_policy(arch, pol, requests, duration, E=E,
                                capacity_tokens=capacity_tokens, seed=seed,
                                prefill_token_budget=prefill_token_budget,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache,
+                               preemption=preemption)
     return out

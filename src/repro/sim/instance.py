@@ -24,6 +24,7 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.migration import MigrationManager
+from repro.sched.slo import insert_sorted, priority_of, queue_key
 from repro.serving.block_pool import blocks_for
 from repro.sim.costmodel import (HardwareProfile, decode_iter_time,
                                  mixed_iter_time, prefill_time)
@@ -58,21 +59,37 @@ class SimRequest:
     feat_sum: List[float] = dataclasses.field(
         default_factory=lambda: [0.0] * 5)
     feat_iters: int = 0
+    # --- SLO scheduling & preemption (mirrors ServeRequest) ---
+    # recompute-preemption resume state: rows chunked prefill must rebuild
+    # (= prompt + generated-so-far minus the pending last token) before
+    # decoding continues. None = not resuming.
+    resume_target: Optional[int] = None
+    # waiting-queue sort key (repro.sched.slo.queue_key)
+    sched_key: Optional[tuple] = None
+    preemptions: int = 0
 
     @property
     def done(self) -> bool:
         return self.generated >= self.req.output_len
 
     @property
+    def prefill_target_len(self) -> int:
+        """Rows prefill must write before decode (re)starts."""
+        return (self.resume_target if self.resume_target is not None
+                else self.req.input_len)
+
+    @property
     def prefilling(self) -> bool:
-        return self.ctx_done < self.req.input_len
+        return self.ctx_done < self.prefill_target_len
 
     @property
     def kv_len(self) -> int:
         """Cache rows that physically exist: the written prompt part plus
         every generated token (= ``length`` once prefill is done). This —
         not the full ``length`` — is what pins memory and what a
-        migration ships."""
+        migration ships. Mid-recompute only the rebuilt rows exist."""
+        if self.resume_target is not None:
+            return self.ctx_done
         return self.ctx_done + self.generated
 
     @property
@@ -98,7 +115,8 @@ class Instance:
                  batch_cap: int = BATCH_CAP,
                  block_size: int = KV_BLOCK_SIZE,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 preemption: bool = False):
         self.id = inst_id
         self.profile = profile
         self.block_size = block_size
@@ -123,6 +141,15 @@ class Instance:
         self.batch_cap = batch_cap
         self.waiting: Deque[SimRequest] = deque()
         self.running: List[SimRequest] = []
+        # SLO-tiered preemptive scheduling (mirrors serving.Engine): off =
+        # bit-parity FCFS legacy. Parked requests hold KV (counted by
+        # kv_blocks) but no batch seat.
+        self.slo_sched = bool(preemption)
+        self.parked: List[SimRequest] = []
+        self._seq = 0
+        self.preemptions = 0
+        self.preempt_recomputes = 0
+        self.resumes = 0
         self.iterating = False
         self.migrations = MigrationManager()
         self.inbound_reserved = 0.0      # tokens reserved for inbound transfers
@@ -153,7 +180,7 @@ class Instance:
         # allocator where blocks beyond it are refcount-0 reclaimable).
         shared_depth: Dict[int, int] = {}
         private = 0
-        for r in self.running:
+        for r in self.running + self.parked:    # parked KV stays pinned
             cb = r.cached_tokens // bs
             private += blocks_for(r.kv_len, bs) - cb
             if cb:
@@ -183,8 +210,9 @@ class Instance:
         (minus their prefix-store hit, estimated at enqueue) plus the
         unwritten remainder of running requests mid-chunked-prefill
         (mirrors ``serving.Engine.queued_tokens``)."""
-        return float(sum(r.length - r.cached_tokens for r in self.waiting)
-                     + sum(r.req.input_len - r.ctx_done
+        return float(sum(r.prefill_target_len - r.cached_tokens
+                         for r in self.waiting)
+                     + sum(r.prefill_target_len - r.ctx_done
                            for r in self.running if r.prefilling))
 
     def load(self) -> float:
@@ -217,7 +245,7 @@ class Instance:
         blocks beyond it have refcount 0 in the engine (parked), so an
         admission that uses them must pay their revival."""
         bs = self.block_size
-        return max((r.cached_tokens // bs for r in self.running
+        return max((r.cached_tokens // bs for r in self.running + self.parked
                     if r.req.prefix_group == group), default=0)
 
     def _publish_prefix(self, sr: SimRequest) -> None:
@@ -239,7 +267,14 @@ class Instance:
         # prefix-hit hint for queued_tokens/load while the request waits
         # (refreshed authoritatively at admission)
         sr.cached_tokens = self.cached_tokens_for(sr)
-        self.waiting.append(sr)
+        if self.slo_sched:
+            self._seq += 1
+            sr.sched_key = queue_key(
+                sr.req.slo_class, sr.req.arrival,
+                sr.req.input_len + sr.req.output_len, self._seq)
+            insert_sorted(self.waiting, sr)
+        else:
+            self.waiting.append(sr)
         self.kick(t)
 
     def adopt_running(self, sr: SimRequest, t: float) -> None:
@@ -249,13 +284,16 @@ class Instance:
 
     # ---- iteration machinery ----------------------------------------------
     def kick(self, t: float) -> None:
-        if self.iterating or (not self.waiting and not self.running):
+        if self.iterating or (not self.waiting and not self.running
+                              and not self.parked):
             return
         self.iterating = True
         self._start_iteration(t)
 
     def _start_iteration(self, t: float) -> None:
         admitted: List[SimRequest] = []
+        if self.slo_sched:
+            self._resume_ready()
         chunks: List = []                       # (sr, chunk_len) this iter
         budget = self.prefill_budget
         if budget is not None:
@@ -265,7 +303,7 @@ class Instance:
                     break
                 if not r.prefilling:
                     continue
-                c = min(r.req.input_len - r.ctx_done, budget)
+                c = min(r.prefill_target_len - r.ctx_done, budget)
                 chunks.append((r, c))
                 budget -= c
         # unwritten backlog of already-admitted prompts: their rows are
@@ -273,9 +311,16 @@ class Instance:
         # WILL materialize — admission must reserve for them or chunked
         # instances could blow past capacity (the engine reserves worst
         # case at admission; this is the sim's equivalent gate)
-        pending = sum(r.req.input_len - r.ctx_done
+        pending = sum(r.prefill_target_len - r.ctx_done
                       for r in self.running if r.prefilling)
-        while self.waiting and len(self.running) < self.batch_cap:
+        while self.waiting:
+            if len(self.running) >= self.batch_cap:
+                # full batch: a higher-class head may park the lowest-
+                # class resident decode (KV pinned, seat freed)
+                if not (self.slo_sched
+                        and self._preempt_seat(self.waiting[0])):
+                    break
+                continue
             if self.waiting[0].length + 1 > self.capacity:
                 # request can never fit this instance: reject (real
                 # engines fail such requests instead of wedging FCFS)
@@ -302,19 +347,26 @@ class Instance:
             if self.free_tokens() < (
                     self.block_tokens(head.length - cached)
                     + revived + pending):
-                break
+                # memory-blocked: parking frees nothing — recompute-
+                # preempt the lowest-class victim's KV instead
+                if not (self.slo_sched and self._preempt_mem(head)):
+                    break
+                continue
             sr = self.waiting.popleft()
             sr.cached_tokens = cached
             sr.ctx_done = max(sr.ctx_done, cached)
             self.running.append(sr)
             admitted.append(sr)
             if budget is None:
+                sr.resume_target = None             # monolithic re-prefill
                 sr.ctx_done = sr.req.input_len      # monolithic prefill
             else:
-                pending += sr.req.input_len - sr.ctx_done
-                c = min(sr.req.input_len - sr.ctx_done, budget)
+                pending += sr.prefill_target_len - sr.ctx_done
+                c = min(sr.prefill_target_len - sr.ctx_done, budget)
                 chunks.append((sr, c))
                 budget -= c
+        if self.slo_sched:
+            self._resume_ready()
         if self.prefill_budget is None:
             decoding = [r for r in self.running if r not in admitted]
             dur = sum(prefill_time(r.length, self.profile) for r in admitted)
@@ -336,6 +388,84 @@ class Instance:
         self.events.push(t + dur, lambda: self._end_iteration(t + dur,
                                                               admitted))
 
+    # ---- SLO preemption (mirrors serving.Engine; DESIGN.md §SLO sched) -----
+    def _victims(self, pr: int) -> List[SimRequest]:
+        """Preemptable residents for a priority-``pr`` preemptor: strictly
+        lower class, fully prefilled, >= 1 generated token, not mid-
+        migration (the fabric owns those)."""
+        return [r for r in self.running
+                if not r.prefilling and not r.migrating and r.generated > 0
+                and priority_of(r.req.slo_class) > pr]
+
+    def _preempt_seat(self, head: SimRequest) -> bool:
+        """Full batch: park the lowest-class largest victim — KV blocks
+        stay pinned (kv_blocks counts parked), only the seat frees."""
+        cands = self._victims(priority_of(head.req.slo_class))
+        if not cands:
+            return False
+        v = max(cands, key=lambda r: (priority_of(r.req.slo_class),
+                                      r.kv_len))
+        self.running.remove(v)
+        self._seq += 1
+        # size 0: a parked request outranks an equal-deadline waiting one
+        v.sched_key = queue_key(v.req.slo_class, v.req.arrival, 0.0,
+                                self._seq)
+        self.parked.append(v)
+        v.preemptions += 1
+        self.preemptions += 1
+        return True
+
+    def _preempt_mem(self, head: SimRequest) -> bool:
+        """Memory-blocked admission: drop the lowest-class largest
+        victim's KV and re-enqueue it as a recompute resume — running
+        victims first, then parked ones (whose pinned blocks are
+        otherwise unreachable)."""
+        pr = priority_of(head.req.slo_class)
+        cands = self._victims(pr)
+        if cands:
+            v = max(cands, key=lambda r: (priority_of(r.req.slo_class),
+                                          r.kv_len))
+            self.running.remove(v)
+            self._recompute_preempt(v)
+            return True
+        pcands = [r for r in self.parked
+                  if priority_of(r.req.slo_class) > pr]
+        if not pcands:
+            return False
+        v = max(pcands, key=lambda r: (priority_of(r.req.slo_class),
+                                       r.kv_len))
+        self.parked.remove(v)
+        self._recompute_preempt(v)
+        return True
+
+    def _recompute_preempt(self, v: SimRequest) -> None:
+        """Drop a victim's KV; prefill must rebuild prompt + generated
+        rows minus the pending last token (mirrors the engine's
+        ``_requeue_recompute``)."""
+        target = v.ctx_done + v.generated - 1
+        v.resume_target = max(target, 1)
+        v.ctx_done = 0
+        v.cached_tokens = 0
+        v.preemptions += 1
+        self.preemptions += 1
+        self.preempt_recomputes += 1
+        self._seq += 1
+        v.sched_key = queue_key(v.req.slo_class, v.req.arrival,
+                                v.req.input_len + v.req.output_len,
+                                self._seq)
+        insert_sorted(self.waiting, v)
+
+    def _resume_ready(self) -> None:
+        """Restore parked requests into free batch seats, unless a
+        waiting request outranks the best parked one."""
+        while self.parked and len(self.running) < self.batch_cap:
+            v = min(self.parked, key=lambda r: r.sched_key)
+            if self.waiting and self.waiting[0].sched_key < v.sched_key:
+                return
+            self.parked.remove(v)
+            self.running.append(v)
+            self.resumes += 1
+
     def _end_iteration(self, t: float, admitted: List[SimRequest]) -> None:
         # the iteration's prompt chunks land: progress advances, and a
         # request whose LAST chunk landed joins the producers this very
@@ -349,7 +479,14 @@ class Instance:
         for r, c in self._iter_chunks:
             if r in self.running:
                 r.ctx_done += c
-                if not r.prefilling:    # prompt done: prefix now servable
+                if r.resume_target is not None:
+                    if r.ctx_done >= r.resume_target:
+                        # recompute resume complete: rows rebuilt, decode
+                        # continues (no re-publish, no new first token)
+                        r.resume_target = None
+                        r.ctx_done = r.req.input_len
+                        self.resumes += 1
+                elif not r.prefilling:  # prompt done: prefix now servable
                     self._publish_prefix(r)
         self._iter_chunks = []
         producers = [r for r in self.running if not r.prefilling]

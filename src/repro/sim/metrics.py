@@ -3,11 +3,68 @@ SLO attainment; Fig. 16: per-stage output-token CV)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.sched.slo import slo_of
 from repro.sim.instance import Instance, SimRequest
+
+
+# --------------------------------------------------------------------------
+# SLO attainment & goodput-under-SLO (paper §6.4) — module-level single
+# source of truth: `SimResult.slo_attainment`/`slo_summary` AND
+# `serving.MILSServer.summary` both call these, so there is exactly ONE
+# SLO formula in the codebase. Entries are (slo_class, ttft, tpot,
+# output_tokens) in abstract time units; ``time_scale`` converts the spec
+# deadlines into the caller's clock (1.0 for the sim, steps-per-unit for
+# the server) and ``scale`` is the paper's SLO-scale sweep knob.
+# --------------------------------------------------------------------------
+def _slo_ok(ttft: float, tpot: float, ttft_slo: float, tpot_slo: float,
+            scale: float = 1.0) -> bool:
+    return ttft <= scale * ttft_slo and tpot <= scale * tpot_slo
+
+
+def slo_attainment(entries: Iterable[Tuple[float, float]],
+                   ttft_slo: float, tpot_slo: float,
+                   scale: float = 1.0) -> float:
+    """Fraction of (ttft, tpot) pairs meeting a fixed SLO pair."""
+    entries = list(entries)
+    if not entries:
+        return 0.0
+    ok = sum(1 for ttft, tpot in entries
+             if _slo_ok(ttft, tpot, ttft_slo, tpot_slo, scale))
+    return ok / len(entries)
+
+
+def class_slo_summary(entries: Iterable[Tuple[str, float, float, int]],
+                      duration: float, *, scale: float = 1.0,
+                      time_scale: float = 1.0) -> Dict[str, Dict[str, float]]:
+    """Per-SLO-class attainment and goodput-under-SLO.
+
+    ``entries`` are (slo_class, ttft, tpot, output_tokens) per served
+    request; each class is judged against ITS OWN deadlines
+    (repro.sched.slo.SLO_CLASSES, times ``time_scale`` then ``scale``).
+    Goodput counts only tokens of requests that met their class SLO —
+    the metric the preemptive scheduler is accepted on.
+    """
+    per: Dict[str, Dict[str, float]] = {}
+    for cls, ttft, tpot, out_tokens in entries:
+        spec = slo_of(cls)
+        d = per.setdefault(spec.name, {"requests": 0, "slo_ok": 0,
+                                       "tokens": 0, "goodput_tokens": 0})
+        ok = _slo_ok(ttft, tpot, spec.ttft_slo * time_scale,
+                     spec.tpot_slo * time_scale, scale)
+        d["requests"] += 1
+        d["slo_ok"] += int(ok)
+        d["tokens"] += int(out_tokens)
+        if ok:
+            d["goodput_tokens"] += int(out_tokens)
+    dur = max(float(duration), 1e-9)
+    for d in per.values():
+        d["attainment"] = d["slo_ok"] / max(d["requests"], 1)
+        d["goodput_tok_s"] = d["goodput_tokens"] / dur
+    return per
 
 
 @dataclasses.dataclass
@@ -60,11 +117,24 @@ class SimResult:
     # ---- SLO (paper §6.4) --------------------------------------------------
     def slo_attainment(self, ttft_slo: float, tpot_slo: float,
                        scale: float = 1.0) -> float:
-        if not self.served:
-            return 0.0
-        ok = sum(1 for r in self.served
-                 if r.ttft <= scale * ttft_slo and r.tpot <= scale * tpot_slo)
-        return ok / len(self.served)
+        return slo_attainment(((r.ttft, r.tpot) for r in self.served),
+                              ttft_slo, tpot_slo, scale)
+
+    def slo_summary(self, scale: float = 1.0) -> Dict[str, Dict[str, float]]:
+        """Per-class SLO attainment + goodput-under-SLO over the run
+        (classes judged against their own SLO_CLASSES deadlines)."""
+        return class_slo_summary(
+            ((r.req.slo_class, r.ttft, r.tpot, r.req.output_len)
+             for r in self.served),
+            self.duration, scale=scale)
+
+    def preemption_stats(self) -> Dict[str, int]:
+        return {
+            "preemptions": sum(i.preemptions for i in self.instances),
+            "preempt_recomputes": sum(i.preempt_recomputes
+                                      for i in self.instances),
+            "resumes": sum(i.resumes for i in self.instances),
+        }
 
     # ---- load balance (paper Fig. 16) ---------------------------------------
     def output_tokens_by_instance(self) -> np.ndarray:

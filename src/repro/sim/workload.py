@@ -30,6 +30,9 @@ class Request:
     # server replay (literal shared tokens) both key on these.
     prefix_group: int = -1
     prefix_len: int = 0
+    # SLO service class (repro.sched.slo.SLO_CLASSES): drives queue
+    # ordering and preemption eligibility in both sim and real engines.
+    slo_class: str = "standard"
 
     @property
     def final_len(self) -> int:
@@ -175,3 +178,155 @@ def trace_requests(path: str, rate: float, seed: int = 0) -> List[Request]:
     t = np.cumsum(gaps)
     return [Request(i, float(t[i]), int(a), int(b))
             for i, (a, b) in enumerate(pairs)]
+
+
+# --------------------------------------------------------------------------
+# Open-loop arrival curves (ROADMAP item 4): diurnal + bursty modulation.
+# The production shape FCFS folds under — a sinusoidal daily cycle with
+# exponential on/off burst windows stacked on top, sampled open-loop (the
+# offered load never waits for the system), via Poisson thinning.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ArrivalCurve:
+    """Time-varying arrival intensity λ(t) = base · diurnal(t) · burst(t).
+
+    ``diurnal_amp`` modulates a sinusoid with period ``diurnal_period``
+    (amplitude 0 = flat); bursts multiply the rate by ``burst_factor``
+    inside on/off windows drawn from exponential gap/length clocks.
+    """
+    base_rate: float               # mean arrivals/s outside bursts
+    diurnal_amp: float = 0.5       # in [0, 1): peak/trough swing
+    diurnal_period: float = 60.0   # seconds per "day"
+    burst_factor: float = 4.0      # rate multiplier inside a burst
+    burst_every: float = 20.0      # mean gap between burst starts
+    burst_len: float = 2.0         # mean burst duration
+
+
+def burst_windows(curve: ArrivalCurve, duration: float,
+                  rng: np.random.Generator) -> List[Tuple[float, float]]:
+    """Sample the on/off burst windows [(start, end), ...] over a run."""
+    windows: List[Tuple[float, float]] = []
+    if curve.burst_factor <= 1.0 or curve.burst_every <= 0.0:
+        return windows
+    t = float(rng.exponential(curve.burst_every))
+    while t < duration:
+        end = t + float(rng.exponential(curve.burst_len))
+        windows.append((t, min(end, duration)))
+        t = end + float(rng.exponential(curve.burst_every))
+    return windows
+
+
+def rate_at(curve: ArrivalCurve, t: np.ndarray,
+            windows: Sequence[Tuple[float, float]]) -> np.ndarray:
+    """Vectorized λ(t) over sampled burst windows."""
+    t = np.asarray(t, dtype=np.float64)
+    lam = curve.base_rate * (
+        1.0 + curve.diurnal_amp
+        * np.sin(2.0 * np.pi * t / max(curve.diurnal_period, 1e-9)))
+    boost = np.zeros_like(t)
+    for s, e in windows:
+        boost = np.where((t >= s) & (t < e), 1.0, boost)
+    return lam * (1.0 + (curve.burst_factor - 1.0) * boost)
+
+
+def arrival_times(curve: ArrivalCurve, duration: float,
+                  rng: np.random.Generator) -> Tuple[np.ndarray, List[Tuple[float, float]]]:
+    """Open-loop arrivals from the non-homogeneous Poisson process λ(t),
+    via thinning: draw a homogeneous λ_max candidate stream, keep each
+    candidate with probability λ(t)/λ_max."""
+    windows = burst_windows(curve, duration, rng)
+    lam_max = (curve.base_rate * (1.0 + curve.diurnal_amp)
+               * max(curve.burst_factor, 1.0))
+    n_cand = rng.poisson(lam_max * duration)
+    cand = np.sort(rng.uniform(0.0, duration, n_cand))
+    keep = rng.random(n_cand) < rate_at(curve, cand, windows) / max(lam_max, 1e-12)
+    return cand[keep], windows
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOWorkloadSpec:
+    """The million-user-shaped harness trace: open-loop diurnal+bursty
+    arrivals, a multi-tenant Zipf shared-prefix population, an SLO class
+    mix, and per-class length profiles (interactive = short chat turns;
+    batch = long analytic prompts with a 32K–128K Pareto tail)."""
+    curve: ArrivalCurve
+    duration: float
+    seed: int = 0
+    # (class, weight) mix; tuple-of-tuples so the spec stays hashable
+    class_mix: Tuple[Tuple[str, float], ...] = (
+        ("interactive", 0.5), ("standard", 0.3), ("batch", 0.2))
+    # multi-tenant shared prefixes (system prompts), Zipf popularity
+    num_tenants: int = 8
+    prefix_len: int = 512
+    zipf_a: float = 1.4
+    prefix_frac: float = 0.7       # fraction of requests with a tenant prefix
+    # per-class (in_mu, in_sigma, out_mu, out_sigma) length profiles
+    profiles: Tuple[Tuple[str, float, float, float, float], ...] = (
+        ("interactive", 4.5, 0.7, 4.0, 0.7),
+        ("standard", 6.0, 1.0, 5.3, 0.9),
+        ("batch", 7.5, 1.2, 5.8, 1.0))
+    # long-context Pareto tail on batch prompts
+    tail_frac: float = 0.10
+    tail_alpha: float = 1.05
+    tail_scale: float = 32_000.0
+    max_context: int = MAX_CONTEXT
+
+
+def slo_spec(rate: float, duration: float, *, seed: int = 0,
+             class_mix: Optional[Tuple[Tuple[str, float], ...]] = None,
+             num_tenants: int = 8, prefix_len: int = 512,
+             max_context: int = MAX_CONTEXT,
+             **curve_kw) -> SLOWorkloadSpec:
+    """Convenience constructor (benchmark/harness entry point)."""
+    kw = {}
+    if class_mix is not None:
+        kw["class_mix"] = tuple(class_mix)
+    return SLOWorkloadSpec(curve=ArrivalCurve(base_rate=rate, **curve_kw),
+                           duration=duration, seed=seed,
+                           num_tenants=num_tenants, prefix_len=prefix_len,
+                           max_context=max_context, **kw)
+
+
+def generate_slo(spec: SLOWorkloadSpec) -> List[Request]:
+    """Sample the open-loop SLO harness trace."""
+    rng = np.random.default_rng(spec.seed)
+    arrivals, _ = arrival_times(spec.curve, spec.duration, rng)
+    n = len(arrivals)
+    if n == 0:
+        return []
+    mixes = [m[0] for m in spec.class_mix]
+    probs = np.array([m[1] for m in spec.class_mix], dtype=np.float64)
+    probs /= probs.sum()
+    cls_idx = rng.choice(len(mixes), size=n, p=probs)
+    profiles = {p[0]: p[1:] for p in spec.profiles}
+    ins = np.empty(n, dtype=np.float64)
+    outs = np.empty(n, dtype=np.float64)
+    for ci, name in enumerate(mixes):
+        mask = cls_idx == ci
+        m = int(mask.sum())
+        if not m:
+            continue
+        in_mu, in_sig, out_mu, out_sig = profiles.get(
+            name, (6.0, 1.0, 5.3, 0.9))
+        ins[mask] = rng.lognormal(in_mu, in_sig, m)
+        outs[mask] = rng.lognormal(out_mu, out_sig, m)
+        if name == "batch" and spec.tail_frac > 0:
+            tail = rng.random(m) < spec.tail_frac
+            pareto = spec.tail_scale * (1 + rng.pareto(spec.tail_alpha, m))
+            sub = ins[mask]
+            sub[tail] = pareto[tail]
+            ins[mask] = sub
+    # multi-tenant Zipf prefixes on a fraction of requests
+    tenants = np.minimum(rng.zipf(spec.zipf_a, n) - 1,
+                         spec.num_tenants - 1).astype(np.int64)
+    has_prefix = rng.random(n) < spec.prefix_frac
+    plen = np.where(has_prefix, spec.prefix_len, 0).astype(np.int64)
+    ins = np.clip(ins + plen, 16, spec.max_context - 64).astype(np.int64)
+    plen = np.minimum(plen, ins - 16)
+    outs = np.clip(outs, 4, None).astype(np.int64)
+    outs = np.minimum(outs, spec.max_context - ins)
+    return [Request(i, float(arrivals[i]), int(ins[i]), int(outs[i]),
+                    prefix_group=int(tenants[i]) if plen[i] > 0 else -1,
+                    prefix_len=int(plen[i]),
+                    slo_class=mixes[int(cls_idx[i])])
+            for i in range(n)]

@@ -1,0 +1,323 @@
+"""SLO-tiered preemptive scheduler (DESIGN.md §SLO scheduling &
+preemption): queue ordering, park-vs-recompute policy, allocator
+park/unpark, bit-identical engine round-trips, and the goodput-under-SLO
+acceptance comparison in both drivers (sim cluster + real server)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels.cost import AttnSpec
+from repro.sched import (PARK_RESTORE_COST_S, assign_classes, insert_sorted,
+                         park_or_recompute, parse_class_mix, priority_of,
+                         queue_key, recompute_cost_s, slo_of)
+from repro.serving.block_pool import BlockAllocator
+from repro.serving.request import ServeRequest, State
+
+
+# ---------------------------------------------------------------------------
+# queue keys & class parsing (pure)
+# ---------------------------------------------------------------------------
+def test_queue_key_priority_then_deadline_then_size():
+    # interactive outranks standard outranks batch, whatever the arrivals
+    assert queue_key("interactive", 100.0, 1e6, 9) \
+        < queue_key("standard", 0.0, 1.0, 0)
+    assert queue_key("standard", 100.0, 1e6, 9) \
+        < queue_key("batch", 0.0, 1.0, 0)
+    # within a class: earlier TTFT deadline first
+    assert queue_key("standard", 1.0, 50.0, 1) \
+        < queue_key("standard", 2.0, 5.0, 0)
+    # equal deadline: shortest job first
+    assert queue_key("standard", 1.0, 10.0, 5) \
+        < queue_key("standard", 1.0, 20.0, 0)
+    # time_scale stretches the deadline component
+    assert queue_key("interactive", 4.0, 1.0, 0, time_scale=10.0)[1] \
+        == pytest.approx(4.0 + 10.0 * slo_of("interactive").ttft_slo)
+
+
+def test_insert_sorted_uniform_class_is_fcfs():
+    @dataclasses.dataclass
+    class Item:
+        seq: int
+        sched_key: tuple = None
+
+    q = []
+    for seq, arrival in enumerate([0.0, 1.0, 2.0, 3.0]):
+        it = Item(seq)
+        it.sched_key = queue_key("standard", arrival, 1000.0 - seq, seq)
+        insert_sorted(q, it)
+    assert [i.seq for i in q] == [0, 1, 2, 3]     # arrival order, not size
+    # an interactive straggler still jumps the whole standard queue
+    late = Item(99)
+    late.sched_key = queue_key("interactive", 50.0, 1.0, 99)
+    insert_sorted(q, late)
+    assert q[0].seq == 99
+
+
+def test_parse_class_mix_and_assign():
+    mix = parse_class_mix("interactive:2,batch:2")
+    assert dict(mix) == {"interactive": 0.5, "batch": 0.5}
+    assert dict(parse_class_mix("standard=1")) == {"standard": 1.0}
+    with pytest.raises(ValueError):
+        parse_class_mix("gold:1")
+    with pytest.raises(ValueError):
+        parse_class_mix("interactive:0")
+    classes = assign_classes(500, mix, np.random.default_rng(0))
+    assert set(classes) == {"interactive", "batch"}
+    assert 150 < classes.count("interactive") < 350
+
+
+def test_priority_of_unknown_falls_back_to_standard():
+    assert priority_of("no-such-class") == priority_of("standard")
+
+
+# ---------------------------------------------------------------------------
+# park-vs-recompute policy (priced via kernels/cost.py)
+# ---------------------------------------------------------------------------
+def test_park_or_recompute_rule():
+    # memory pressure forces recompute: parking frees no blocks
+    assert park_or_recompute(must_free_blocks=3, kv_tokens=4096) \
+        == "recompute"
+    # pure seat pressure without a cost model: park (keeps the KV)
+    assert park_or_recompute(must_free_blocks=0, kv_tokens=4096) == "park"
+
+
+def test_recompute_cost_monotone_and_priced():
+    spec = AttnSpec(num_q_heads=8, num_kv_heads=8, head_dim=64)
+    c1 = recompute_cost_s(256, spec)
+    c2 = recompute_cost_s(4096, spec)
+    assert 0.0 < c1 < c2                 # more KV -> strictly costlier
+    assert recompute_cost_s(1, spec) > PARK_RESTORE_COST_S
+    # with a spec, a seat-only preemption still parks (restore is cheaper)
+    assert park_or_recompute(must_free_blocks=0, kv_tokens=2048,
+                             spec=spec) == "park"
+
+
+# ---------------------------------------------------------------------------
+# allocator park/unpark
+# ---------------------------------------------------------------------------
+def test_allocator_park_unpark_invariants():
+    alloc = BlockAllocator(num_blocks=8, block_size=16)
+    alloc.reserve(4)
+    blocks = alloc.allocate(4)
+    alloc.park(blocks)
+    assert alloc.parked_blocks == 4
+    alloc.check_invariants()
+    # a parked block's refs may not drop below its park count
+    with pytest.raises(AssertionError):
+        alloc.release(blocks[:1])
+    alloc.check_invariants()
+    alloc.unpark(blocks)
+    assert alloc.parked_blocks == 0
+    alloc.release(blocks)
+    alloc.unreserve(4)
+    alloc.check_invariants()
+    assert alloc.free_blocks == 8
+
+
+def test_allocator_park_requires_live_blocks():
+    alloc = BlockAllocator(num_blocks=4, block_size=16)
+    with pytest.raises(AssertionError):
+        alloc.park([0])                  # free block: nothing to park
+
+
+# ---------------------------------------------------------------------------
+# engine round-trips (real model)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine(model, params, **kw):
+    from repro.serving.engine import Engine
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("paged", True)
+    return Engine(0, model, params, **kw)
+
+
+def _mkreqs(vocab, shapes, classes=None, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, (p, n) in enumerate(shapes):
+        r = ServeRequest(i, rng.integers(0, vocab, p).astype(np.int32), n)
+        r.arrival_step = i
+        if classes:
+            r.slo_class = classes[i]
+        out.append(r)
+    return out
+
+
+def _drive(eng, reqs, max_steps=300, check=False):
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(max_steps):
+        eng.step()
+        if check:
+            eng.allocator.check_invariants()
+        if all(r.state is State.FINISHED for r in reqs):
+            break
+    assert all(r.state is State.FINISHED for r in reqs)
+    return [list(r.generated) for r in reqs]
+
+
+SHAPES = [(10, 12), (14, 12), (8, 10)]
+
+
+@pytest.mark.parametrize("mode", ["_preempt_park", "_preempt_recompute"])
+def test_engine_preempt_resume_bit_identical(setup, mode):
+    cfg, model, params = setup
+    ref = _drive(_engine(model, params, preemption=False),
+                 _mkreqs(cfg.vocab_size, SHAPES))
+    eng = _engine(model, params, preemption=True)
+    reqs = _mkreqs(cfg.vocab_size, SHAPES)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    slot = next(s for s, r in enumerate(eng.slots)
+                if r is not None and r.generated and not r.prefilling)
+    victim = eng.slots[slot]
+    getattr(eng, mode)(slot)
+    eng.allocator.check_invariants()
+    assert victim.state in (State.PREEMPTED, State.WAITING)
+    for _ in range(300):
+        eng.step()
+        eng.allocator.check_invariants()
+        if all(r.state is State.FINISHED for r in reqs):
+            break
+    got = [list(r.generated) for r in reqs]
+    assert got == ref
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert victim.preemptions == 1
+
+
+def test_engine_uniform_class_fcfs_parity(setup):
+    """preemption=True with single-class distinct-arrival traffic is
+    bit-identical to preemption=False (the default-on safety claim)."""
+    cfg, model, params = setup
+    shapes = [(int(p), 10) for p in
+              np.random.default_rng(1).integers(8, 20, 6)]
+    a = _drive(_engine(model, params, max_slots=2, max_seq=64,
+                       preemption=False),
+               _mkreqs(cfg.vocab_size, shapes, seed=1))
+    eng = _engine(model, params, max_slots=2, max_seq=64, preemption=True)
+    b = _drive(eng, _mkreqs(cfg.vocab_size, shapes, seed=1), check=True)
+    assert a == b
+    assert eng.preemptions == 0
+
+
+def test_engine_natural_seat_preemption(setup):
+    """Batch work holding every seat gets preempted when interactive
+    arrives; everyone still finishes and invariants hold throughout."""
+    cfg, model, params = setup
+    eng = _engine(model, params, max_slots=2, max_seq=96, preemption=True)
+    rng = np.random.default_rng(2)
+    batch = _mkreqs(cfg.vocab_size, [(12, 40), (12, 40)],
+                    classes=["batch", "batch"], seed=2)
+    for r in batch:
+        eng.submit(r)
+    for _ in range(8):
+        eng.step()
+    it = ServeRequest(99, rng.integers(0, cfg.vocab_size, 10)
+                      .astype(np.int32), 8)
+    it.slo_class = "interactive"
+    it.arrival_step = 8
+    eng.submit(it)
+    everyone = batch + [it]
+    for _ in range(400):
+        eng.step()
+        eng.allocator.check_invariants()
+        if all(r.state is State.FINISHED for r in everyone):
+            break
+    assert all(r.state is State.FINISHED for r in everyone)
+    assert eng.preemptions > 0
+    assert eng.resumes > 0
+    # the interactive request got served way before the batch drain
+    assert it.first_token_step - it.arrival_step < 12
+
+
+# ---------------------------------------------------------------------------
+# sim: preemptive beats FCFS on interactive goodput-under-SLO
+# ---------------------------------------------------------------------------
+def test_sim_preemptive_beats_fcfs_interactive_goodput():
+    from repro.sim.experiment import make_policy, run_policy
+    from repro.sim.workload import generate_slo, slo_spec
+    reqs = generate_slo(slo_spec(14.0, 25.0, seed=7, max_context=8192))
+    got = {}
+    for preempt in (False, True):
+        pol = make_policy("cascade", "llama3.2-3b", 2)
+        res = run_policy("llama3.2-3b", pol, reqs, 25.0, E=2,
+                         capacity_tokens=14_000.0, seed=0,
+                         prefill_token_budget=512, preemption=preempt)
+        got[preempt] = (res.slo_summary(), res.preemption_stats())
+    g_fcfs = got[False][0]["interactive"]["goodput_tok_s"]
+    g_pre = got[True][0]["interactive"]["goodput_tok_s"]
+    assert got[True][1]["preemptions"] > 0
+    assert got[False][1]["preemptions"] == 0
+    assert g_pre > g_fcfs
+    # per-class summary is complete and internally consistent
+    for cls, d in got[True][0].items():
+        assert d["goodput_tokens"] <= d["tokens"]
+        assert 0.0 <= d["attainment"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# server: same claim over real engines + summary surface
+# ---------------------------------------------------------------------------
+def _contention_server(model, params, preemption):
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.serving.server import MILSServer, ServerConfig
+    plan = PipelinePlan([Stage(0.0, float("inf"), 1)], 0.0)
+    cfg = ServerConfig(policy="cascade", refinement="none",
+                       balancing="inter-stage", preemption=preemption,
+                       slo_time_scale=40.0)
+    return MILSServer(model, params, plan, None, cfg,
+                      max_slots=2, max_seq=128, paged=True)
+
+
+def _contention_trace(vocab):
+    rng = np.random.default_rng(3)
+    trace = []
+    for i in range(2):
+        r = ServeRequest(i, rng.integers(0, vocab, 16).astype(np.int32), 70)
+        r.slo_class = "batch"
+        trace.append((r, 0))
+    for i in range(2):
+        r = ServeRequest(10 + i, rng.integers(0, vocab, 12)
+                         .astype(np.int32), 8)
+        r.slo_class = "interactive"
+        trace.append((r, 10))
+    return trace
+
+
+def test_server_preemptive_beats_fcfs_interactive_goodput(setup):
+    cfg, model, params = setup
+    summaries = {}
+    for preempt in (False, True):
+        srv = _contention_server(model, params, preempt)
+        for req, step in _contention_trace(cfg.vocab_size):
+            srv.submit_at(req, step)
+        srv.run(max_steps=600)
+        for eng in srv.engines:
+            eng.allocator.check_invariants()
+        summaries[preempt] = srv.summary()
+    s_pre, s_fcfs = summaries[True], summaries[False]
+    assert s_pre["preemptions"] > 0 and s_pre["resumes"] > 0
+    assert s_fcfs["preemptions"] == 0
+    assert s_pre["slo_interactive_goodput_tok_step"] \
+        > s_fcfs["slo_interactive_goodput_tok_step"]
+    assert s_pre["slo_interactive_attainment"] \
+        > s_fcfs["slo_interactive_attainment"]
+    # the summary reports every class present in the trace
+    for key in ("slo_interactive_attainment", "slo_batch_attainment",
+                "slo_interactive_requests", "slo_batch_requests",
+                "preempt_recomputes"):
+        assert key in s_pre

@@ -1,0 +1,162 @@
+"""Workload-generator properties: determinism, rate scaling, class mix,
+arrival curves, and server-replay round-trips (DESIGN.md §SLO
+scheduling; ROADMAP item 4's open-loop harness)."""
+import numpy as np
+import pytest
+
+from repro.sched import SLO_CLASSES
+from repro.sim.workload import (ArrivalCurve, Request, WorkloadSpec,
+                                arrival_times, burst_windows, generate,
+                                generate_longtail, generate_shared_prefix,
+                                generate_slo, rate_at, shared_prefix_spec,
+                                slo_spec, trace_requests)
+
+
+# ---------------------------------------------------------------------------
+# seed determinism: same spec -> identical trace, different seed -> not
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gen", [
+    lambda seed: generate(WorkloadSpec(rate=5.0, duration=10.0, seed=seed)),
+    lambda seed: generate_longtail(5.0, 10.0, seed=seed),
+    lambda seed: generate_shared_prefix(
+        shared_prefix_spec(5.0, 10.0, seed=seed, turns=3)),
+    lambda seed: generate_slo(slo_spec(5.0, 10.0, seed=seed)),
+])
+def test_generators_seed_deterministic(gen):
+    a, b = gen(7), gen(7)
+    assert a == b                       # frozen dataclasses compare by value
+    c = gen(8)
+    assert a != c
+
+
+def test_trace_requests_round_trip(tmp_path):
+    pairs = np.array([[100, 20], [5000, 80], [64, 8]], dtype=np.int64)
+    p = tmp_path / "trace.csv"
+    np.savetxt(p, pairs, fmt="%d", delimiter=",")
+    a = trace_requests(str(p), rate=2.0, seed=3)
+    b = trace_requests(str(p), rate=2.0, seed=3)
+    assert a == b
+    assert [(r.input_len, r.output_len) for r in a] == \
+        [tuple(row) for row in pairs.tolist()]
+    arr = [r.arrival for r in a]
+    assert arr == sorted(arr) and arr[0] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# rate scaling
+# ---------------------------------------------------------------------------
+def test_generate_rate_scaling():
+    lo = generate(WorkloadSpec(rate=2.0, duration=50.0, seed=0))
+    hi = generate(WorkloadSpec(rate=20.0, duration=50.0, seed=0))
+    assert len(hi) > 3 * len(lo)
+
+
+def test_slo_rate_scaling():
+    lo = generate_slo(slo_spec(2.0, 50.0, seed=0))
+    hi = generate_slo(slo_spec(20.0, 50.0, seed=0))
+    assert len(hi) > 3 * len(lo)
+
+
+# ---------------------------------------------------------------------------
+# arrival curves: diurnal + bursty λ(t), thinning sanity
+# ---------------------------------------------------------------------------
+def test_rate_at_diurnal_and_burst():
+    curve = ArrivalCurve(base_rate=10.0, diurnal_amp=0.5,
+                         diurnal_period=40.0, burst_factor=4.0)
+    t = np.array([10.0, 30.0])          # sine peak / trough
+    lam = rate_at(curve, t, windows=[])
+    assert lam[0] == pytest.approx(15.0)
+    assert lam[1] == pytest.approx(5.0)
+    lam_b = rate_at(curve, t, windows=[(25.0, 35.0)])
+    assert lam_b[0] == pytest.approx(15.0)      # outside the burst
+    assert lam_b[1] == pytest.approx(20.0)      # 4x inside
+
+def test_burst_windows_disabled_and_bounded():
+    rng = np.random.default_rng(0)
+    flat = ArrivalCurve(base_rate=5.0, burst_factor=1.0)
+    assert burst_windows(flat, 100.0, rng) == []
+    bursty = ArrivalCurve(base_rate=5.0, burst_factor=6.0,
+                          burst_every=10.0, burst_len=2.0)
+    wins = burst_windows(bursty, 100.0, np.random.default_rng(1))
+    assert wins
+    for s, e in wins:
+        assert 0.0 <= s < e <= 100.0
+
+
+def test_arrival_times_mean_rate():
+    """Thinned non-homogeneous arrivals land near the time-average rate."""
+    curve = ArrivalCurve(base_rate=20.0, diurnal_amp=0.5,
+                         diurnal_period=60.0, burst_factor=4.0,
+                         burst_every=20.0, burst_len=2.0)
+    duration = 240.0
+    rng = np.random.default_rng(2)
+    times, wins = arrival_times(curve, duration, rng)
+    assert np.all(np.diff(times) >= 0.0)
+    assert np.all((times >= 0.0) & (times <= duration))
+    grid = np.linspace(0.0, duration, 20_001)
+    lam = rate_at(curve, grid, wins)
+    expect = float(np.sum((lam[1:] + lam[:-1]) / 2.0 * np.diff(grid)))
+    assert abs(len(times) - expect) < 4 * np.sqrt(expect)
+
+
+# ---------------------------------------------------------------------------
+# SLO trace shape: class mix, tenant prefixes, length sanity
+# ---------------------------------------------------------------------------
+def test_generate_slo_class_mix_proportions():
+    mix = (("interactive", 0.6), ("batch", 0.4))
+    reqs = generate_slo(slo_spec(40.0, 60.0, seed=5, class_mix=mix))
+    assert len(reqs) > 500
+    counts = {c: 0 for c in SLO_CLASSES}
+    for r in reqs:
+        counts[r.slo_class] += 1
+    assert counts["standard"] == 0
+    frac = counts["interactive"] / len(reqs)
+    assert 0.52 < frac < 0.68
+
+
+def test_generate_slo_request_invariants():
+    reqs = generate_slo(slo_spec(15.0, 40.0, seed=9))
+    assert reqs
+    spec_max = 131_072
+    tenants = set()
+    for r in reqs:
+        assert isinstance(r, Request)
+        assert r.slo_class in SLO_CLASSES
+        assert 16 <= r.input_len <= spec_max - 64
+        assert r.output_len >= 4
+        assert r.input_len + r.output_len <= spec_max
+        if r.prefix_group >= 0:
+            assert 0 < r.prefix_len <= r.input_len - 16
+            tenants.add(r.prefix_group)
+        else:
+            assert r.prefix_len == 0
+    assert 1 < len(tenants) <= 8        # Zipf population actually multi-tenant
+
+
+def test_generate_slo_batch_tail():
+    """The Pareto tail rides on batch prompts only."""
+    reqs = generate_slo(slo_spec(30.0, 60.0, seed=11))
+    batch = [r.input_len for r in reqs if r.slo_class == "batch"]
+    other = [r.input_len for r in reqs if r.slo_class != "batch"]
+    assert batch and other
+    assert max(batch) > 32_000          # tail fired
+    assert max(other) < 32_000          # interactive/standard stay short
+
+
+def test_requests_from_trace_round_trip():
+    """Server replay preserves ids, classes and prefix groups, and caps
+    lengths to the reduced engine."""
+    from repro.serving.server import requests_from_trace
+    reqs = generate_slo(slo_spec(10.0, 20.0, seed=4))
+    out = requests_from_trace(reqs, vocab_size=512, max_seq=128, seed=0)
+    assert len(out) == len(reqs)
+    for (sr, step), r in zip(out, reqs):
+        assert sr.req_id == r.req_id
+        assert sr.slo_class == r.slo_class
+        assert sr.prefix_group == r.prefix_group
+        assert len(sr.prompt) + sr.max_new_tokens <= 128
+        assert step == int(round(r.arrival))
+    # same trace, same seed -> identical prompts (replay determinism)
+    out2 = requests_from_trace(reqs, vocab_size=512, max_seq=128, seed=0)
+    assert all(np.array_equal(a[0].prompt, b[0].prompt)
+               for a, b in zip(out, out2))
