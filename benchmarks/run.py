@@ -35,6 +35,8 @@ MODULES = [
                               # prefill work skipped; shared-prefix sim
     "bench_slo_sched",        # §SLO scheduling: preemptive vs FCFS
                               # goodput-under-SLO + bit-identical resume
+    "bench_fault_tolerance",  # §Fault tolerance: kill 1 of 4 instances
+                              # mid-trace; conservation + bounded p99
 ]
 
 

@@ -19,6 +19,10 @@ simulated transfers) and ``repro.serving.server.MILSServer``
 from repro.control.bidask import (Bid, MigRequest, ReceiverState,  # noqa: F401
                                   SenderState, is_overloaded,
                                   select_receiver)
+from repro.control.faults import (HEALTH_ALIVE, HEALTH_DEAD,  # noqa: F401
+                                  HEALTH_SUSPECT, XFER_LOST, XFER_OK,
+                                  XFER_STALL, BackoffPolicy, FaultInjector,
+                                  FaultSpec)
 from repro.control.plane import (ControlConfig, ControlPlane,  # noqa: F401
                                  StageState)
 from repro.control.protocol import (MIG_COMPLETED, MIG_FAILED,  # noqa: F401

@@ -192,3 +192,13 @@ class ReceiverState:
         self.fails.pop(req_id, None)
         if self.waiting_for == req_id:
             self.waiting_for = None
+
+    def drain(self) -> List[MigRequest]:
+        """Empty the queue (receiver died): every won offer is returned
+        so the caller can unwind the matching sender state, and all
+        starvation bookkeeping resets with the instance."""
+        out = [item[-1] for item in self._heap]
+        self._heap.clear()
+        self.fails.clear()
+        self.waiting_for = None
+        return out

@@ -34,6 +34,8 @@ import numpy as np
 
 from repro.control.bidask import (Bid, MigRequest, ReceiverState, SenderState,
                                   is_overloaded, select_receiver)
+from repro.control.faults import (HEALTH_ALIVE, HEALTH_DEAD, HEALTH_SUSPECT,
+                                  BackoffPolicy)
 from repro.control.protocol import (MIG_COMPLETED, MIG_FAILED, MIG_STARTED,
                                     ClusterOps, InstanceView, ReqView)
 from repro.control.refinement import (BoundaryRefiner, memory_based_split,
@@ -59,6 +61,19 @@ class ControlConfig:
     # synchronous drivers additionally bound moves per tick (begin_tick()).
     max_migrations_per_tick: int = 0     # 0 = uncapped (async drivers)
     seed: int = 0
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
+    # liveness thresholds, in the DRIVER's clock (the units it passes to
+    # heartbeat/check_liveness: sim seconds, server steps). An instance
+    # with no heartbeat for suspect_after units stops receiving new work;
+    # after dead_after it is declared dead and its residents recovered.
+    suspect_after: float = 3.0
+    dead_after: float = 6.0
+    # retry schedule for failed migrations (receiver refusal, transfer
+    # timeout, receiver death) — measured in pump rounds
+    mig_backoff: BackoffPolicy = BackoffPolicy()
+    # how many times a request may be re-dispatched off dead instances
+    # before it is surfaced as failed instead of retried again
+    redispatch_budget: int = 2
 
 
 @dataclasses.dataclass
@@ -102,9 +117,25 @@ class ControlPlane:
         self._dst_of: Dict[int, int] = {}                # in-flight transfers
         self._rr: Dict[int, int] = {}
         self._tick_started = 0
+        # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
+        # liveness: driver-clock heartbeats; everything starts alive
+        self.health: Dict[int, str] = {i: HEALTH_ALIVE for i in self._order}
+        self.last_seen: Dict[int, float] = {}
+        # migration backoff: pump rounds are the plane's retry clock
+        # (pump_all() advances it — every driver already calls that
+        # periodically), so legacy drivers that never heartbeat still get
+        # working retries
+        self._round = 0
+        self._mig_fails: Dict[int, int] = {}         # req_id -> failures
+        self._mig_not_before: Dict[int, float] = {}  # req_id -> round
+        self._mig_banned: set = set()                # gave up migrating
+        self._redispatch_count: Dict[int, int] = {}
         # telemetry
         self.migrations = 0
         self.migrations_by_stage: Dict[Tuple[int, int], int] = {}
+        self.retries = 0          # failed migration attempts (backoff'd)
+        self.redispatches = 0     # dead-instance recoveries performed
+        self.failed_ids: set = set()
         self.decisions: List[Tuple] = []
 
     # ---- observability ------------------------------------------------------
@@ -113,6 +144,64 @@ class ControlPlane:
 
     def pending_ids(self) -> set:
         return set(self._pending)
+
+    def instance_health(self) -> Dict[int, str]:
+        return dict(self.health)
+
+    # ---- liveness (DESIGN.md §Fault tolerance) ------------------------------
+    def _alive(self, iid: int) -> bool:
+        return self.health.get(iid, HEALTH_ALIVE) == HEALTH_ALIVE
+
+    def heartbeat(self, iid: int, now: float) -> None:
+        """Driver-reported proof of life. Any heartbeat restores alive;
+        a heartbeat from a DEAD instance is a rejoin — the driver must
+        have rebuilt/cleared the instance first (`instance_down` wiped
+        the old state), and stage coverage re-expands automatically
+        because every health filter recomputes per decision."""
+        self.last_seen[iid] = now
+        state = self.health.get(iid, HEALTH_ALIVE)
+        if state != HEALTH_ALIVE:
+            self.health[iid] = HEALTH_ALIVE
+            if state == HEALTH_DEAD:
+                self.decisions.append(("rejoin", iid))
+
+    def check_liveness(self, now: float) -> None:
+        """Transition instances whose heartbeats stopped: alive ->
+        suspect (stop routing to it) -> dead (expire its offers, recover
+        its residents). Thresholds are ControlConfig.suspect_after /
+        dead_after in the driver's clock."""
+        for iid in self._order:
+            if self.health[iid] == HEALTH_DEAD:
+                continue
+            seen = self.last_seen.get(iid)
+            if seen is None:
+                self.last_seen[iid] = now    # first observation
+                continue
+            dt = now - seen
+            if dt >= self.cfg.dead_after:
+                self._mark_dead(iid)
+            elif dt >= self.cfg.suspect_after \
+                    and self.health[iid] == HEALTH_ALIVE:
+                self.health[iid] = HEALTH_SUSPECT
+                self.decisions.append(("suspect", iid))
+
+    def _healthy_stage(self, si: int) -> Tuple[int, List[int]]:
+        """Alive instances serving stage ``si``. A stage whose instances
+        are all down folds into its neighbors — later stages first (they
+        can hold longer sequences), then earlier — so the length
+        partition degrades gracefully instead of black-holing a range.
+        Returns (effective_stage, ids); ids is empty only when the whole
+        cluster is down."""
+        ids = [i for i in self.stages[si].instance_ids if self._alive(i)]
+        if ids:
+            return si, ids
+        for sj in (list(range(si + 1, len(self.stages)))
+                   + list(range(si - 1, -1, -1))):
+            ids = [i for i in self.stages[sj].instance_ids
+                   if self._alive(i)]
+            if ids:
+                return sj, ids
+        return si, []
 
     # ---- routing (§3.2) -----------------------------------------------------
     def stage_for(self, length: float) -> int:
@@ -141,15 +230,18 @@ class ControlPlane:
         their TTFT deadline cannot absorb a deep queue RR might assign —
         while standard/batch keep the RR rotation that spreads prefix
         diversity."""
+        alive = [i for i in self._order if self._alive(i)] or self._order
         if self.cfg.policy == "round-robin":
             c = self._rr.get(_RR_GLOBAL, 0)
             self._rr[_RR_GLOBAL] = c + 1
-            iid = self._order[c % len(self._order)]
+            iid = alive[c % len(alive)]
         elif self.cfg.policy == "least-loaded":
-            iid = min(self._order, key=lambda i: self.instances[i].load())
+            iid = min(alive, key=lambda i: self.instances[i].load())
         else:
-            si = self.stage_for(max(length - cached_tokens, 1.0))
-            ids = self.stages[si].instance_ids
+            si, ids = self._healthy_stage(
+                self.stage_for(max(length - cached_tokens, 1.0)))
+            if not ids:            # whole cluster down: legacy placement
+                ids = self.stages[si].instance_ids
             c = self._rr.get(si, 0)
             self._rr[si] = c + 1
             if prefix_digest is not None:
@@ -178,8 +270,8 @@ class ControlPlane:
     # ---- growth-triggered handover (§3.2) -----------------------------------
     def on_instance_iteration(self, inst_id: int) -> None:
         """Offer every request that outgrew its stage to the next stage."""
-        if self.cfg.policy != "cascade":
-            return
+        if self.cfg.policy != "cascade" or not self._alive(inst_id):
+            return                 # a dead instance's view is stale
         si = self.stage_of_instance[inst_id]
         hi = self.stages[si].hi
         if hi == float("inf"):
@@ -187,7 +279,8 @@ class ControlPlane:
         for rv in self.instances[inst_id].requests():
             if rv.length >= hi and rv.req_id not in self._pending:
                 nxt = min(si + 1, len(self.stages) - 1)
-                self._offer(inst_id, rv, self.stages[nxt].instance_ids)
+                _, cands = self._healthy_stage(nxt)
+                self._offer(inst_id, rv, cands)
 
     def handover_all(self) -> None:
         for iid in self._order:
@@ -204,13 +297,16 @@ class ControlPlane:
     # ---- bid-ask negotiation (§4.4) -----------------------------------------
     def _offer(self, src_id: int, rv: ReqView,
                candidate_ids: Sequence[int]) -> None:
+        if not self._mig_ready(rv.req_id):
+            return                 # banned, or backing off after failures
         sender = self.senders[src_id]
         mig = MigRequest(rv.req_id, int(rv.length), src_id,
                          slo_priority=priority_of(rv.slo_class))
         sender.offer(mig)
         self._pending[rv.req_id] = (rv.ref, src_id)
         cands = [self.instances[i] for i in candidate_ids
-                 if i != src_id and self.instances[i].can_accept(rv.ref)]
+                 if i != src_id and self._alive(i)
+                 and self.instances[i].can_accept(rv.ref)]
         if self.cfg.balancing == "rr":
             # Fig.-16 ablation: hand over round-robin, no negotiation
             c = self._rr.get(_RR_HANDOVER, 0)
@@ -243,6 +339,8 @@ class ControlPlane:
             # starved-first gate admits it as soon as it is free);
             # otherwise sender and receiver deadlock on each other
             req_id = recv.waiting_for
+            if not self._mig_ready(req_id):
+                return               # blocked AND backing off: wait it out
             mig = recv.take(req_id)          # clears the block
             if mig is None:
                 return
@@ -250,19 +348,38 @@ class ControlPlane:
                 recv.win(mig)
                 recv.waiting_for = req_id    # still blocked: sender busy
             return
-        while True:
-            mig, starved = recv.next_pull(self._sender_busy)
-            if starved is not None:
-                entry = self._pending.get(starved)
-                if entry is not None:
-                    self.senders[entry[1]].mark_starved(starved)
-            if mig is None:
-                return
-            if not self._begin_transfer(mig, rid):
-                recv.win(mig)          # put back; retry on next pump
-                return
+        deferred: List[MigRequest] = []      # backoff-gated, re-queued below
+        try:
+            while True:
+                mig, starved = recv.next_pull(self._sender_busy)
+                if starved is not None:
+                    entry = self._pending.get(starved)
+                    if entry is not None:
+                        self.senders[entry[1]].mark_starved(starved)
+                if mig is None:
+                    return
+                if not self._mig_ready(mig.req_id):
+                    if mig.req_id in self._mig_banned:
+                        # retry budget exhausted: cancel the negotiation,
+                        # the request completes on its source
+                        entry = self._pending.pop(mig.req_id, None)
+                        if entry is not None:
+                            self.senders[entry[1]].drop(mig.req_id)
+                        continue
+                    # backing off: skip WITHOUT a starvation fail, try the
+                    # next queued offer
+                    deferred.append(mig)
+                    continue
+                if not self._begin_transfer(mig, rid):
+                    recv.win(mig)      # put back; retry on next pump
+                    return
+        finally:
+            for m in deferred:
+                recv.win(m)
 
     def pump_all(self) -> None:
+        # one pump round = one unit of the migration-backoff clock
+        self._round += 1
         for rid in self._order:
             if len(self.receivers[rid]):
                 self._pump(rid)
@@ -284,9 +401,43 @@ class ControlPlane:
             self._pending.pop(req_id, None)
             recv.take(req_id)
 
+    # ---- migration retry backoff (DESIGN.md §Fault tolerance) ---------------
+    def _mig_ready(self, req_id: int) -> bool:
+        """May this request attempt (or be offered for) a migration now?
+        False while banned or inside its backoff window."""
+        if req_id in self._mig_banned:
+            return False
+        return self._round >= self._mig_not_before.get(req_id, 0)
+
+    def _note_mig_failure(self, req_id: int) -> bool:
+        """Record a counted migration failure (receiver refusal, wire
+        timeout, receiver death — NOT benign sender-busy / tick-budget
+        defers). Returns True when the retry budget is exhausted: the
+        request is permanently banned from migrating (it completes on
+        its source), which is the strict no-spin bound — total attempts
+        are <= max_retries + 1."""
+        self.retries += 1
+        n = self._mig_fails.get(req_id, 0) + 1
+        self._mig_fails[req_id] = n
+        pol = self.cfg.mig_backoff
+        if n > pol.max_retries:
+            self._mig_banned.add(req_id)
+            self._mig_not_before.pop(req_id, None)
+            self.decisions.append(("mig_giveup", req_id))
+            return True
+        self._mig_not_before[req_id] = self._round + pol.delay(n)
+        return False
+
+    def _cancel_offer(self, req_id: int) -> None:
+        """Unwind a live negotiation without penalizing the request."""
+        entry = self._pending.pop(req_id, None)
+        if entry is not None:
+            self.senders[entry[1]].drop(req_id)
+
     def _begin_transfer(self, mig: MigRequest, dst_id: int) -> bool:
-        """Returns True when the pull was consumed (transfer started or the
-        offer was stale), False when the receiver should retry later."""
+        """Returns True when the pull was consumed (transfer started, the
+        offer was stale, or the negotiation was cancelled), False when
+        the receiver should retry later."""
         entry = self._pending.get(mig.req_id)
         if entry is None:
             return True                # already finalized elsewhere
@@ -299,10 +450,18 @@ class ControlPlane:
             self._pending.pop(mig.req_id, None)
             return True
         if not sender.can_transmit(mig.req_id):
-            return False
-        # §5 flow control: stay on the source unless the receiver can admit
-        # the request right now and the migration budget allows the move
-        if not self._tick_ok() or not dst.can_accept(ref):
+            return False               # benign defer: no backoff penalty
+        if not self._tick_ok():
+            return False               # benign defer: budget resets next tick
+        # §5 flow control: stay on the source unless the receiver is alive
+        # and can admit the request right now. A refusal here is a COUNTED
+        # failure (unlike the defers above): retries run through the
+        # capped exponential backoff, and past the budget the negotiation
+        # is cancelled for good.
+        if not self._alive(dst_id) or not dst.can_accept(ref):
+            if self._note_mig_failure(mig.req_id):
+                self._cancel_offer(mig.req_id)
+                return True            # consumed: banned, stays on source
             return False
         sender.begin(mig.req_id)
         self._tick_started += 1
@@ -310,6 +469,9 @@ class ControlPlane:
         if status == MIG_FAILED:
             sender.abort(mig.req_id)
             self._tick_started -= 1
+            if self._note_mig_failure(mig.req_id):
+                self._cancel_offer(mig.req_id)
+                return True
             return False
         assert status in (MIG_STARTED, MIG_COMPLETED), status
         self.decisions.append(("migrate", mig.req_id, src_id, dst_id))
@@ -340,14 +502,110 @@ class ControlPlane:
                     self.migrations_by_stage.get(key, 0) + 1
         if dst_id is not None:
             self.receivers[dst_id].complete(req_id)
+        # the negotiation ended: earlier refusal penalties are moot
+        self._mig_fails.pop(req_id, None)
+        self._mig_not_before.pop(req_id, None)
         return dst_id
+
+    # ---- failure handling (DESIGN.md §Fault tolerance) ----------------------
+    def migration_failed(self, req_id: int) -> None:
+        """Backend/driver reports that a STARTED transfer will never land
+        (wire timeout, lost payload, receiver died mid-flight). Rolls the
+        negotiation back so the request survives on its source, applies
+        the retry backoff, and wakes the receiver. Idempotent — a late
+        timeout racing a completed transfer is a no-op."""
+        dst_id = self._dst_of.pop(req_id, None)
+        entry = self._pending.pop(req_id, None)
+        if entry is None and dst_id is None:
+            return                     # already settled elsewhere
+        if entry is not None:
+            sender = self.senders[entry[1]]
+            if sender.transmitting == req_id:
+                sender.finish(req_id)  # frees the (serialized) uplink
+            else:
+                sender.drop(req_id)
+        if dst_id is not None:
+            self.receivers[dst_id].complete(req_id)
+        self.decisions.append(("mig_fail", req_id))
+        self._note_mig_failure(req_id)
+        if dst_id is not None:
+            self._pump(dst_id)
+
+    def _mark_dead(self, iid: int) -> None:
+        """Liveness declared this instance dead: fail its in-flight
+        transfers, expire its bid-ask offers, reset its negotiation
+        state, then recover every resident request."""
+        self.health[iid] = HEALTH_DEAD
+        self.decisions.append(("dead", iid))
+        # in-flight transfers touching the dead instance fail — either
+        # endpoint of the wire is gone
+        for req_id in [r for r, d in list(self._dst_of.items())
+                       if d == iid
+                       or self._pending.get(r, (None, None))[1] == iid]:
+            self.migration_failed(req_id)
+        # won-but-unstarted offers destined HERE return to their senders
+        for mig in self.receivers[iid].drain():
+            self._cancel_offer(mig.req_id)
+        # offers sourced here vanish with the instance, wherever queued
+        for req_id in [r for r, (_, s) in list(self._pending.items())
+                       if s == iid]:
+            self._pending.pop(req_id, None)
+            for recv in self.receivers.values():
+                recv.take(req_id)
+        self.senders[iid] = SenderState(iid)
+        self.receivers[iid] = ReceiverState(iid)
+        # recover residents: snapshot BEFORE the backend clears the
+        # carcass (all_requests when the view has it — queued/parked
+        # requests die with their instance just like running ones)
+        view = self.instances[iid]
+        allreq = getattr(view, "all_requests", None)
+        residents = list(allreq() if callable(allreq) else view.requests())
+        down = getattr(self.ops, "instance_down", None)
+        if callable(down):
+            down(iid)
+        for rv in residents:
+            self._redispatch(rv)
+
+    def _redispatch(self, rv: ReqView) -> None:
+        """Recover one resident of a dead instance. Its KV is gone, so
+        the backend must replay prompt + generated-so-far on a healthy
+        instance (ClusterOps.redispatch). Over the budget — or with no
+        healthy target, or a backend without the hook — the request
+        surfaces as failed instead of hanging the run."""
+        rid = rv.req_id
+        # fresh life: migration penalties died with the instance
+        self._mig_fails.pop(rid, None)
+        self._mig_not_before.pop(rid, None)
+        self._mig_banned.discard(rid)
+        n = self._redispatch_count.get(rid, 0) + 1
+        self._redispatch_count[rid] = n
+        redo = getattr(self.ops, "redispatch", None)
+        si, ids = self._healthy_stage(self.stage_for(max(rv.length, 1.0)))
+        if n > self.cfg.redispatch_budget or not callable(redo) or not ids:
+            self._fail(rv)
+            return
+        c = self._rr.get(si, 0)        # shared stage RR counter: parity-
+        self._rr[si] = c + 1           # deterministic across backends
+        iid = ids[c % len(ids)]
+        self.decisions.append(("redispatch", rid, iid))
+        if redo(rv.ref, iid):
+            self.redispatches += 1
+        else:
+            self._fail(rv)             # target cannot replay this request
+
+    def _fail(self, rv: ReqView) -> None:
+        self.failed_ids.add(rv.req_id)
+        self.decisions.append(("fail", rv.req_id))
+        fail = getattr(self.ops, "fail_request", None)
+        if callable(fail):
+            fail(rv.ref)
 
     # ---- intra-stage rebalancing (§4.4) -------------------------------------
     def balance(self) -> None:
         if self.cfg.policy != "cascade" or self.cfg.balancing != "full":
             return
         for stage in self.stages:
-            ids = stage.instance_ids
+            ids = [i for i in stage.instance_ids if self._alive(i)]
             if len(ids) < 2:
                 continue
             loads = {i: self.instances[i].load() for i in ids}
@@ -377,9 +635,11 @@ class ControlPlane:
             return
         for bi in range(len(self.stages) - 1):
             own = [rv for i in self.stages[bi].instance_ids
+                   if self._alive(i)        # dead views are stale
                    for rv in self.instances[i].request_view()]
             succ = [self.instances[i].request_view()
-                    for i in self.stages[bi + 1].instance_ids]
+                    for i in self.stages[bi + 1].instance_ids
+                    if self._alive(i)]
             if self.cfg.refinement == "adaptive":
                 b = self.refiners[bi].refine(own, succ)
             else:

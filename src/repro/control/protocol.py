@@ -114,6 +114,14 @@ class InstanceView(Protocol):
         stay on the source."""
         ...
 
+    def all_requests(self) -> List[ReqView]:
+        """EVERY resident request — running, waiting, parked — regardless
+        of migratability. Dead-instance recovery enumerates these (a
+        queued request dies with its instance just as surely as a running
+        one). Optional: the core falls back to :meth:`requests` on views
+        that predate fault tolerance."""
+        ...
+
 
 @runtime_checkable
 class ClusterOps(Protocol):
@@ -134,4 +142,36 @@ class ClusterOps(Protocol):
         """Observe a refined stage boundary (stage ``stage_idx`` now ends
         at ``hi``). The core owns the authoritative bounds; this hook is
         for backend-side mirrors/telemetry."""
+        ...
+
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) --------------------
+    # The three hooks below are OPTIONAL: the core resolves them via
+    # getattr, and backends that predate fault tolerance simply lose the
+    # recovery behaviors (requests on a dead instance are reported failed
+    # instead of re-dispatched).
+
+    def redispatch(self, ref: Any, instance_id: int) -> bool:
+        """Re-place a request recovered from a dead instance: its KV is
+        gone, so the backend must rebuild state by replaying
+        ``prompt + generated-so-far`` through (chunked) prefill on
+        ``instance_id`` — the same drop-and-recompute machinery
+        preemption uses, so the continuation stays bit-identical.
+        Returns False when the target cannot replay (e.g. no chunked
+        prefill for a mid-decode resume); the core then fails the
+        request."""
+        ...
+
+    def fail_request(self, ref: Any) -> None:
+        """Mark a request permanently failed (retry budget exhausted or
+        no healthy replay target): the backend must surface it as
+        ``failed`` in its accounting and release any bookkeeping so
+        drain loops terminate — a failed request must never hang the
+        run."""
+        ...
+
+    def instance_down(self, instance_id: int) -> None:
+        """The core declared this instance dead. The backend clears the
+        carcass (queues, reservations, transfer state) so a later rejoin
+        starts from an empty instance. Called after the core snapshots
+        the residents it will re-dispatch."""
         ...

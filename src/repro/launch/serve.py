@@ -95,8 +95,45 @@ def main() -> None:
                     help="SLO-scale sweep knob (paper §6.4)")
     ap.add_argument("--slo-time-scale", type=float, default=1.0,
                     help="engine steps per abstract SLO second")
+    ap.add_argument("--crash", action="append", default=[],
+                    metavar="ENGINE:STEP",
+                    help="chaos: kill engine ENGINE at step STEP "
+                         "(repeatable; DESIGN.md §Fault tolerance)")
+    ap.add_argument("--rejoin", action="append", default=[],
+                    metavar="ENGINE:STEP",
+                    help="chaos: revive a crashed engine at step STEP "
+                         "(fresh state; its old residents were already "
+                         "re-dispatched)")
+    ap.add_argument("--transfer-loss-p", type=float, default=0.0,
+                    help="chaos: probability a migration transfer is "
+                         "lost on the wire (rolled back after timeout)")
+    ap.add_argument("--transfer-stall-p", type=float, default=0.0,
+                    help="chaos: probability a transfer stalls past its "
+                         "deadline (delivered late, treated as lost)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic fault injector")
+    ap.add_argument("--migration-timeout-steps", type=int, default=4,
+                    help="steps before an in-flight transfer is rolled "
+                         "back to its sender")
+    ap.add_argument("--dead-after-steps", type=int, default=6,
+                    help="heartbeat-free steps before an engine is "
+                         "declared dead and its residents re-dispatched")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    def _events(specs):
+        return tuple((int(e), float(s)) for e, s in
+                     (item.split(":", 1) for item in specs))
+
+    faults = None
+    if args.crash or args.rejoin or args.transfer_loss_p > 0 \
+            or args.transfer_stall_p > 0:
+        from repro.control.faults import FaultSpec
+        faults = FaultSpec(seed=args.fault_seed,
+                           crashes=_events(args.crash),
+                           rejoins=_events(args.rejoin),
+                           transfer_loss_p=args.transfer_loss_p,
+                           transfer_stall_p=args.transfer_stall_p)
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
@@ -109,7 +146,11 @@ def main() -> None:
                                   balancing=args.balancing, seed=args.seed,
                                   preemption=args.preemption,
                                   slo_scale=args.slo_scale,
-                                  slo_time_scale=args.slo_time_scale),
+                                  slo_time_scale=args.slo_time_scale,
+                                  faults=faults,
+                                  migration_timeout_steps=
+                                  args.migration_timeout_steps,
+                                  dead_after_steps=args.dead_after_steps),
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,
                      kv_dtype=args.kv_dtype,

@@ -342,3 +342,16 @@ class BlockAllocator:
             assert n > 0 and self._refs[b] >= n, \
                 f"parked block {b} under-referenced"
             assert b not in self._free_set and b not in self._reclaimable
+
+    def check_drained(self) -> None:
+        """A drained allocator holds NOTHING on behalf of requests: no
+        reservations, no parked blocks, no referenced blocks. Reclaimable
+        cached chains (refcount 0, content-indexed) are fine — they are
+        free capacity wearing a name (DESIGN.md §Fault tolerance: the
+        drain-time leak check every server test runs)."""
+        self.check_invariants()
+        assert self._reserved == 0, \
+            f"leaked reservations: {self._reserved} blocks"
+        assert not self._parked, f"leaked parked blocks: {self._parked}"
+        assert self.allocated_blocks == 0, \
+            f"leaked refcounts: {self.allocated_blocks} blocks still live"

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import weakref
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
@@ -76,6 +77,12 @@ DEFAULT_PREFILL_BUDGET = 256
 # Running count of device->host synchronizations performed by all engines
 # in this process (bench_decode_hotloop reads it; tests monkeypatch d2h).
 D2H_CALLS = 0
+
+# Weakrefs to every engine ever constructed in this process. The test
+# suite's drain-leak fixture walks this after each test and asserts no
+# engine is left holding reservations or parked requests (crashed
+# engines are skipped via their `_faulted` flag).
+_LIVE_ENGINES: List["weakref.ref"] = []
 
 
 def d2h(x) -> np.ndarray:
@@ -283,6 +290,39 @@ class Engine:
         self.last_grid: Dict[str, int] = {}
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("cache_len",))
+        _LIVE_ENGINES.append(weakref.ref(self))
+
+    # ---- drain-time leak check (DESIGN.md §Fault tolerance) ---------------
+    def check_drained(self, strict: bool = True) -> None:
+        """Assert this engine holds no request state. ``strict`` also
+        requires the queues to be empty (a post-run server drain);
+        non-strict only checks that ALLOCATOR state matches the resident
+        requests — the invariant conftest runs after every test, where
+        engines may legitimately still hold live requests."""
+        if strict:
+            assert all(r is None for r in self.slots), \
+                f"engine {self.id}: undrained slots"
+            assert not self.waiting, f"engine {self.id}: undrained queue"
+            assert not self.parked, f"engine {self.id}: undrained parked"
+            assert not self._prefill_order, \
+                f"engine {self.id}: dangling prefill order"
+        if self.paged:
+            self.allocator.check_invariants()
+            if strict and not any(self.slots) and not self.parked:
+                self.allocator.check_drained()
+        elif strict:
+            assert int(self.slot_reserved.sum()) == 0, \
+                f"engine {self.id}: leaked slot reservations"
+            assert int(self.slot_len.sum()) == 0, \
+                f"engine {self.id}: leaked slot lengths"
+
+    def shutdown(self) -> None:
+        """End-of-life check + release: asserts the engine drained clean,
+        then drops its device buffers."""
+        self.check_drained(strict=True)
+        self.cache = None
+        if self.paged:
+            self.block_tables = [[] for _ in self.block_tables]
 
     # ---- load views --------------------------------------------------------
     def active(self) -> List[ServeRequest]:

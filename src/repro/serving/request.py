@@ -30,6 +30,12 @@ class ServeRequest:
     slot: Optional[int] = None
     eos_token: Optional[int] = None
     rejected: bool = False            # prompt can never fit the engine
+    # fault tolerance (DESIGN.md §Fault tolerance): failed = recovery
+    # budget exhausted after its engine died (excluded from served
+    # metrics like rejected); redispatches = dead-engine recoveries this
+    # request survived (each replays prompt + generated-so-far elsewhere)
+    failed: bool = False
+    redispatches: int = 0
     # prefill progress (chunked engines): prompt tokens whose KV is
     # written. Whole-prompt paths set it to len(prompt) at prefill; a
     # migrated half-prefilled request carries it to the receiver, which

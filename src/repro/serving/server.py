@@ -26,13 +26,14 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
-from repro.control import (MIG_COMPLETED, MIG_FAILED, ControlConfig,
-                           ControlPlane, ReqView)
+from repro.control import (MIG_COMPLETED, MIG_FAILED, MIG_STARTED, XFER_OK,
+                           XFER_STALL, ControlConfig, ControlPlane,
+                           FaultInjector, FaultSpec, ReqView)
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
 from repro.serving.engine import Engine
 from repro.serving.request import ServeRequest, State
-from repro.sim.metrics import class_slo_summary
+from repro.sim.metrics import class_slo_summary, fault_summary
 from repro.sim.workload import Request
 
 TokenCallback = Callable[[ServeRequest, int], None]
@@ -57,6 +58,14 @@ class ServerConfig:
     preemption: bool = True
     slo_scale: float = 1.0             # paper §6.4 SLO-scale sweep knob
     slo_time_scale: float = 1.0        # engine steps per abstract SLO second
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
+    # None = fault-free: no heartbeats/liveness run, behavior is
+    # bit-identical to the pre-fault server. Spec times are in STEPS.
+    faults: Optional[FaultSpec] = None
+    suspect_after_steps: int = 3       # heartbeat-free steps -> suspect
+    dead_after_steps: int = 6          # -> dead, residents recovered
+    migration_timeout_steps: int = 4   # wire deadline for one transfer
+    redispatch_budget: int = 2         # dead-engine recoveries per request
 
 
 class EngineView:
@@ -100,6 +109,26 @@ class EngineView:
     def can_accept(self, req: ServeRequest) -> bool:
         return self.eng.can_accept(req)
 
+    def all_requests(self) -> List[ReqView]:
+        """Every resident — slotted, waiting, parked. Dead-engine recovery
+        re-dispatches all of them (a queued request dies with its engine
+        just as surely as a running one)."""
+        reqs = [r for r in self.eng.slots if r is not None]
+        reqs += list(getattr(self.eng, "waiting", ()))
+        for p in getattr(self.eng, "parked", ()):
+            reqs.append(getattr(p, "req", p))   # Engine parks _Parked entries
+        out, seen = [], set()
+        for r in reqs:
+            if id(r) in seen:
+                continue
+            seen.add(id(r))
+            out.append(ReqView(r, r.req_id, float(len(r.prompt)),
+                               float(r.length), ctx_done=float(r.ctx_done),
+                               ctx_total=float(r.prefill_target_len),
+                               cached_tokens=float(r.cached_tokens),
+                               slo_class=r.slo_class))
+        return out
+
 
 class _ServerOps:
     """`repro.control.protocol.ClusterOps` over the engine pool: dispatch
@@ -114,8 +143,23 @@ class _ServerOps:
 
     def start_migration(self, req: ServeRequest, src_id: int,
                         dst_id: int) -> str:
-        src = self.server.engines[src_id]
-        dst = self.server.engines[dst_id]
+        server = self.server
+        if src_id in server.crashed or dst_id in server.crashed:
+            return MIG_FAILED      # either endpoint's process is gone
+        if server.injector is not None:
+            fate = server.injector.transfer_event(req.req_id)
+            if fate != XFER_OK:
+                # lost/stalled wire: mirror the simulator's ASYNC failure
+                # sequence — report MIG_STARTED now (the plane logs
+                # "migrate", keeping decision parity) and deliver the
+                # failure when the deadline expires; the request never
+                # leaves the source
+                horizon = server.cfg.migration_timeout_steps * (
+                    2 if fate == XFER_STALL else 1)
+                server._doomed.append((server.steps + horizon, req.req_id))
+                return MIG_STARTED
+        src = server.engines[src_id]
+        dst = server.engines[dst_id]
         slot = req.slot
         if slot is None or src.slots[slot] is not req:
             return MIG_FAILED
@@ -127,6 +171,45 @@ class _ServerOps:
 
     def set_boundary(self, stage_idx: int, hi: float) -> None:
         pass                        # the core's bounds are authoritative
+
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) --------------------
+    def redispatch(self, req: ServeRequest, instance_id: int) -> bool:
+        """Recover a resident of a dead engine: its KV died with the
+        process, so replay prompt + generated-so-far through chunked
+        prefill on ``instance_id`` — the same resume machinery recompute
+        preemption uses (Engine._finish_resume), so the continuation is
+        bit-identical to a never-crashed run."""
+        dst = self.server.engines[instance_id]
+        req.redispatches += 1
+        req.slot = None
+        req.engine_id = None
+        req.ctx_done = 0
+        req.cached_tokens = 0
+        if req.generated:
+            if not getattr(dst, "chunked_prefill", False):
+                return False       # mid-decode resume needs chunked prefill
+            req.prefill_target = len(req.prompt) + len(req.generated) - 1
+            req.resume_tokens = np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.generated[:-1], np.int32)])
+        else:
+            req.prefill_target = None
+            req.resume_tokens = None
+        req.state = State.WAITING
+        dst.submit(req)
+        return True
+
+    def fail_request(self, req: ServeRequest) -> None:
+        req.failed = True
+        req.state = State.FINISHED
+        req.finish_step = self.server.steps
+        # completion of a sort: the drain loop must terminate
+        self.server.finished.append(req)
+
+    def instance_down(self, instance_id: int) -> None:
+        # replace the carcass with a fresh engine so a later rejoin
+        # starts empty (the core snapshotted the residents already)
+        self.server._reset_engine(instance_id)
 
 
 class MILSServer:
@@ -161,6 +244,7 @@ class MILSServer:
                               kv_dtype=kv_dtype,
                               preemption=cfg.preemption,
                               slo_time_scale=cfg.slo_time_scale)
+        self._engine_factory = engine_factory
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
         self.plane = ControlPlane(
@@ -168,12 +252,21 @@ class MILSServer:
             ControlConfig(policy=cfg.policy, refinement=cfg.refinement,
                           balancing=cfg.balancing,
                           max_migrations_per_tick=cfg.max_migrations_per_step,
-                          seed=cfg.seed),
+                          seed=cfg.seed,
+                          suspect_after=float(cfg.suspect_after_steps),
+                          dead_after=float(cfg.dead_after_steps),
+                          redispatch_budget=cfg.redispatch_budget),
             ops=_ServerOps(self),
             instances=[EngineView(e) for e in self.engines])
         self.steps = 0
         self.finished: List[ServeRequest] = []
         self.submitted = 0
+        # ---- fault state (DESIGN.md §Fault tolerance) ----
+        self.injector = (FaultInjector(cfg.faults)
+                         if cfg.faults is not None else None)
+        self.crashed: Dict[int, int] = {}        # engine id -> crash step
+        self.downtime_steps: Dict[int, int] = {}
+        self._doomed: List[Tuple[int, int]] = []  # (fail_at_step, req_id)
         # open-loop arrival schedule: (step, seq, request)
         self._schedule: List[Tuple[int, int, ServeRequest]] = []
         self._seq = 0
@@ -240,12 +333,69 @@ class MILSServer:
                 self.on_token(r, tok)
             self._emitted[r.req_id] = len(r.generated)
 
+    # ---- faults (DESIGN.md §Fault tolerance) ---------------------------------
+    def _crash(self, iid: int) -> None:
+        """Scripted hard-kill: the engine stops stepping and heartbeating;
+        the plane's liveness machinery discovers the death and recovers
+        the residents."""
+        self.crashed[iid] = self.steps
+        # flag the carcass so the conftest drain-leak fixture skips it
+        try:
+            self.engines[iid]._faulted = True
+        except AttributeError:
+            pass
+
+    def _reset_engine(self, iid: int) -> None:
+        """Swap in a fresh engine (ClusterOps.instance_down / rejoin):
+        the old process' state is unreachable, a rejoin starts empty."""
+        try:
+            self.engines[iid]._faulted = True
+        except AttributeError:
+            pass
+        fresh = self._engine_factory(iid)
+        self.engines[iid] = fresh
+        self.plane.instances[iid] = EngineView(fresh)
+
+    def _revive(self, iid: int) -> None:
+        self._reset_engine(iid)
+        self.crashed.pop(iid, None)
+        # the plane learns of the rejoin from the next heartbeat
+
+    def _inject_faults(self) -> None:
+        if self.injector is None:
+            return
+        for iid, at in self.cfg.faults.crashes:
+            if int(at) == self.steps and iid not in self.crashed:
+                self._crash(iid)
+        for iid, at in self.cfg.faults.rejoins:
+            if int(at) == self.steps and iid in self.crashed:
+                self._revive(iid)
+        # deliver due wire deadlines (lost/stalled transfers)
+        due = [r for s, r in self._doomed if s <= self.steps]
+        self._doomed = [(s, r) for s, r in self._doomed if s > self.steps]
+        for rid in due:
+            self.plane.migration_failed(rid)
+
+    def _engine_runs_this_step(self, eng) -> bool:
+        if eng.id in self.crashed:
+            self.downtime_steps[eng.id] = \
+                self.downtime_steps.get(eng.id, 0) + 1
+            return False
+        if self.injector is not None:
+            f = self.injector.slowdown(eng.id)
+            if f > 1.0 and self.steps % max(int(round(f)), 1) != 0:
+                return False       # slow instance: skips iterations
+        return True
+
     # ---- main loop -----------------------------------------------------------
     def step(self) -> List[ServeRequest]:
         self._release_arrivals()
         self.steps += 1
+        self._inject_faults()
         done: List[ServeRequest] = []
         for eng in self.engines:
+            if not self._engine_runs_this_step(eng):
+                continue
             fin = eng.step()
             done.extend(fin)
             self._stream(eng.active())
@@ -255,6 +405,13 @@ class MILSServer:
             self._emitted.pop(r.req_id, None)
         if self.cfg.policy == "cascade":
             self.plane.begin_tick()
+            if self.cfg.faults is not None:
+                # liveness runs only on fault-aware servers, so legacy
+                # runs stay bit-identical to the pre-fault server
+                for eng in self.engines:
+                    if eng.id not in self.crashed:
+                        self.plane.heartbeat(eng.id, float(self.steps))
+                self.plane.check_liveness(float(self.steps))
             self.plane.handover_all()
             if self.steps % self.cfg.balance_every == 0:
                 self.plane.balance()
@@ -280,6 +437,15 @@ class MILSServer:
                                        >= self.submitted):
                 break
             self.step()
+        if drain and len(self.finished) >= self.submitted:
+            # drained server = leak check: every live engine must hold no
+            # requests and no allocator state beyond reclaimable cache
+            for eng in self.engines:
+                if eng.id in self.crashed:
+                    continue
+                chk = getattr(eng, "check_drained", None)
+                if chk is not None:
+                    chk(strict=True)
         return self.finished
 
     # ---- metrics -------------------------------------------------------------
@@ -287,16 +453,22 @@ class MILSServer:
         fin = self.finished
         if not fin:
             return {"finished": 0}
-        # rejected requests never produced a token — folding their
-        # fabricated timestamps into the means would fake instant service
-        served = [r for r in fin if not r.rejected]
+        # rejected/failed requests never finished normal service — folding
+        # their fabricated timestamps into the means would fake latencies
+        served = [r for r in fin if not r.rejected and not r.failed]
         out: Dict[str, float] = {
             "finished": len(fin),
-            "rejected": sum(1 for r in fin if r.rejected),
             "steps": self.steps,
             "migrations": self.migrations,
             "tokens_out": int(sum(e.tokens_out for e in self.engines)),
         }
+        # failure accounting through the SAME formula the simulator
+        # reports (sim.metrics.fault_summary)
+        out.update(fault_summary(
+            ((r.rejected, r.failed, r.redispatches) for r in fin),
+            retries=self.plane.retries,
+            downtime={i: float(s) for i, s in self.downtime_steps.items()
+                      if s}))
         # per-stage-pair migration counts (handover vs. rebalance visibility)
         for (a, b), n in sorted(self.plane.migrations_by_stage.items()):
             out[f"migrations_s{a}_to_s{b}"] = n

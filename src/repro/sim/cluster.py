@@ -15,8 +15,9 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.control import (MIG_STARTED, ControlConfig, ControlPlane, ReqView,
-                           is_overloaded)
+from repro.control import (MIG_STARTED, XFER_LOST, XFER_OK, XFER_STALL,
+                           ControlConfig, ControlPlane, FaultInjector,
+                           FaultSpec, ReqView, is_overloaded)
 from repro.core.migration import plan_live_migration
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
@@ -53,6 +54,17 @@ class ClusterConfig:
     pump_interval: float = 0.5
     drain_factor: float = 20.0         # max extra sim time to drain
     seed: int = 0
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
+    # None = fault-free run, bit-identical to the pre-fault simulator (no
+    # heartbeat/timeout events exist to perturb event-queue tie ordering)
+    faults: Optional[FaultSpec] = None
+    # wire deadline for one migration; None = auto (4x the planned copy
+    # time + 1s). Deadline events exist only in faulty runs.
+    migration_timeout_s: Optional[float] = None
+    heartbeat_interval: float = 0.5
+    suspect_after_s: float = 3.0
+    dead_after_s: float = 6.0
+    redispatch_budget: int = 2
 
 
 class Policy:
@@ -89,6 +101,11 @@ class Cluster:
                      preemption=cfg.preemption)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
+        self.injector = (FaultInjector(cfg.faults)
+                         if cfg.faults is not None else None)
+        if self.injector is not None:
+            for inst in self.instances:
+                inst.slowdown = self.injector.slowdown(inst.id)
         self.policy = policy
         policy.attach(self)
         for inst in self.instances:
@@ -104,25 +121,41 @@ class Cluster:
             self.policy.dispatch(sr, self.events.now)
         self.events.push(req.arrival, arrive)
 
+    def _revive(self, inst: Instance) -> None:
+        inst.clear_crashed()           # idempotent: rejoin starts empty
+        inst.revive(self.events.now)
+        inst.kick(self.events.now)
+
     def run(self, requests: Sequence[Request], duration: float) -> "SimResult":
         for r in requests:
             self.submit(r)
+        if self.cfg.faults is not None:
+            # scripted chaos: crashes/rejoins are ordinary events
+            for iid, at in self.cfg.faults.crashes:
+                self.events.push(
+                    at, lambda i=self.instances[iid]: i.crash(self.events.now))
+            for iid, at in self.cfg.faults.rejoins:
+                self.events.push(
+                    at, lambda i=self.instances[iid]: self._revive(i))
         for interval, fn in self.policy.timers():
             self._periodic(interval, fn)
         self.events.run_until(duration)
-        # drain: keep going until every submitted request completes
+        # drain: keep going until every submitted request completes (a
+        # failed request counts as completed — it must not hang the run)
         t_max = duration * self.cfg.drain_factor
         while (len(self.completed) < len(requests)
                and self.events.now < t_max and len(self.events)):
             self.events.run_until(min(self.events.now + duration, t_max))
         from repro.sim.metrics import SimResult
+        plane = getattr(self.policy, "plane", None)
         return SimResult(completed=list(self.completed),
                          duration=self.events.now,
                          num_submitted=len(requests),
                          instances=self.instances,
                          policy_name=self.policy.name,
                          stage_of_instance=getattr(
-                             self.policy, "stage_of_instance", None))
+                             self.policy, "stage_of_instance", None),
+                         retries=plane.retries if plane is not None else 0)
 
     def _periodic(self, interval: float, fn: Callable[[float], None]) -> None:
         def tick():
@@ -196,6 +229,11 @@ class TransferFabric:
                  kv_bytes_per_token: Optional[float] = None):
         self.cluster = cluster
         self.kv_bytes_per_token = kv_bytes_per_token
+        # fault wiring (set by CascadePolicy.attach on faulty runs):
+        # injector decides per-attempt wire fates; on_failed(req_id)
+        # reports a transfer that will never land (-> plane rollback)
+        self.injector: Optional[FaultInjector] = None
+        self.on_failed: Optional[Callable[[int], None]] = None
 
     def direct_transfer(self, src: Instance, dst: Instance,
                         sr: SimRequest, t: float) -> bool:
@@ -233,33 +271,95 @@ class TransferFabric:
         src.migrations.start(sr.req.req_id, t + timing.total_s)
 
         pause = self.cluster.cfg.migration_pause_s + timing.stall_s
+        # fault machinery (DESIGN.md §Fault tolerance): epoch fences a
+        # receiver crash (its reservations were wiped with the carcass),
+        # `state` makes delivery and the wire deadline mutually exclusive
+        dst_ep = dst.epoch
+        state = {"settled": False}
+
+        def release():
+            if dst.alive and dst.epoch == dst_ep:
+                dst.inbound_reserved -= need
 
         def finish():
+            if state["settled"]:
+                return                 # the deadline already rolled back
+            state["settled"] = True
             now = self.cluster.events.now
             src.migrations.finish(sr.req.req_id)
             if sr.done or sr not in src.running:
-                dst.inbound_reserved -= need
+                release()
                 sr.migrating = False
                 if on_finish:
                     on_finish(False)   # completed mid-flight: drop the move
+                return
+            if not dst.alive or dst.epoch != dst_ep:
+                # receiver died with the payload on the wire: ownership
+                # never flipped, the request survives on its source
+                sr.migrating = False
+                if self.on_failed:
+                    self.on_failed(sr.req.req_id)
                 return
             src.running.remove(sr)
             src.kick(now)
 
             def adopt():     # stop-and-copy + scheduler hand-off pause
+                now2 = self.cluster.events.now
+                if not dst.alive or dst.epoch != dst_ep:
+                    # receiver died inside the hand-off pause: bounce the
+                    # request back to its source (KV still lives there —
+                    # ownership flips only at adoption)
+                    sr.migrating = False
+                    if self.on_failed:
+                        self.on_failed(sr.req.req_id)
+                    if src.alive and not sr.done:
+                        src.adopt_running(sr, now2)
+                    else:
+                        # both endpoints gone: unrecoverable
+                        sr.failed = True
+                        sr.finish_t = now2
+                        if sr.first_token_t is None:
+                            sr.first_token_t = now2
+                        self.cluster.completed.append(sr)
+                    return
                 dst.inbound_reserved -= need
                 sr.migrating = False
                 # a migrated shared prefix re-imports as PRIVATE (the
                 # wire shipped a plain contiguous copy) — matching
                 # Engine.import_request; `need` above covered true length
                 sr.cached_tokens = 0
-                dst.adopt_running(sr, self.cluster.events.now)
+                dst.adopt_running(sr, now2)
 
             self.cluster.events.push(now + pause, adopt)
             if on_finish:
                 on_finish(True)
 
-        self.cluster.events.push(t + timing.total_s, finish)
+        inj = self.injector
+        if inj is None:                # fault-free: the legacy event shape
+            self.cluster.events.push(t + timing.total_s, finish)
+            return
+        fate = inj.transfer_event(sr.req.req_id)
+        timeout = (self.cluster.cfg.migration_timeout_s
+                   or timing.total_s * 4.0 + 1.0)
+
+        def deadline():
+            if state["settled"]:
+                return                 # delivered in time
+            state["settled"] = True
+            # the payload never landed: free both endpoints' transfer
+            # state; the request never left src.running
+            src.migrations.finish(sr.req.req_id)
+            release()
+            sr.migrating = False
+            if self.on_failed:
+                self.on_failed(sr.req.req_id)
+
+        self.cluster.events.push(t + timeout, deadline)
+        if fate == XFER_LOST:
+            return                     # vanishes; only the deadline fires
+        deliver_at = (t + timeout * 2.0 if fate == XFER_STALL
+                      else t + timing.total_s)
+        self.cluster.events.push(deliver_at, finish)
 
 
 # --------------------------------------------------------------------------
@@ -304,6 +404,17 @@ class SimInstanceView:
     def can_accept(self, sr: SimRequest) -> bool:
         return self.inst.free_tokens() >= self.inst.block_tokens(sr.length)
 
+    def all_requests(self) -> List[ReqView]:
+        """Every resident — running (even mid-migration), waiting, parked.
+        Dead-instance recovery re-dispatches all of them."""
+        return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),
+                        float(sr.length), ctx_done=float(sr.ctx_done),
+                        ctx_total=float(sr.prefill_target_len),
+                        cached_tokens=float(sr.cached_tokens),
+                        slo_class=sr.req.slo_class)
+                for sr in (list(self.inst.running) + list(self.inst.waiting)
+                           + list(self.inst.parked))]
+
 
 class _SimOps:
     """`repro.control.protocol.ClusterOps` over the simulated cluster:
@@ -331,6 +442,35 @@ class _SimOps:
     def set_boundary(self, stage_idx: int, hi: float) -> None:
         pass                        # the core's bounds are authoritative
 
+    # ---- fault tolerance (DESIGN.md §Fault tolerance) --------------------
+    def redispatch(self, sr: SimRequest, instance_id: int) -> bool:
+        """Recover a resident of a dead instance: its KV died, so replay
+        prompt + generated-so-far through prefill on ``instance_id`` —
+        the same resume math recompute preemption uses, so timing (and,
+        on the real engine, tokens) match a never-crashed run."""
+        now = self.cluster.events.now
+        sr.migrating = False
+        sr.redispatches += 1
+        if sr.resume_target is None and sr.generated > 0:
+            sr.resume_target = max(sr.req.input_len + sr.generated - 1, 1)
+        sr.ctx_done = 0
+        sr.cached_tokens = 0
+        self.cluster.instances[instance_id].enqueue(sr, now)
+        return True
+
+    def fail_request(self, sr: SimRequest) -> None:
+        now = self.cluster.events.now
+        sr.failed = True
+        sr.migrating = False
+        sr.finish_t = now
+        if sr.first_token_t is None:
+            sr.first_token_t = now
+        # completion (of a sort): the drain loop must terminate
+        self.cluster.completed.append(sr)
+
+    def instance_down(self, instance_id: int) -> None:
+        self.cluster.instances[instance_id].clear_crashed()
+
 
 class CascadePolicy(Policy):
     """The paper's system. Ablation knobs:
@@ -354,15 +494,21 @@ class CascadePolicy(Policy):
 
     def attach(self, cluster):
         super().attach(cluster)
+        ccfg = cluster.cfg
         fabric = TransferFabric(cluster, self.kv_bytes_per_token)
         ops = _SimOps(cluster, fabric)
         self.plane = ControlPlane(
             self.plan, self.qoe,
             ControlConfig(policy="cascade", refinement=self.refinement,
-                          balancing=self.balancing, seed=cluster.cfg.seed),
+                          balancing=self.balancing, seed=ccfg.seed,
+                          suspect_after=ccfg.suspect_after_s,
+                          dead_after=ccfg.dead_after_s,
+                          redispatch_budget=ccfg.redispatch_budget),
             ops=ops, instances=[SimInstanceView(i)
                                 for i in cluster.instances])
         ops.plane = self.plane
+        fabric.injector = cluster.injector
+        fabric.on_failed = self.plane.migration_failed
 
     @property
     def stage_of_instance(self) -> List[int]:
@@ -391,6 +537,15 @@ class CascadePolicy(Policy):
     def on_iteration_end(self, inst, t):
         self.plane.on_instance_iteration(inst.id)
 
+    def _heartbeat(self, t):
+        """Liveness pulse (faulty runs only — fault-free event queues stay
+        byte-identical to the legacy simulator): every live instance
+        proves life, then the plane ages the silent ones."""
+        for inst in self.cluster.instances:
+            if inst.alive:
+                self.plane.heartbeat(inst.id, t)
+        self.plane.check_liveness(t)
+
     def timers(self):
         out = [(self.cluster.cfg.pump_interval,
                 lambda t: self.plane.pump_all())]
@@ -400,4 +555,7 @@ class CascadePolicy(Policy):
         if self.refinement != "none":
             out.append((self.cluster.cfg.refine_interval,
                         lambda t: self.plane.refine()))
+        if self.cluster.cfg.faults is not None:
+            out.append((self.cluster.cfg.heartbeat_interval,
+                        self._heartbeat))
         return out

@@ -90,14 +90,17 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                bandwidth: float = 25e9,
                prefill_token_budget: Optional[int] = None,
                prefix_cache: bool = True,
-               preemption: bool = True) -> SimResult:
+               preemption: bool = True,
+               faults=None,
+               migration_timeout_s: Optional[float] = None) -> SimResult:
     prof = profile_from_config(get_config(arch), tp=tp,
                                ragged_backend=ragged_backend)
     cfg = ClusterConfig(num_instances=E, capacity_tokens=capacity_tokens,
                         seed=seed, bandwidth=bandwidth,
                         prefill_token_budget=prefill_token_budget,
                         prefix_cache=prefix_cache,
-                        preemption=preemption)
+                        preemption=preemption, faults=faults,
+                        migration_timeout_s=migration_timeout_s)
     cluster = Cluster(prof, policy, cfg)
     return cluster.run(requests, duration)
 

@@ -53,6 +53,12 @@ class SimRequest:
     finish_t: Optional[float] = None
     migrating: bool = False
     rejected: bool = False           # oversized for any instance: failed
+    # fault tolerance (DESIGN.md §Fault tolerance): failed = retry budget
+    # exhausted after its instance died (excluded from `served` like
+    # rejected); redispatches = dead-instance recoveries this request
+    # survived (each replays prompt + generated-so-far elsewhere)
+    failed: bool = False
+    redispatches: int = 0
     # per-instance output-token counts (paper Fig. 16 CV metric)
     tokens_by_instance: Dict[int, int] = dataclasses.field(default_factory=dict)
     # batch-feature accumulators for QoE profiling (avg loads over lifetime)
@@ -153,6 +159,15 @@ class Instance:
         self.iterating = False
         self.migrations = MigrationManager()
         self.inbound_reserved = 0.0      # tokens reserved for inbound transfers
+        # ---- fault state (DESIGN.md §Fault tolerance) ----
+        self.alive = True
+        # epoch fences stale events: crash bumps it, and a pre-crash
+        # iteration-end callback from the event queue no-ops instead of
+        # mutating the revived instance
+        self.epoch = 0
+        self.slowdown = 1.0              # iteration-duration multiplier
+        self._down_since: Optional[float] = None
+        self.downtime_total = 0.0
         # hooks set by the cluster/policy
         self.on_iteration_end: Optional[Callable] = None
         self.on_request_done: Optional[Callable] = None
@@ -282,8 +297,44 @@ class Instance:
         self.running.append(sr)
         self.kick(t)
 
+    # ---- faults (DESIGN.md §Fault tolerance) --------------------------------
+    def crash(self, t: float) -> None:
+        """Hard-kill: all resident state is lost. The control plane's
+        liveness machinery discovers the death (heartbeats stop) and
+        recovers the residents; ``clear_crashed`` wipes the carcass."""
+        self.alive = False
+        self.epoch += 1                  # fence queued iteration-end events
+        self.iterating = False
+        self._down_since = t
+
+    def revive(self, t: float) -> None:
+        """Rejoin empty (state was wiped at death)."""
+        self.alive = True
+        if self._down_since is not None:
+            self.downtime_total += t - self._down_since
+            self._down_since = None
+
+    def downtime_s(self, now: float) -> float:
+        extra = (now - self._down_since) if self._down_since is not None \
+            else 0.0
+        return self.downtime_total + extra
+
+    def clear_crashed(self) -> None:
+        """Wipe every resident structure (ClusterOps.instance_down): the
+        KV, queues and transfer reservations died with the process."""
+        self.waiting.clear()
+        self.running.clear()
+        self.parked.clear()
+        self._prefix_store.clear()
+        self._iter_chunks = []
+        self.inbound_reserved = 0.0
+        self.migrations = MigrationManager()
+        self.iterating = False
+
     # ---- iteration machinery ----------------------------------------------
     def kick(self, t: float) -> None:
+        if not self.alive:
+            return
         if self.iterating or (not self.waiting and not self.running
                               and not self.parked):
             return
@@ -382,11 +433,16 @@ class Instance:
         if not self.running:
             self.iterating = False
             return
+        dur *= self.slowdown             # slow-instance degradation fault
         self._iter_chunks = chunks
         self._iter_start = t
         self.busy_until = t + dur
-        self.events.push(t + dur, lambda: self._end_iteration(t + dur,
-                                                              admitted))
+        ep = self.epoch                  # fence: a crash invalidates this
+
+        def fire():
+            if ep == self.epoch:         # instance crashed mid-iteration?
+                self._end_iteration(t + dur, admitted)
+        self.events.push(t + dur, fire)
 
     # ---- SLO preemption (mirrors serving.Engine; DESIGN.md §SLO sched) -----
     def _victims(self, pr: int) -> List[SimRequest]:

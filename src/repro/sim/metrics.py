@@ -67,6 +67,38 @@ def class_slo_summary(entries: Iterable[Tuple[str, float, float, int]],
     return per
 
 
+# --------------------------------------------------------------------------
+# Failure accounting (DESIGN.md §Fault tolerance) — module-level single
+# source of truth, like class_slo_summary above: `SimResult.fault_summary`
+# AND `serving.MILSServer.summary` both call this, so sim and server
+# report chaos runs through exactly ONE formula. ``flags`` is one
+# (rejected, failed, redispatches) triple per terminal request;
+# ``retries`` is the plane's count of backoff'd migration failures;
+# ``downtime`` maps instance id -> accumulated down time in the caller's
+# clock (sim seconds / server steps).
+# --------------------------------------------------------------------------
+def fault_summary(flags: Iterable[Tuple[bool, bool, int]], *,
+                  retries: int = 0,
+                  downtime: Optional[Dict[int, float]] = None
+                  ) -> Dict[str, float]:
+    rejected = failed = redispatched = 0
+    for rej, fail, redisp in flags:
+        rejected += int(bool(rej))
+        failed += int(bool(fail))
+        redispatched += int(redisp > 0)
+    out: Dict[str, float] = {
+        "rejected": rejected,
+        "failed": failed,
+        "redispatched": redispatched,
+        "retries": int(retries),
+    }
+    downtime = downtime or {}
+    out["downtime_total"] = float(sum(downtime.values()))
+    for iid in sorted(downtime):
+        out[f"downtime_i{iid}"] = float(downtime[iid])
+    return out
+
+
 @dataclasses.dataclass
 class SimResult:
     completed: List[SimRequest]
@@ -75,11 +107,13 @@ class SimResult:
     instances: List[Instance]
     policy_name: str
     stage_of_instance: Optional[List[int]] = None
+    retries: int = 0                 # plane-counted migration retries
 
     # ---- latency ----------------------------------------------------------
     @property
     def served(self):
-        return [r for r in self.completed if not r.rejected]
+        return [r for r in self.completed
+                if not r.rejected and not r.failed]
 
     def _arr(self, fn) -> np.ndarray:
         return np.asarray([fn(r) for r in self.served], np.float64)
@@ -93,13 +127,21 @@ class SimResult:
     def normalized_latency(self) -> np.ndarray:
         return self._arr(lambda r: r.normalized_latency)
 
+    def fault_summary(self) -> Dict[str, float]:
+        """Failure accounting for the run (shared formula with the real
+        server — see module-level ``fault_summary``)."""
+        return fault_summary(
+            ((r.rejected, r.failed, r.redispatches) for r in self.completed),
+            retries=self.retries,
+            downtime={i.id: i.downtime_s(self.duration)
+                      for i in self.instances if i.downtime_s(self.duration)})
+
     def summary(self) -> Dict[str, float]:
         ttft, tpot = self.ttft(), self.tpot()
         nl = self.normalized_latency()
-        return {
+        out = {
             "policy": self.policy_name,
             "completed": len(self.served),
-            "rejected": len(self.completed) - len(self.served),
             "submitted": self.num_submitted,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
             "ttft_p95": float(np.percentile(ttft, 95)) if len(ttft) else float("nan"),
@@ -108,6 +150,8 @@ class SimResult:
             "norm_latency_mean": float(nl.mean()) if len(nl) else float("nan"),
             "throughput_tok_s": self.throughput(),
         }
+        out.update(self.fault_summary())
+        return out
 
     # ---- throughput -------------------------------------------------------
     def throughput(self) -> float:

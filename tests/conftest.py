@@ -53,6 +53,33 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _st
 
 
+# ---------------------------------------------------------------------------
+# Drain-time leak check (DESIGN.md §Fault tolerance): after every test,
+# walk all engines constructed so far and assert their allocator state is
+# consistent — a migration rollback or crash path that leaks block
+# reservations fails the very test that leaked, not some later one.
+# Engines a test deliberately crashed are flagged ``_faulted`` and skipped.
+# The engine module is looked up via sys.modules so tests that never touch
+# the (jax-heavy) serving stack pay nothing.
+# ---------------------------------------------------------------------------
+@pytest.fixture(autouse=True)
+def _engine_leak_check():
+    yield
+    eng_mod = sys.modules.get("repro.serving.engine")
+    if eng_mod is None:
+        return
+    live = []
+    for ref in eng_mod._LIVE_ENGINES:
+        eng = ref()
+        if eng is None:
+            continue
+        live.append(ref)
+        if getattr(eng, "_faulted", False) or eng.cache is None:
+            continue
+        eng.check_drained(strict=False)
+    eng_mod._LIVE_ENGINES[:] = live
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

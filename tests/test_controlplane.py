@@ -462,6 +462,9 @@ class FakeEngine:
         # group-granular prefix-cache mirror (same model as sim.Instance):
         # prefix_group -> shareable blocks, published at prefill completion
         self.prefix_cache = prefix_cache and prefill_budget is not None
+        # mid-decode dead-engine recovery replays prompt+generated through
+        # chunked prefill — only the chunked scheduler can host a resume
+        self.chunked_prefill = prefill_budget is not None
         self._prefix_store = {}
         self.slots = [None] * max_slots
         self.waiting = deque()
@@ -476,9 +479,10 @@ class FakeEngine:
         return sum(r.length for r in self.active())
 
     def queued_tokens(self):
-        return (sum(len(r.prompt) - r.cached_tokens for r in self.waiting)
-                + sum(len(r.prompt) - r.ctx_done for r in self.active()
-                      if r.ctx_done < len(r.prompt)))
+        return (sum(r.prefill_target_len - r.cached_tokens
+                    for r in self.waiting)
+                + sum(r.prefill_target_len - r.ctx_done
+                      for r in self.active() if r.prefilling))
 
     # ---- prefix-cache mirror (DESIGN.md §Prefix cache) -------------------
     def _cached_for(self, req):
@@ -545,6 +549,8 @@ class FakeEngine:
 
     def _first_token(self, req):
         self._publish(req)                   # finished prompt is shareable
+        if req.generated:                    # resume: prefill re-derives
+            return                           # generated[-1], no new token
         req.generated.append(0)              # prefill's first token
         req.first_token_step = self.steps
         req.tokens_by_engine[self.id] += 1
@@ -559,17 +565,17 @@ class FakeEngine:
             while self.waiting and self.can_accept(self.waiting[0]):
                 req = self.waiting.popleft()
                 self._place(req)
-                req.ctx_done = len(req.prompt)
+                req.ctx_done = req.prefill_target_len
                 self._first_token(req)
         else:
             # chunked mixed iteration: resume oldest-first, then admit
             for req in list(self._prefill_order):
                 if budget <= 0:
                     break
-                c = min(len(req.prompt) - req.ctx_done, budget)
+                c = min(req.prefill_target_len - req.ctx_done, budget)
                 req.ctx_done += c
                 budget -= c
-                if req.ctx_done >= len(req.prompt):
+                if req.ctx_done >= req.prefill_target_len:
                     self._prefill_order.remove(req)
                     self._first_token(req)
             while (self.waiting and budget > 0
@@ -579,15 +585,15 @@ class FakeEngine:
                 # cached admission: the shared prefix never re-prefils
                 req.cached_tokens = self._cached_for(req)
                 req.ctx_done = max(req.ctx_done, req.cached_tokens)
-                c = min(len(req.prompt) - req.ctx_done, budget)
+                c = min(req.prefill_target_len - req.ctx_done, budget)
                 req.ctx_done += c
                 budget -= c
-                if req.ctx_done >= len(req.prompt):
+                if req.ctx_done >= req.prefill_target_len:
                     self._first_token(req)
                 else:
                     self._prefill_order.append(req)
         for slot, req in enumerate(list(self.slots)):
-            if req is None or req.ctx_done < len(req.prompt):
+            if req is None or req.prefilling:
                 continue                     # mid-prefill: no decode yet
             req.generated.append(0)
             req.tokens_by_engine[self.id] = \
@@ -612,7 +618,7 @@ class FakeEngine:
             return False
         req.cached_tokens = 0       # shared prefix re-imports as private
         self._place(req)
-        if req.ctx_done < len(req.prompt):      # resume chunking here
+        if req.prefilling:                      # resume chunking here
             self._prefill_order.append(req)
         return True
 
@@ -756,3 +762,105 @@ def test_server_conserves_requests_with_fake_engines():
     per_req = collections.Counter(tokens)
     for r in fin:
         assert per_req[r.req_id] == len(r.generated), "streaming missed tokens"
+
+
+# --------------------------------------------------------------------------
+# Faulty-trace sim-vs-server parity (ISSUE 8)
+# --------------------------------------------------------------------------
+def _fault_parity_logs(fault_spec, lens, *, crash_step, crash_time,
+                       arrive_step=5, arrive_s=0.05, duration=30.0,
+                       max_steps=4000, boundary=32.0):
+    """Run the same trace + fault script through both drivers and return
+    (sim_decisions, server_decisions). The FaultSpec passed in carries the
+    sim-clock crash time; the server gets the same spec re-stamped with
+    the step-clock crash point — everything else (seed, loss/stall
+    probabilities) is shared, so per-attempt transfer fates hash
+    identically in both backends."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.serving.request import ServeRequest
+    from repro.serving.server import MILSServer, ServerConfig
+    from repro.sim.cluster import CascadePolicy, Cluster, ClusterConfig
+    from repro.sim.costmodel import profile_from_config
+    from repro.sim.workload import Request
+
+    plan = two_stage_plan(4, boundary=boundary)
+    sim_spec = _dc.replace(
+        fault_spec,
+        crashes=tuple((i, crash_time) for i, _ in fault_spec.crashes))
+    srv_spec = _dc.replace(
+        fault_spec,
+        crashes=tuple((i, float(crash_step)) for i, _ in fault_spec.crashes))
+
+    trace = [Request(i, arrive_s * i, il, ol)
+             for i, (il, ol) in enumerate(lens)]
+    policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
+    cluster = Cluster(profile_from_config(get_config("llama3.2-3b")),
+                      policy,
+                      ClusterConfig(num_instances=4, seed=0,
+                                    prefill_token_budget=8,
+                                    migration_timeout_s=0.5,
+                                    faults=sim_spec))
+    res = cluster.run(trace, duration=duration)
+    assert len(res.completed) == len(trace), "sim lost a request to the fault"
+
+    srv = MILSServer(None, None, plan, None,
+                     ServerConfig(refinement="none", balancing="rr", seed=0,
+                                  faults=srv_spec),
+                     engine_factory=lambda i: FakeEngine(i, prefill_budget=8))
+    for i, (il, ol) in enumerate(lens):
+        srv.submit_at(ServeRequest(i, np.zeros(il, np.int32), ol),
+                      step=arrive_step * i)
+    fin = srv.run(max_steps=max_steps)
+    assert len(fin) == len(lens), "server lost a request to the fault"
+    return policy.plane.decisions, srv.plane.decisions
+
+
+def test_sim_and_server_parity_with_instance_crash():
+    """The ISSUE-8 acceptance parity: kill a stage-1 instance while it
+    holds a long decode; both drivers must agree on every route, every
+    migration, the death verdict, and the re-dispatch target — the chaos
+    harness extends decision-log parity to faulty runs.
+
+    Trace: two boundary-crossers (migrate to instances 2 and 3), two
+    shorts that finish early. Instance 2 dies after both migrations have
+    settled and the shorts have drained, so at detection time its only
+    resident is request 0, which must be re-dispatched to the surviving
+    stage-1 instance 3 in BOTH backends."""
+    from repro.control.faults import FaultSpec
+
+    spec = FaultSpec(seed=0, crashes=((2, 0.0),))
+    lens = [(20, 200), (8, 4), (20, 200), (10, 6)]
+    sim_log, srv_log = _fault_parity_logs(
+        spec, lens, crash_step=60, crash_time=0.8)
+
+    for kind in ("route", "migrate", "dead", "redispatch", "fail"):
+        sub = lambda log: [d for d in log if d[0] == kind]
+        assert sub(sim_log) == sub(srv_log), f"{kind} decisions diverge"
+    assert [d for d in sim_log if d[0] == "dead"] == [("dead", 2)]
+    red = [d for d in sim_log if d[0] == "redispatch"]
+    assert red == [("redispatch", 0, 3)], red
+
+
+def test_sim_and_server_parity_with_lost_transfers():
+    """Transfer-fault parity: with every wire transfer lost, both drivers
+    draw identical per-attempt fates from the seeded injector, so the
+    migrate/mig_fail/mig_giveup decision sequences match exactly — and
+    both give up after the same number of capped-backoff retries instead
+    of spinning."""
+    from repro.control.faults import BackoffPolicy, FaultSpec
+
+    spec = FaultSpec(seed=3, transfer_loss_p=1.0)
+    lens = [(20, 4000), (8, 4)]
+    sim_log, srv_log = _fault_parity_logs(
+        spec, lens, crash_step=0, crash_time=0.0, duration=120.0,
+        max_steps=6000)
+
+    for kind in ("route", "migrate", "mig_fail", "mig_giveup"):
+        sub = lambda log: [d for d in log if d[0] == kind]
+        assert sub(sim_log) == sub(srv_log), f"{kind} decisions diverge"
+    fails = [d for d in sim_log if d[0] == "mig_fail"]
+    assert len(fails) == BackoffPolicy().max_retries + 1, \
+        "attempts must be bounded by max_retries + 1"
+    assert [d for d in sim_log if d[0] == "mig_giveup"] == [("mig_giveup", 0)]

@@ -1,0 +1,406 @@
+"""Fault-tolerance suite (DESIGN.md §Fault tolerance, ISSUE 8).
+
+Covers the three layers independently of the parity tests in
+test_controlplane.py:
+
+  * the fault model itself — BackoffPolicy schedule, FaultInjector
+    determinism and per-attempt re-draws;
+  * the control plane over the pure-python mock backend — the no-spin
+    regression (a receiver that always fails the transfer cannot make
+    the plane retry forever), health transitions, stage folding and
+    rejoin re-expansion, dead-instance re-dispatch and budget-exhausted
+    failure;
+  * the simulator under chaos — rollback invariants after lost
+    transfers, request conservation under random crash interleavings
+    (hypothesis), downtime/rejoin accounting;
+  * the real JAX engine — a mid-decode engine kill whose re-dispatched
+    residents continue bit-identically, plus drain/shutdown leak checks.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.control import MIG_FAILED, ControlConfig
+from repro.control.faults import (HEALTH_ALIVE, HEALTH_DEAD, HEALTH_SUSPECT,
+                                  XFER_LOST, XFER_OK, BackoffPolicy,
+                                  FaultInjector, FaultSpec)
+from test_controlplane import (MockBackend, MockRequest, make_plane,
+                               run_workload, two_stage_plan)
+
+
+# --------------------------------------------------------------------------
+# Fault model
+# --------------------------------------------------------------------------
+def test_backoff_policy_grows_and_caps():
+    pol = BackoffPolicy(max_retries=6, base=1.0, multiplier=2.0, cap=32.0)
+    assert [pol.delay(n) for n in range(1, 8)] == \
+        [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 32.0]
+    assert pol.delay(0) == 1.0          # defensive: never negative-exponent
+
+
+def test_fault_injector_is_deterministic_and_redraws_per_attempt():
+    spec = FaultSpec(seed=7, transfer_loss_p=0.5)
+    a, b = FaultInjector(spec), FaultInjector(spec)
+    seq_a = [a.transfer_event(3) for _ in range(32)]
+    seq_b = [b.transfer_event(3) for _ in range(32)]
+    assert seq_a == seq_b, "same spec must yield identical fates"
+    assert XFER_OK in seq_a and XFER_LOST in seq_a, \
+        "p=0.5 retries must re-draw, not repeat the first fate"
+    # attempt counter is per-request: another request draws independently
+    assert [FaultInjector(spec).transfer_event(4) for _ in range(32)] != seq_a
+
+
+def test_fault_injector_scripted_lookups():
+    spec = FaultSpec(seed=0, crashes=((2, 5.0),), rejoins=((2, 9.0),),
+                     slowdowns=((1, 3.0), (0, 0.5)))
+    inj = FaultInjector(spec)
+    assert inj.crash_time(2) == 5.0 and inj.crash_time(0) is None
+    assert inj.rejoin_time(2) == 9.0 and inj.rejoin_time(1) is None
+    assert inj.slowdown(1) == 3.0
+    assert inj.slowdown(0) == 1.0, "slowdown factors clamp at 1.0"
+    assert inj.transfer_event(0) == XFER_OK, "no wire faults configured"
+
+
+# --------------------------------------------------------------------------
+# Control plane: retry backoff + no-spin bound (satellite of ISSUE 8)
+# --------------------------------------------------------------------------
+class FailingWireBackend(MockBackend):
+    """Every migration attempt fails at the backend (the receiver looked
+    willing at offer time but the transfer never succeeds) — the
+    pathological case that used to retry unboundedly."""
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.attempts = 0
+
+    def start_migration(self, r, src_id, dst_id):
+        self.attempts += 1
+        return MIG_FAILED
+
+
+def test_permanently_failing_receiver_cannot_spin():
+    backend = FailingWireBackend(2)
+    plane = make_plane(backend, two_stage_plan(2, boundary=64.0),
+                       ControlConfig(refinement="none"))
+    req = MockRequest(0, 32, 200)       # crosses the boundary at step 32
+    run_workload(backend, plane, [req], max_steps=400)
+
+    pol = plane.cfg.mig_backoff
+    assert req in backend.finished, "request must complete on its source"
+    assert backend.attempts == pol.max_retries + 1, \
+        "attempts must be exactly max_retries + 1 (initial + retries)"
+    assert plane.retries == pol.max_retries + 1
+    assert ("mig_giveup", 0) in plane.decisions
+    # backoff spacing: consecutive attempts are at least delay(n) rounds
+    # apart, so the attempt count stays tiny even over hundreds of steps
+    assert backend.attempts < 10
+
+
+def test_backoff_delays_spread_attempts():
+    """The n-th retry waits delay(n) pump rounds: with base=2 the second
+    attempt cannot happen on the round right after the first failure."""
+    backend = FailingWireBackend(2)
+    plane = make_plane(backend, two_stage_plan(2, boundary=8.0),
+                       ControlConfig(refinement="none",
+                                     mig_backoff=BackoffPolicy(
+                                         max_retries=2, base=4.0,
+                                         multiplier=2.0, cap=16.0)))
+    req = MockRequest(0, 6, 100)
+    attempt_rounds = []
+    orig = backend.start_migration
+
+    def spy(r, s, d):
+        attempt_rounds.append(plane._round)
+        return orig(r, s, d)
+
+    backend.start_migration = spy
+    run_workload(backend, plane, [req], max_steps=200)
+    assert len(attempt_rounds) == 3      # max_retries=2 -> 3 attempts
+    gaps = np.diff(attempt_rounds)
+    assert gaps[0] >= 4.0 and gaps[1] >= 8.0, gaps
+
+
+# --------------------------------------------------------------------------
+# Control plane: liveness, folding, re-dispatch
+# --------------------------------------------------------------------------
+class RecoveringBackend(MockBackend):
+    """MockBackend + the optional recovery ops the plane probes for."""
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.failed = []
+        self.downed = []
+
+    def redispatch(self, r, iid):
+        self.instances[iid].waiting.append(r)
+        return True
+
+    def fail_request(self, r):
+        r.done = True
+        self.failed.append(r)
+
+    def instance_down(self, iid):
+        self.downed.append(iid)
+        inst = self.instances[iid]
+        inst.running.clear()
+        inst.waiting.clear()
+
+
+def _beat_all(plane, ids, t):
+    for i in ids:
+        plane.heartbeat(i, t)
+
+
+def test_health_transitions_and_routing_filter():
+    backend = RecoveringBackend(4)
+    plane = make_plane(backend, two_stage_plan(4, boundary=64.0),
+                       ControlConfig(refinement="none"))
+    _beat_all(plane, range(4), 0.0)
+    plane.check_liveness(2.0)
+    assert set(plane.instance_health().values()) == {HEALTH_ALIVE}
+
+    # instance 1 goes silent: alive -> suspect -> dead
+    _beat_all(plane, (0, 2, 3), 4.0)
+    plane.check_liveness(4.0)
+    assert plane.instance_health()[1] == HEALTH_SUSPECT
+    assert ("suspect", 1) in plane.decisions
+    # suspect instances stop receiving new work (stage 0 = {0, 1})
+    routes = {plane.route(100 + i, 10.0) for i in range(4)}
+    assert routes == {0}
+
+    _beat_all(plane, (0, 2, 3), 7.0)
+    plane.check_liveness(7.0)
+    assert plane.instance_health()[1] == HEALTH_DEAD
+    assert ("dead", 1) in plane.decisions and 1 in backend.downed
+
+    # rejoin: a heartbeat from a dead instance restores routing
+    plane.heartbeat(1, 8.0)
+    assert ("rejoin", 1) in plane.decisions
+    assert {plane.route(200 + i, 10.0) for i in range(4)} == {0, 1}
+
+
+def test_dead_stage_folds_into_neighbor():
+    backend = RecoveringBackend(4)
+    plane = make_plane(backend, two_stage_plan(4, boundary=64.0),
+                       ControlConfig(refinement="none"))
+    _beat_all(plane, range(4), 0.0)
+    _beat_all(plane, (2, 3), 10.0)      # whole stage 0 dies
+    plane.check_liveness(10.0)
+    assert plane.instance_health()[0] == HEALTH_DEAD
+    assert plane.instance_health()[1] == HEALTH_DEAD
+    # short arrivals fold into the surviving later stage instead of
+    # black-holing the [0, 64) length range
+    assert {plane.route(i, 10.0) for i in range(4)} == {2, 3}
+
+
+def test_dead_instance_residents_are_redispatched():
+    backend = RecoveringBackend(4)
+    plane = make_plane(backend, two_stage_plan(4, boundary=64.0),
+                       ControlConfig(refinement="none"))
+    reqs = [MockRequest(i, 10, 50) for i in range(2)]
+    run_workload(backend, plane, reqs, max_steps=2)   # routed 0 and 1
+    assert backend.residences(reqs[1]) == [1]
+
+    _beat_all(plane, range(4), 0.0)
+    _beat_all(plane, (0, 2, 3), 10.0)
+    plane.check_liveness(10.0)          # instance 1 dies holding reqs[1]
+    red = [d for d in plane.decisions if d[0] == "redispatch"]
+    assert red == [("redispatch", 1, 0)], red
+    assert backend.residences(reqs[1]) == [0]
+    assert plane.redispatches == 1 and not backend.failed
+
+
+def test_redispatch_budget_exhaustion_fails_request():
+    backend = RecoveringBackend(4)
+    plane = make_plane(backend, two_stage_plan(4, boundary=64.0),
+                       ControlConfig(refinement="none", redispatch_budget=0))
+    reqs = [MockRequest(i, 10, 50) for i in range(2)]
+    run_workload(backend, plane, reqs, max_steps=2)
+    _beat_all(plane, range(4), 0.0)
+    _beat_all(plane, (0, 2, 3), 10.0)
+    plane.check_liveness(10.0)
+    assert backend.failed == [reqs[1]], \
+        "over-budget residents surface as failed, not silently dropped"
+    assert ("fail", 1) in plane.decisions
+    assert 1 in plane.failed_ids
+
+
+# --------------------------------------------------------------------------
+# Simulator chaos
+# --------------------------------------------------------------------------
+def _sim_run(lens, faults, duration=60.0, n_instances=4, **cfg_kw):
+    from repro.configs import get_config
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.sim.cluster import CascadePolicy, Cluster, ClusterConfig
+    from repro.sim.costmodel import profile_from_config
+    from repro.sim.workload import Request
+
+    plan = PipelinePlan([Stage(0.0, 32.0, n_instances - n_instances // 2),
+                         Stage(32.0, float("inf"), n_instances // 2)], 0.0)
+    trace = [Request(i, 0.05 * i, il, ol) for i, (il, ol) in enumerate(lens)]
+    policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
+    cluster = Cluster(profile_from_config(get_config("llama3.2-3b")), policy,
+                      ClusterConfig(num_instances=n_instances, seed=0,
+                                    prefill_token_budget=8, faults=faults,
+                                    **cfg_kw))
+    res = cluster.run(trace, duration=duration)
+    return cluster, policy, res
+
+
+def test_sim_lost_transfers_roll_back_cleanly():
+    """transfer_loss_p=1: every migration times out. The sender must
+    roll back (request keeps decoding at the source), receiver-side
+    reservations must be released, and the retry ban must bound the
+    total attempt count."""
+    spec = FaultSpec(seed=1, transfer_loss_p=1.0)
+    cluster, policy, res = _sim_run([(20, 4000), (8, 4)], spec,
+                                    duration=120.0, migration_timeout_s=0.5)
+    assert len(res.completed) == 2
+    assert all(not r.failed and not r.rejected for r in res.completed)
+    for inst in cluster.instances:
+        assert inst.inbound_reserved == 0, "leaked receiver reservation"
+        assert not inst.migrations.active, "transfer never cleaned up"
+    assert res.retries == BackoffPolicy().max_retries + 1
+    assert res.summary()["retries"] == res.retries
+
+
+def test_sim_crash_redispatch_rejoin_and_downtime_accounting():
+    spec = FaultSpec(seed=0, crashes=((2, 0.8),), rejoins=((2, 5.0),))
+    cluster, policy, res = _sim_run([(20, 500), (8, 4), (20, 500), (10, 6)],
+                                    spec, duration=60.0,
+                                    suspect_after_s=1.0, dead_after_s=2.0)
+    log = policy.plane.decisions
+    assert ("dead", 2) in log and ("rejoin", 2) in log
+    assert any(d[0] == "redispatch" for d in log)
+    assert len(res.completed) == 4
+    assert all(not r.failed for r in res.completed)
+    recovered = [r for r in res.completed if r.redispatches]
+    assert recovered, "the crashed instance held at least one resident"
+    s = res.summary()
+    assert s["redispatched"] == len(recovered)
+    assert s["downtime_total"] > 0 and s["downtime_i2"] > 0
+    assert s["failed"] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), crash_at=st.floats(0.05, 2.0),
+       victim=st.integers(0, 3))
+def test_sim_conserves_requests_under_random_crashes(seed, crash_at, victim):
+    """Chaos property: whatever instance dies whenever, every submitted
+    request ends exactly once — served, rejected, or failed. Nothing
+    hangs, nothing double-finishes."""
+    spec = FaultSpec(seed=seed, crashes=((victim, crash_at),))
+    lens = [(20, 300), (8, 4), (20, 300), (10, 6), (12, 40), (28, 100)]
+    _, _, res = _sim_run(lens, spec, duration=80.0)
+    assert len(res.completed) == len(lens)
+    ids = [r.req.req_id for r in res.completed]
+    assert len(set(ids)) == len(ids), "a request finished twice"
+
+
+def test_sim_slowdown_shifts_load_not_correctness():
+    spec = FaultSpec(seed=0, slowdowns=((0, 4.0),))
+    _, _, res = _sim_run([(10, 30)] * 6, spec, duration=60.0)
+    assert len(res.completed) == 6
+    assert all(not r.failed and not r.rejected for r in res.completed)
+
+
+# --------------------------------------------------------------------------
+# Shared failure-accounting formula
+# --------------------------------------------------------------------------
+def test_fault_summary_formula():
+    from repro.sim.metrics import fault_summary
+    flags = [(False, False, 0), (True, False, 0), (False, True, 2),
+             (False, False, 1)]
+    s = fault_summary(flags, retries=5, downtime={1: 3.5, 3: 1.5})
+    assert s["rejected"] == 1 and s["failed"] == 1
+    assert s["redispatched"] == 2       # requests with >= 1 redispatch
+    assert s["retries"] == 5
+    assert s["downtime_total"] == 5.0
+    assert s["downtime_i1"] == 3.5 and s["downtime_i3"] == 1.5
+
+
+# --------------------------------------------------------------------------
+# Real engine: bit-identical recovery + drain/shutdown
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _server(model, params, faults=None, **kw):
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.core.qoe import QoEModel
+    from repro.serving.server import MILSServer, ServerConfig
+
+    plan = PipelinePlan([Stage(0.0, 48.0, 2),
+                         Stage(48.0, float("inf"), 2)], 0.0)
+    qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+    return MILSServer(model, params, plan, qoe,
+                      ServerConfig(policy="cascade", seed=0, faults=faults),
+                      max_slots=3, max_seq=96, **kw)
+
+
+def test_engine_crash_redispatch_is_bit_identical(engine_setup):
+    """Kill one engine mid-decode: its residents replay prompt +
+    generated-so-far through chunked prefill elsewhere and must continue
+    with EXACTLY the tokens a fault-free run produces (greedy decode is
+    deterministic; recovery may not change it)."""
+    from repro.control.faults import FaultSpec
+    from repro.serving.request import ServeRequest
+
+    cfg, model, params = engine_setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 20).astype(np.int32)
+               for _ in range(6)]
+
+    ref_srv = _server(model, params)
+    ref = ref_srv.run([ServeRequest(i, p.copy(), 40)
+                       for i, p in enumerate(prompts)], max_steps=500)
+    ref_toks = {r.req_id: list(r.generated) for r in ref}
+
+    srv = _server(model, params, faults=FaultSpec(seed=0, crashes=((0, 12),)))
+    fin = srv.run([ServeRequest(i, p.copy(), 40)
+                   for i, p in enumerate(prompts)],
+                  max_steps=800, drain=True)
+    assert len(fin) == len(prompts)
+    recovered = [r for r in fin if r.redispatches]
+    assert recovered, "engine 0 must have held residents at death"
+    for r in fin:
+        if not r.failed:
+            assert list(r.generated) == ref_toks[r.req_id], \
+                f"req {r.req_id}: recovery changed greedy decode"
+    s = srv.summary()
+    assert s["redispatched"] == len(recovered)
+    assert s["downtime_i0"] > 0
+    log = srv.plane.decisions
+    assert ("dead", 0) in log
+
+
+def test_engine_drain_check_and_shutdown(engine_setup):
+    from repro.serving.request import ServeRequest
+
+    cfg, model, params = engine_setup
+    rng = np.random.default_rng(1)
+    srv = _server(model, params)
+    fin = srv.run([ServeRequest(i, rng.integers(0, cfg.vocab_size, 12)
+                                .astype(np.int32), 6) for i in range(3)],
+                  max_steps=200, drain=True)     # run() asserts drained
+    assert len(fin) == 3
+    for eng in srv.engines:
+        eng.shutdown()                           # strict check, then free
+        assert eng.cache is None
+    with pytest.raises(AssertionError):
+        busy = _server(model, params)
+        req = ServeRequest(99, rng.integers(0, cfg.vocab_size, 12)
+                           .astype(np.int32), 6)
+        busy.engines[0].submit(req)
+        busy.engines[0].check_drained(strict=True)
