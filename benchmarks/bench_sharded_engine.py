@@ -1,0 +1,229 @@
+"""Tensor-parallel sharded serving (DESIGN.md §Sharded serving).
+
+Two experiments, the acceptance numbers for ISSUE 9:
+
+  * **Engine tp scan** — the same decode workload on `Engine(tp=t)` for
+    t ∈ {1, 2, 4} at EQUAL per-device token budget, on a forced
+    multi-device CPU mesh (`--xla_force_host_platform_device_count`,
+    the launch/dryrun.py precedent). Asserted: max resident KV tokens
+    scale exactly t× (the pool shards over KV heads, so each device
+    pays the same bytes while the engine owns t× the blocks) and greedy
+    tokens are bit-identical to tp=1. Per-step wall time is reported;
+    off-TPU it's an interpret/shard_map-overhead wall, so it is NOT
+    asserted (bench_fused_attention's precedent).
+
+  * **Heterogeneous-cluster sim** — the same open-loop trace at equal
+    TOTAL device count: four single-chip instances vs a 2+1+1 cluster
+    whose tp=2 instance anchors a stage by itself via capacity-weighted
+    stage partitioning (`scale_profile_tp` + `capacity_weight`).
+    Asserted: request conservation on both clusters and the weighted
+    partition actually engaging (the big instance claims a stage alone).
+
+Emits BENCH_sharded_engine.json at the repo root.
+
+Run: PYTHONPATH=src python benchmarks/bench_sharded_engine.py
+     [--budget 256] [--decode-reqs 4] [--rate 20] [--duration 10]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# Virtual host devices for the tp scan: must land before the FIRST jax
+# import in the process. Under benchmarks.run an earlier module has
+# usually initialised jax already — then the scan degrades gracefully
+# to the device count that exists (tp values that don't fit are skipped
+# and reported as such).
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = \
+            _flags + " --xla_force_host_platform_device_count=4"
+
+try:
+    from benchmarks.common import write_artifact
+except ImportError:                     # run as a plain script
+    from common import write_artifact
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.partition import PipelinePlan, Stage
+from repro.models import build_model
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest
+from repro.sim.cluster import Cluster, ClusterConfig
+from repro.sim.costmodel import profile_from_config
+from repro.sim.experiment import make_policy
+from repro.sim.workload import WorkloadSpec, generate
+
+ARCH = "smollm-360m"
+SIM_ARCH = "llama3.2-3b"
+SIM_CAPACITY = 60_000.0                 # per DEVICE, like token_budget
+TP_SCAN = (1, 2, 4)
+
+
+def _model():
+    # reduced() caps kv heads at 2; lift to 4 (= num_heads, plain MHA)
+    # so every tp in the scan divides the head axes
+    cfg = dataclasses.replace(get_config(ARCH).reduced(), num_kv_heads=4)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def engine_scan(model, params, *, budget, decode_reqs, new_tokens=16,
+                seed=0):
+    """Same decode batch on Engine(tp=t), equal PER-DEVICE budget."""
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab_size
+    prompts = [rng.integers(0, vocab, int(p)).astype(np.int32)
+               for p in np.linspace(9, 23, decode_reqs).astype(int)]
+    out = {}
+    for tp in TP_SCAN:
+        if tp > len(jax.devices()):
+            out[tp] = {"skipped": f"needs {tp} devices, "
+                                  f"have {len(jax.devices())}"}
+            continue
+        eng = Engine(0, model, params, tp=tp, max_slots=decode_reqs,
+                     max_seq=96, token_budget=budget,
+                     attn_backend="dense")
+        reqs = [ServeRequest(i, p, new_tokens)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        # prefill + reach steady decode (also warms the jit caches)
+        while any(r.first_token_step is None for r in reqs):
+            eng.step()
+        step_s = []
+        while any(r.finish_step is None for r in reqs):
+            t0 = time.perf_counter()
+            eng.step()
+            jax.block_until_ready(eng.cache)
+            step_s.append(time.perf_counter() - t0)
+        out[tp] = {
+            "num_blocks": eng.num_blocks,
+            "resident_tokens_max": eng.num_blocks * eng.block_size,
+            "token_budget_per_device": budget,
+            "decode_step_s_median": float(np.median(step_s)),
+            "decode_steps": len(step_s),
+            "tokens": {r.req_id: list(r.generated) for r in reqs},
+        }
+    return out
+
+
+def sim_hetero(*, rate, duration, seed=3):
+    """Equal total devices: 4×tp1 instances vs a 2+1+1 cluster, both
+    under the SAME 2-stage plan demanding 2+2 capacity units — so the
+    hetero cluster only works if weighted claiming lets the tp=2
+    instance satisfy a whole stage's demand alone."""
+    reqs = generate(WorkloadSpec(rate=rate, duration=duration, seed=seed,
+                                 max_context=8192))
+    prof = profile_from_config(get_config(SIM_ARCH))
+    plan = PipelinePlan([Stage(0.0, 512.0, 2),
+                         Stage(512.0, float("inf"), 2)], 0.0)
+    out = {"requests": len(reqs)}
+    for name, E, tps in (("uniform_4x1", 4, None),
+                         ("hetero_2_1_1", 3, (2, 1, 1))):
+        pol = make_policy("cascade", SIM_ARCH, E, plan=plan)
+        cfg = ClusterConfig(num_instances=E, capacity_tokens=SIM_CAPACITY,
+                            seed=0, prefill_token_budget=512, tps=tps)
+        res = Cluster(prof, pol, cfg).run(reqs, duration + 30.0)
+        ttft = res.ttft()
+        out[name] = {
+            "instances": E,
+            "tps": list(tps) if tps else [1] * E,
+            "served": len(res.served),
+            "completed": len(res.completed),
+            "ttft_mean_s": float(np.mean(ttft)),
+            "ttft_p99_s": float(np.percentile(ttft, 99)),
+            "stage_instances": [list(s.instance_ids)
+                                for s in pol.plane.stages],
+        }
+        assert len(res.completed) == len(reqs), \
+            f"{name}: {len(res.completed)}/{len(reqs)} requests completed"
+    # capacity-weighted partitioning must engage: the tp=2 instance
+    # satisfies the short stage's 2-unit demand alone, the two tp=1
+    # instances cover the long stage (tests/test_controlplane.py asserts
+    # the same mechanism with server parity)
+    assert out["uniform_4x1"]["stage_instances"] == [[0, 1], [2, 3]], \
+        out["uniform_4x1"]["stage_instances"]
+    assert out["hetero_2_1_1"]["stage_instances"] == [[0], [1, 2]], \
+        out["hetero_2_1_1"]["stage_instances"]
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=256,
+                    help="PER-DEVICE token budget for the tp scan")
+    ap.add_argument("--decode-reqs", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--duration", type=float, default=10.0)
+    args = ap.parse_args(argv)
+
+    model, params = _model()
+    out = {"config": vars(args) | {"arch": ARCH, "sim_arch": SIM_ARCH,
+                                   "devices": len(jax.devices()),
+                                   "jax_backend": jax.default_backend()}}
+    scan = engine_scan(model, params, budget=args.budget,
+                       decode_reqs=args.decode_reqs)
+    ran = [t for t in TP_SCAN if "skipped" not in scan[t]]
+    for t in ran:
+        print(f"-- tp={t}: resident {scan[t]['resident_tokens_max']:5d} "
+              f"tokens  decode step "
+              f"{scan[t]['decode_step_s_median']*1e3:7.2f} ms")
+    base = scan[ran[0]]
+    for t in ran:
+        # pool shards over KV heads: t× blocks at equal per-device bytes
+        assert scan[t]["resident_tokens_max"] == \
+            t * base["resident_tokens_max"] // ran[0], scan[t]
+        assert scan[t]["tokens"] == base["tokens"], \
+            f"tp={t} greedy tokens diverge from tp={ran[0]}"
+    if len(ran) > 1:
+        print(f"resident KV tokens scale {ran[-1]}x at tp={ran[-1]} "
+              f"(equal per-device budget), tokens bit-identical")
+    out["engine_scan"] = {str(t): dict(scan[t], tokens=None) if
+                          "skipped" not in scan[t] else scan[t]
+                          for t in TP_SCAN}
+
+    sim = sim_hetero(rate=args.rate, duration=args.duration)
+    out["sim_hetero"] = sim
+    u, h = sim["uniform_4x1"], sim["hetero_2_1_1"]
+    print(f"sim, equal 4 devices: uniform 4x1 p99 TTFT "
+          f"{u['ttft_p99_s']:.2f} s vs hetero 2+1+1 "
+          f"{h['ttft_p99_s']:.2f} s (stages {h['stage_instances']})")
+
+    print("wrote", write_artifact("sharded_engine", out))
+
+
+def run():
+    """CSV rows for benchmarks.run."""
+    main([])
+    import json
+    doc = json.loads((Path(__file__).resolve().parent.parent
+                      / "BENCH_sharded_engine.json").read_text())
+    d = doc["data"]
+    rows = []
+    for t, s in d["engine_scan"].items():
+        if "skipped" in s:
+            continue
+        rows.append({"name": f"tp{t}_decode_step",
+                     "us_per_call": s["decode_step_s_median"] * 1e6,
+                     "derived": f"resident_tokens="
+                                f"{s['resident_tokens_max']}"})
+    h = d["sim_hetero"]["hetero_2_1_1"]
+    rows.append({"name": "sim_hetero_2_1_1_ttft_p99",
+                 "us_per_call": h["ttft_p99_s"] * 1e6,
+                 "derived": f"served={h['served']}"})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

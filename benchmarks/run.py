@@ -37,6 +37,9 @@ MODULES = [
                               # goodput-under-SLO + bit-identical resume
     "bench_fault_tolerance",  # §Fault tolerance: kill 1 of 4 instances
                               # mid-trace; conservation + bounded p99
+    "bench_sharded_engine",   # §Sharded serving: tp scan (resident KV
+                              # ~tp x, bit-identical tokens) + hetero
+                              # 2+1+1 cluster vs uniform 4x1 in sim
 ]
 
 

@@ -73,11 +73,27 @@ class FaultSpec:
     # scripted instance deaths/revivals: ((instance_id, at_time), ...)
     crashes: Tuple[Tuple[int, float], ...] = ()
     rejoins: Tuple[Tuple[int, float], ...] = ()
+    # correlated (rack-style) failures: ((instance_ids...), at_time) kills
+    # every listed instance in the SAME tick — power/switch domains where
+    # deaths are not independent. Expanded into per-instance crashes by
+    # ``all_crashes``; drivers iterate that, never ``crashes`` directly.
+    racks: Tuple[Tuple[Tuple[int, ...], float], ...] = ()
     # per-transfer-attempt wire faults
     transfer_loss_p: float = 0.0
     transfer_stall_p: float = 0.0
     # slow-instance degradation: ((instance_id, slowdown_factor >= 1), ...)
     slowdowns: Tuple[Tuple[int, float], ...] = ()
+
+    @property
+    def all_crashes(self) -> Tuple[Tuple[int, float], ...]:
+        """Per-instance crash schedule with rack events expanded:
+        independent ``crashes`` first, then each rack's members in listed
+        order (drivers that push events in sequence keep a deterministic
+        same-tick order)."""
+        out = list(self.crashes)
+        for ids, t in self.racks:
+            out.extend((int(i), float(t)) for i in ids)
+        return tuple(out)
 
 
 def _unit_hash(*vals) -> float:
@@ -100,7 +116,7 @@ class FaultInjector:
         self._attempts: Dict[int, int] = {}     # req_id -> transfers started
 
     def crash_time(self, instance_id: int) -> Optional[float]:
-        for iid, t in self.spec.crashes:
+        for iid, t in self.spec.all_crashes:
             if iid == instance_id:
                 return float(t)
         return None

@@ -96,18 +96,37 @@ class ControlPlane:
         self.rng = np.random.default_rng(cfg.seed)
         self.instances: Dict[int, InstanceView] = {v.id: v for v in instances}
         self._order = [v.id for v in instances]
-        # stage assignment: the plan's stages claim instances in order
+        # stage assignment: the plan's stages claim instances in order.
+        # Claiming is CAPACITY-WEIGHTED (DESIGN.md §Sharded serving): a
+        # tp=N engine advertises capacity_weight N and satisfies N units
+        # of a stage's num_instances demand, so a plan solved in
+        # homogeneous instance-units maps onto a heterogeneous cluster
+        # without re-solving the DP. Uniform weight 1 claims exactly one
+        # instance per unit — bit-identical to the legacy slicing — and
+        # on weighted clusters the last stage absorbs any remainder.
+        weights = {i: self._weight(i) for i in self._order}
+        uniform = all(w == 1.0 for w in weights.values())
         self.stages: List[StageState] = []
         self.stage_of_instance: Dict[int, int] = {}
         nxt = 0
         for si, st in enumerate(plan.stages):
-            ids = self._order[nxt:nxt + st.num_instances]
-            nxt += st.num_instances
+            if si == len(plan.stages) - 1 and not uniform:
+                ids = self._order[nxt:]
+                nxt = len(self._order)
+            else:
+                ids = []
+                acc = 0.0
+                while nxt < len(self._order) and acc < st.num_instances:
+                    ids.append(self._order[nxt])
+                    acc += weights[self._order[nxt]]
+                    nxt += 1
             self.stages.append(StageState(st.lo, st.hi, ids))
             for i in ids:
                 self.stage_of_instance[i] = si
-        assert nxt == len(self._order), \
-            f"plan uses {nxt} instances, backend has {len(self._order)}"
+        if uniform:
+            need = sum(st.num_instances for st in plan.stages)
+            assert need == len(self._order), \
+                f"plan uses {need} instances, backend has {len(self._order)}"
         self.refiners = [BoundaryRefiner(qoe, boundary=s.hi)
                          for s in self.stages[:-1]]
         # negotiation state (§4.4)
@@ -151,6 +170,16 @@ class ControlPlane:
     # ---- liveness (DESIGN.md §Fault tolerance) ------------------------------
     def _alive(self, iid: int) -> bool:
         return self.health.get(iid, HEALTH_ALIVE) == HEALTH_ALIVE
+
+    def _weight(self, iid: int) -> float:
+        """Capacity weight of an instance (optional InstanceView hook,
+        DESIGN.md §Sharded serving): a tp=N engine weighs N — its pool
+        is N× deeper and its per-iteration throughput higher, so every
+        load comparison normalizes by weight. Views without the hook
+        weigh 1.0, keeping legacy clusters bit-identical."""
+        fn = getattr(self.instances[iid], "capacity_weight", None)
+        w = float(fn()) if callable(fn) else 1.0
+        return max(w, 1e-9)
 
     def heartbeat(self, iid: int, now: float) -> None:
         """Driver-reported proof of life. Any heartbeat restores alive;
@@ -236,7 +265,8 @@ class ControlPlane:
             self._rr[_RR_GLOBAL] = c + 1
             iid = alive[c % len(alive)]
         elif self.cfg.policy == "least-loaded":
-            iid = min(alive, key=lambda i: self.instances[i].load())
+            iid = min(alive,
+                      key=lambda i: self.instances[i].load() / self._weight(i))
         else:
             si, ids = self._healthy_stage(
                 self.stage_for(max(length - cached_tokens, 1.0)))
@@ -251,7 +281,8 @@ class ControlPlane:
                     ids = warm
             if priority_of(slo_class) == 0 and len(ids) > 1:
                 iid = min(ids,
-                          key=lambda i: (self.instances[i].queued_tokens(), i))
+                          key=lambda i: (self.instances[i].queued_tokens()
+                                         / self._weight(i), i))
             else:
                 iid = ids[c % len(ids)]
         self.decisions.append(("route", req_id, iid))
@@ -313,7 +344,7 @@ class ControlPlane:
             self._rr[_RR_HANDOVER] = c + 1
             rid = cands[c % len(cands)].id if cands else None
         else:
-            bids = [Bid(c.id, c.load(),
+            bids = [Bid(c.id, c.load() / self._weight(c.id),
                         self.receivers[c.id].earliest_start(),
                         int(self.rng.integers(0, 1 << 30)))
                     for c in cands]
@@ -608,7 +639,10 @@ class ControlPlane:
             ids = [i for i in stage.instance_ids if self._alive(i)]
             if len(ids) < 2:
                 continue
-            loads = {i: self.instances[i].load() for i in ids}
+            # weight-normalized: a tp=4 engine at 4× the raw tokens of a
+            # tp=1 peer is equally loaded, not overloaded
+            loads = {i: self.instances[i].load() / self._weight(i)
+                     for i in ids}
             for i in ids:
                 peers = [l for j, l in loads.items() if j != i]
                 if not is_overloaded(loads[i], peers):

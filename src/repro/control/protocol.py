@@ -122,6 +122,18 @@ class InstanceView(Protocol):
         that predate fault tolerance."""
         ...
 
+    # Optional (resolved via getattr, like the fault-tolerance hooks):
+    #
+    #   def capacity_weight(self) -> float
+    #
+    # Relative capacity of this instance in homogeneous instance-units
+    # (DESIGN.md §Sharded serving): a tp=N tensor-parallel engine returns
+    # N — its KV pool is N× deeper and its iteration throughput higher.
+    # The control plane divides every load/queue comparison by it and
+    # lets one instance satisfy N units of a stage's instance demand.
+    # Views without the hook weigh 1.0, preserving legacy behavior
+    # bit-for-bit.
+
 
 @runtime_checkable
 class ClusterOps(Protocol):

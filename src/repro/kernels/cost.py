@@ -232,6 +232,17 @@ def mixed_iter_time_s(chunks: Sequence[tuple], decode_lengths: Sequence[int],
     return t
 
 
+def allreduce_time_s(payload_bytes: float, num_devices: int) -> float:
+    """Ring all-reduce wall time over ``num_devices`` chips on the ICI:
+    each chip moves ``2·(n-1)/n`` of the payload through one link
+    (reduce-scatter + all-gather). n <= 1 is free — the tensor-parallel
+    cost terms call this unconditionally (DESIGN.md §Sharded serving)."""
+    n = int(num_devices)
+    if n <= 1 or payload_bytes <= 0:
+        return 0.0
+    return 2.0 * (n - 1) / n * float(payload_bytes) / ICI_BW
+
+
 def heterogeneity_tax(lengths: Sequence[int], spec: AttnSpec) -> float:
     """Fraction of padded-backend time wasted vs. a length-homogeneous
     batch with the same total token count (the paper's Fig.-2 metric)."""

@@ -31,6 +31,17 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
         (n // model, model), ("data", "model"), **_axis_types_kwarg(2))
 
 
+def make_tp_mesh(tp: int) -> jax.sharding.Mesh:
+    """1-D serving mesh: the first ``tp`` local devices on a single
+    'model' axis (DESIGN.md §Sharded serving). Each tensor-parallel
+    Engine owns one of these; a cluster of engines with different ``tp``
+    is a set of disjoint meshes over one host's devices."""
+    n = len(jax.devices())
+    assert 1 <= tp <= n, f"tp={tp} needs {tp} devices, have {n}"
+    return jax.make_mesh((tp,), ("model",), **_axis_types_kwarg(1),
+                         devices=jax.devices()[:tp])
+
+
 def batch_axes(mesh: jax.sharding.Mesh):
     """The (super-)axis batch shards over: ('pod','data') when a pod axis
     exists, else ('data',)."""

@@ -40,6 +40,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--engines", type=int, default=4)
+    ap.add_argument("--tp", default="1",
+                    help="tensor-parallel degree per engine: a single "
+                         "int ('2') shards every engine over that many "
+                         "devices, or a comma list ('2,1,1,1') for a "
+                         "heterogeneous cluster (DESIGN.md §Sharded "
+                         "serving; needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N or "
+                         "real devices)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--policy", default="cascade",
                     choices=["cascade", "round-robin", "least-loaded"])
@@ -135,6 +143,17 @@ def main() -> None:
                            transfer_loss_p=args.transfer_loss_p,
                            transfer_stall_p=args.transfer_stall_p)
 
+    tp = ([int(x) for x in args.tp.split(",")] if "," in args.tp
+          else int(args.tp))
+    tps = tp if isinstance(tp, list) else [tp] * args.engines
+    if any(t > 1 for t in tps):
+        assert not args.host_loop, "--tp > 1 needs the device-resident loop"
+        need = max(tps)
+        assert len(jax.devices()) >= need, (
+            f"--tp {args.tp} needs {need} devices, have "
+            f"{len(jax.devices())} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} for CPU)")
+
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -151,6 +170,7 @@ def main() -> None:
                                   migration_timeout_steps=
                                   args.migration_timeout_steps,
                                   dead_after_steps=args.dead_after_steps),
+                     tp=tp,
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,
                      kv_dtype=args.kv_dtype,

@@ -201,3 +201,62 @@ def cache_shardings(cache_shapes, mesh, *, batch_size: int,
 
 def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# Serving tensor parallelism (DESIGN.md §Sharded serving)
+# --------------------------------------------------------------------------
+# The training PARAM_RULES already express the serving TP layout for every
+# dense decoder weight: wq/wk/wv/b* split the head dim, wo splits its
+# H·Dh contraction dim, ffn w_gate/w_up/b_up split F, w_down splits its F
+# contraction dim, embed splits V (rows) and unembed splits V (columns) —
+# exactly the manual-collective contract the tp_axis forwards implement.
+# Only MoE differs: training shards the EXPERT axis (all-to-all dispatch),
+# while the serving engine keeps every expert on every shard and splits
+# the per-expert FFN dim F (router replicated) so moe_dense needs just
+# one psum after the w_down contraction.
+_SERVING_OVERRIDES: Sequence[Tuple[str, int]] = (
+    (r"moe/router$", -1),                # replicated
+    (r"moe/w_(gate|up)$", 1),            # [L, E, D, F] -> split F
+    (r"moe/w_down$", 2),                 # [L, E, F, D] -> split F
+)
+
+
+def serving_param_spec(path: str, shape: Tuple[int, ...],
+                       model_size: int) -> P:
+    """PartitionSpec of one serving parameter under tensor parallelism.
+    Non-divisible dims replicate (the Engine asserts divisibility of the
+    dims that MUST split — kv heads and vocab)."""
+    for pat, dim_from_end in _SERVING_OVERRIDES:
+        if re.search(pat, path):
+            if dim_from_end < 0:
+                return P()
+            d = len(shape) - dim_from_end
+            spec: list = [None] * len(shape)
+            if 0 <= d < len(shape) and shape[d] % model_size == 0:
+                spec[d] = "model"
+            return P(*spec) if any(spec) else P()
+    return param_spec(path, shape, model_size)
+
+
+def serving_param_spec_tree(params, tp: int) -> Any:
+    """PartitionSpec pytree for a serving param tree at TP size ``tp``."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [serving_param_spec(_path_str(p), tuple(l.shape), tp)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+def pool_spec_tree(pool) -> Any:
+    """PartitionSpec pytree for a paged KV pool (or a contiguous KV
+    piece): the kv-head axis — dim 3 of [L, NB, BS, Hkv, Dh] rows and of
+    [L, NB, BS, Hkv] int8 scales — shards on 'model'; block ids, work
+    lists and every other axis stay replicated, so the allocator, prefix
+    index and migration bookkeeping never see the mesh."""
+    def one(leaf):
+        nd = len(leaf.shape)
+        assert nd >= 4, f"pool leaf rank {nd} < 4"
+        spec = [None] * nd
+        spec[3] = "model"
+        return P(*spec)
+    return jax.tree.map(one, pool)

@@ -17,7 +17,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, dense_init
+from repro.models.common import ModelConfig, dense_init, psum_if_tp
 
 NEG_INF = -1e30
 
@@ -122,12 +122,18 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False):
 
 def _project_qkv(p, cfg: ModelConfig, x):
     B, T, _ = x.shape
-    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = x @ p["wq"]
     k = x @ p["wk"]
     v = x @ p["wv"]
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # head counts come from the projection widths, NOT cfg: under serving
+    # tensor parallelism (DESIGN.md §Sharded serving) the local wq/wk/wv
+    # shards hold H/TP and Hkv/TP heads, and the contiguous output-dim
+    # split keeps each shard's q heads aligned with its own kv heads (GQA
+    # group size G = H/Hkv is shard-invariant).
+    dh = cfg.head_dim
+    h, hk = q.shape[-1] // dh, k.shape[-1] // dh
     return (q.reshape(B, T, h, dh), k.reshape(B, T, hk, dh),
             v.reshape(B, T, hk, dh))
 
@@ -260,7 +266,7 @@ def attention_prefill(p, cfg: ModelConfig, x, positions, *, mrope_positions=None
     else:
         mask = _causal_mask(T, T, 0, cfg.sliding_window)
         out = _gqa_sdpa(q, k, v, mask)
-    return (out.reshape(B, T, -1) @ p["wo"]), (k, v)
+    return psum_if_tp(out.reshape(B, T, -1) @ p["wo"], cfg), (k, v)
 
 
 # --------------------------------------------------------------------------
@@ -404,7 +410,8 @@ def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos,
     else:
         mask = (kpos <= pos[:, None])[:, None, None, None, :]
     out = _gqa_sdpa(q, new_k, new_v, mask)
-    return (out.reshape(B, 1, -1) @ p["wo"]), KVCache(new_k, new_v)
+    return psum_if_tp(out.reshape(B, 1, -1) @ p["wo"], cfg), \
+        KVCache(new_k, new_v)
 
 
 # --------------------------------------------------------------------------
@@ -496,7 +503,7 @@ def attention_decode_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
         kpos = jnp.arange(k_seq.shape[1])[None, :]
         mask = (kpos <= pos[:, None])[:, None, None, None, :]
         out = _gqa_sdpa(q, k_seq, v_seq, mask)
-    return (out.reshape(B, 1, -1) @ p["wo"]), new_pool
+    return psum_if_tp(out.reshape(B, 1, -1) @ p["wo"], cfg), new_pool
 
 
 def attention_prefill_chunk_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
@@ -568,7 +575,7 @@ def attention_prefill_chunk_paged(p, cfg: ModelConfig, x, pool_l: KVCache,
         kpos = jnp.arange(k_seq.shape[1])[None, None, :]        # [1, 1, S]
         mask = (kpos <= positions[:, :, None])[:, None, None]   # [B,1,1,C,S]
         out = _gqa_sdpa(q, k_seq, v_seq, mask)
-    return (out.reshape(B, C, -1) @ p["wo"]), new_pool
+    return psum_if_tp(out.reshape(B, C, -1) @ p["wo"], cfg), new_pool
 
 
 def attention_mixed_paged(p, cfg: ModelConfig, x_dec, x_ck, pool_l,
@@ -650,8 +657,8 @@ def attention_mixed_paged(p, cfg: ModelConfig, x_dec, x_ck, pool_l,
         kpos = jnp.arange(kc_seq.shape[1])[None, None, :]
         mask = (kpos <= positions[:, :, None])[:, None, None]
         out_c = _gqa_sdpa(qc, kc_seq, vc_seq, mask)
-    return (out_d.reshape(Bd, 1, -1) @ p["wo"],
-            out_c.reshape(Bp, C, -1) @ p["wo"], new_pool)
+    return (psum_if_tp(out_d.reshape(Bd, 1, -1) @ p["wo"], cfg),
+            psum_if_tp(out_c.reshape(Bp, C, -1) @ p["wo"], cfg), new_pool)
 
 
 def make_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,

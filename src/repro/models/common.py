@@ -74,6 +74,13 @@ class ModelConfig:
     # pins the scatter output so GSPMD reshards the 1-token operand
     # instead of round-tripping the multi-GiB cache. None = off.
     kv_cache_spec: Any = None
+    # serving tensor parallelism (DESIGN.md §Sharded serving): mesh axis
+    # name the forward runs under via shard_map. When set, every weight
+    # matrix is the LOCAL shard (q/kv heads, FFN dim, vocab split over
+    # the axis) and the forward inserts the manual collectives: psum
+    # after wo / w_down contractions, masked-embed psum, logits
+    # all-gather. None = single-device (no collectives traced).
+    tp_axis: Optional[str] = None
     source: str = ""               # citation bracket from the assignment
 
     def __post_init__(self):
@@ -121,6 +128,15 @@ def dense_init(key, shape, dtype, scale: float = 1.0):
 
 def embed_init(key, shape, dtype):
     return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def psum_if_tp(x, cfg: "ModelConfig"):
+    """All-reduce a partial activation over the serving tensor-parallel
+    axis — identity when ``cfg.tp_axis`` is unset, so single-device
+    forwards trace exactly as before (DESIGN.md §Sharded serving)."""
+    if cfg.tp_axis is None:
+        return x
+    return jax.lax.psum(x, cfg.tp_axis)
 
 
 def maybe_shard_activations(x, cfg: "ModelConfig"):

@@ -19,7 +19,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, act_fn, dense_init
+from repro.models.common import ModelConfig, act_fn, dense_init, psum_if_tp
 
 
 # --------------------------------------------------------------------------
@@ -45,8 +45,13 @@ def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None):
 def ffn(p, cfg: ModelConfig, x):
     a = act_fn(cfg.act)
     if "w_gate" in p:
-        return (a(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
-    return a(x @ p["w_up"] + p["b_up"]) @ p["w_down"] + p["b_down"]
+        return psum_if_tp(
+            (a(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"], cfg)
+    # gelu path: b_up is F-sharded like w_up's output, so it adds
+    # pre-reduce; b_down is replicated and must add exactly once — AFTER
+    # the psum over the F-contraction partials.
+    return psum_if_tp(a(x @ p["w_up"] + p["b_up"]) @ p["w_down"], cfg) \
+        + p["b_down"]
 
 
 # --------------------------------------------------------------------------
@@ -78,11 +83,15 @@ def _route(p, cfg: ModelConfig, xf):
 
 
 def _experts(p, cfg: ModelConfig, xe):
-    """Batched expert FFN. xe [E, ..., D] -> [E, ..., D]."""
+    """Batched expert FFN. xe [E, ..., D] -> [E, ..., D]. Under serving
+    tensor parallelism the per-expert FFN dim F is the sharded axis
+    (every shard holds all experts, F/TP wide — the router stays
+    replicated), so the w_down contraction is a partial sum."""
     a = act_fn(cfg.act)
     h = jnp.einsum("e...d,edf->e...f", xe, p["w_gate"])
     u = jnp.einsum("e...d,edf->e...f", xe, p["w_up"])
-    return jnp.einsum("e...f,efd->e...d", a(h) * u, p["w_down"])
+    return psum_if_tp(
+        jnp.einsum("e...f,efd->e...d", a(h) * u, p["w_down"]), cfg)
 
 
 def moe_dense(p, cfg: ModelConfig, x):

@@ -92,7 +92,20 @@ def block_decode(pl, cfg: ModelConfig, x, cache_l: KVCache, pos,
 # --------------------------------------------------------------------------
 def embed_tokens(p, cfg: ModelConfig, tokens, vision_embeds=None,
                  vision_mask=None):
-    x = p["embed"][tokens]
+    if cfg.tp_axis is not None:
+        # vocab-sharded lookup (DESIGN.md §Sharded serving): each shard
+        # holds V/TP contiguous embedding rows; out-of-range ids read a
+        # clamped row, are zeroed, and the psum assembles the one real
+        # row — exact, because exactly one shard contributes non-zeros.
+        vloc = p["embed"].shape[0]
+        idx = jax.lax.axis_index(cfg.tp_axis)
+        local = tokens - idx * vloc
+        ok = (local >= 0) & (local < vloc)
+        x = jnp.where(ok[..., None],
+                      p["embed"][jnp.clip(local, 0, vloc - 1)], 0)
+        x = jax.lax.psum(x, cfg.tp_axis)
+    else:
+        x = p["embed"][tokens]
     if vision_embeds is not None and vision_mask is not None:
         # place the precomputed patch embeddings (VLM stub frontend) at the
         # masked positions, in order.
@@ -106,7 +119,16 @@ def embed_tokens(p, cfg: ModelConfig, tokens, vision_embeds=None,
 
 def unembed(p, cfg: ModelConfig, x):
     w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
-    return x @ w
+    logits = x @ w
+    if cfg.tp_axis is not None:
+        # each shard computed V/TP logit columns (tied embeddings shard V
+        # on dim 0, so the transpose lines up); the all-gather makes the
+        # full vocab visible on every shard — argmax sampling then runs
+        # replicated INSIDE the jitted step, keeping the one-d2h-per-step
+        # discipline (DESIGN.md §Sharded serving).
+        logits = jax.lax.all_gather(logits, cfg.tp_axis,
+                                    axis=logits.ndim - 1, tiled=True)
+    return logits
 
 
 # --------------------------------------------------------------------------

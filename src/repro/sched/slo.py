@@ -49,15 +49,55 @@ def priority_of(slo_class: str) -> int:
 
 
 def queue_key(slo_class: str, arrival: float, size: float, seq: int,
-              *, time_scale: float = 1.0) -> Tuple[int, float, float, int]:
+              *, time_scale: float = 1.0,
+              promote: int = 0) -> Tuple[int, float, float, int]:
     """Waiting-queue sort key: (priority, TTFT deadline, size, seq).
 
     ``time_scale`` converts the spec's abstract-seconds budget into the
     caller's clock (1.0 for the sim, steps-per-second for the engine).
+
+    ``promote`` is the starvation/aging guard (DESIGN.md §SLO sched): a
+    recompute-preempted request that keeps waiting climbs one priority
+    class per promotion step, floored at the top class — so saturated
+    high-class traffic can delay but never permanently starve a victim.
     """
     spec = slo_of(slo_class)
     deadline = float(arrival) + spec.ttft_slo * float(time_scale)
-    return (spec.priority, deadline, float(size), int(seq))
+    return (max(spec.priority - int(promote), 0), deadline,
+            float(size), int(seq))
+
+
+def aging_promotion(slo_class: str, preempted_at: float, now: float,
+                    *, time_scale: float = 1.0) -> int:
+    """Starvation guard for recompute-preempted requests: priority
+    classes earned by queue age — one per full TTFT budget elapsed since
+    the preemption. A just-preempted request keeps its class (promotion
+    0, bit-identical short-run behavior); one that has waited a whole
+    TTFT budget outranks fresh same-class arrivals, and after enough
+    budgets it reaches the top class — so saturated high-class traffic
+    can delay but never permanently starve a victim. Shared by the
+    engine and the sim so decision logs stay comparable."""
+    spec = slo_of(slo_class)
+    budget = max(spec.ttft_slo * float(time_scale), 1e-9)
+    return int(max(float(now) - float(preempted_at), 0.0) / budget)
+
+
+def tpot_hopeless(slo_class: str, first_token: float, now: float,
+                  total_new_tokens: int, *,
+                  time_scale: float = 1.0) -> bool:
+    """Has this decode already blown its TPOT deadline beyond recovery?
+
+    True when even finishing the REMAINING tokens instantly could not
+    bring the mean per-token latency back under ``tpot_slo``: the time
+    already elapsed since the first token exceeds the budget for the
+    request's entire output. Such a request is a lost cause for TPOT
+    attainment — preempting healthy traffic to serve it buys nothing, so
+    admission control skips it as a preemptor (it still runs and
+    finishes; it just can't evict others)."""
+    spec = slo_of(slo_class)
+    budget = spec.tpot_slo * float(time_scale) * max(
+        int(total_new_tokens) - 1, 1)
+    return (float(now) - float(first_token)) > budget
 
 
 def insert_sorted(queue: List, item) -> None:

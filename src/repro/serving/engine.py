@@ -54,15 +54,20 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.migration import (gather_kv_blocks, kv_bytes,
                                   scatter_kv_blocks)
 from repro.kernels.cost import pow2_bucket
+from repro.launch.mesh import make_tp_mesh
+from repro.launch.shardings import pool_spec_tree, serving_param_spec_tree
 from repro.models.attention import (QuantKVCache, dequantize_piece,
                                     quantize_piece, resolve_paged_backend)
-from repro.models.model import Model
+from repro.models.model import Model, build_model
 from repro.sched.policy import park_or_recompute
-from repro.sched.slo import insert_sorted, priority_of, queue_key
+from repro.sched.slo import (aging_promotion, insert_sorted, priority_of,
+                             queue_key, tpot_hopeless)
 from repro.serving.block_pool import (BlockAllocator, blocks_for, chain_hash,
                                       prompt_chain)
 from repro.serving.request import ServeRequest, State
@@ -144,10 +149,37 @@ class Engine:
                  prefix_cache: Optional[bool] = None,
                  kv_dtype: str = "bf16",
                  preemption: Optional[bool] = None,
-                 slo_time_scale: float = 1.0):
+                 slo_time_scale: float = 1.0,
+                 tp: int = 1):
         assert model.cfg.family in ("dense", "moe", "vlm", "ssm"), \
             "engine supports decoder-only families"
         assert kv_dtype in ("bf16", "int8"), kv_dtype
+        # Serving tensor parallelism (DESIGN.md §Sharded serving): tp > 1
+        # rebuilds the model with the manual-collective tp_axis, pins
+        # params + pool to a 1-D 'model' mesh over the first ``tp`` local
+        # devices, and runs every attention-bearing jit through shard_map.
+        # Only the pool's kv-head axis is sharded — the allocator, prefix
+        # index, block tables and migration wire format never see the mesh.
+        self.tp = int(tp)
+        if self.tp > 1:
+            cfg = model.cfg
+            assert model.supports_paged and paged is not False, \
+                "tensor-parallel serving needs the paged block pool"
+            assert device_resident is not False, \
+                "tensor-parallel serving needs the device-resident loop"
+            assert cfg.num_kv_heads % self.tp == 0, \
+                f"kv heads {cfg.num_kv_heads} not divisible by tp={self.tp}"
+            assert cfg.num_heads % self.tp == 0, \
+                f"heads {cfg.num_heads} not divisible by tp={self.tp}"
+            assert cfg.vocab_size % self.tp == 0, \
+                f"vocab {cfg.vocab_size} not divisible by tp={self.tp}"
+            assert cfg.d_ff % self.tp == 0, \
+                f"d_ff {cfg.d_ff} not divisible by tp={self.tp}"
+            model = build_model(dataclasses.replace(cfg, tp_axis="model"))
+            self.mesh = make_tp_mesh(self.tp)
+            self._pspec = serving_param_spec_tree(params, self.tp)
+            params = jax.device_put(params, jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), self._pspec))
         self.id = engine_id
         self.model = model
         self.params = params
@@ -159,7 +191,10 @@ class Engine:
             assert model.supports_paged, \
                 f"{model.cfg.name} ({model.cfg.family}) has no paged path"
             self.block_size = block_size
-            self.num_blocks = self.token_budget // block_size
+            # ``token_budget`` is the PER-DEVICE pool budget: each shard
+            # holds Hkv/tp heads of every block, so a tp-engine owns tp×
+            # the blocks (and resident tokens) at equal per-device bytes.
+            self.num_blocks = (self.token_budget * self.tp) // block_size
             assert self.num_blocks > 0, \
                 f"token_budget {self.token_budget} < one block ({block_size})"
             # capacity is block-granular: tokens that don't fill a block
@@ -182,6 +217,10 @@ class Engine:
             else:
                 self.cache = model.init_paged_cache(self.num_blocks + 1,
                                                     block_size)
+            if self.tp > 1:
+                self._pool_spec = pool_spec_tree(self.cache)
+                self.cache = jax.device_put(self.cache, jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), self._pool_spec))
             self.block_tables: List[List[int]] = [[] for _ in range(max_slots)]
             self._bytes_per_block = kv_bytes(self.cache) / (self.num_blocks + 1)
             self.device_resident = (device_resident
@@ -201,7 +240,14 @@ class Engine:
                 self._dev_tok = jnp.zeros((max_slots,), jnp.int32)
                 self._burst_fns: Dict[Tuple[int, int], Callable] = {}
                 self._mixed_fns: Dict[int, Callable] = {}
-                self._prefill_bucketed = jax.jit(model.prefill_bucketed)
+                if self.tp > 1:
+                    # bucketed prefill returns a contiguous KV piece
+                    # [L, B, P, Hkv, Dh] — kv heads sharded like the pool
+                    self._prefill_bucketed = jax.jit(self._smap(
+                        model.prefill_bucketed, (self._pspec, P(), P()),
+                        (P(), P(None, None, None, "model", None))))
+                else:
+                    self._prefill_bucketed = jax.jit(model.prefill_bucketed)
                 self._pending_first: List[Tuple[ServeRequest, jnp.ndarray]] = []
             else:
                 # the host loop honors the backend too (attn_num_work
@@ -231,10 +277,14 @@ class Engine:
             assert chunk_ok, \
                 f"{model.cfg.name}: chunked prefill needs a paged engine " \
                 "and Model.prefill_chunk"
-            self._prefill_chunk = jax.jit(functools.partial(
-                model.prefill_chunk,
-                attn_backend=self.attn_backend,
-                attn_interpret=self.attn_interpret))
+            ck = functools.partial(model.prefill_chunk,
+                                   attn_backend=self.attn_backend,
+                                   attn_interpret=self.attn_interpret)
+            if self.tp > 1:
+                ck = self._smap(ck, (self._pspec, self._pool_spec,
+                                     P(), P(), P(), P()),
+                                (P(), self._pool_spec))
+            self._prefill_chunk = jax.jit(ck)
         # Fused mixed iterations (DESIGN.md §Fused mixed-iteration
         # attention): when the backend is "fused" and the model has a
         # mixed_step, the device loop runs the decode batch AND the step's
@@ -273,6 +323,12 @@ class Engine:
         self.preemptions = 0         # victim pauses (park + recompute)
         self.preempt_recomputes = 0  # victims whose KV was dropped
         self.resumes = 0             # park restores + recompute completions
+        # TPOT-deadline admission (DESIGN.md §SLO scheduling): resumed
+        # decodes whose TPOT is already unrecoverable never preempt
+        # healthy traffic — counted here (once per request) against
+        # attainment instead
+        self.tpot_skipped = 0
+        self._tpot_hopeless_ids: set = set()
         self.steps = 0
         self.tokens_out = 0
         self.peak_kv_bytes = 0.0
@@ -291,6 +347,33 @@ class Engine:
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("cache_len",))
         _LIVE_ENGINES.append(weakref.ref(self))
+
+    # ---- serving tensor parallelism (DESIGN.md §Sharded serving) ----------
+    def _smap(self, fn, in_specs, out_specs):
+        """shard_map a forward over this engine's 1-D 'model' mesh.
+        ``check_rep=False``: block tables / work lists are replicated by
+        construction and the psum sites live inside the model."""
+        return shard_map(fn, self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    def _localize_piece(self, piece):
+        """Adopt a migration piece gathered on ANOTHER engine's mesh: pull
+        it to host and re-place it under this engine's sharding (plain
+        device arrays for tp=1). Same-mesh pieces pass through untouched.
+        The host copy is migration traffic — accounted by the cluster's
+        byte ledger, not the step's d2h discipline."""
+        leaves = jax.tree_util.tree_leaves(piece)
+        if not leaves or not hasattr(leaves[0], "sharding"):
+            return piece
+        here = jax.tree_util.tree_leaves(self.cache)[0].sharding
+        if leaves[0].sharding.device_set == here.device_set:
+            return piece
+        host = jax.tree.map(np.asarray, piece)
+        if self.tp > 1:
+            return jax.device_put(host, jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s),
+                pool_spec_tree(piece)))
+        return jax.tree.map(jnp.asarray, host)
 
     # ---- drain-time leak check (DESIGN.md §Fault tolerance) ---------------
     def check_drained(self, strict: bool = True) -> None:
@@ -504,6 +587,7 @@ class Engine:
         matching sim.Instance's documented semantics."""
         admitted = []
         if self.slo_sched:
+            self._age_waiting()
             self._resume_ready()
         while self.waiting:
             req = self.waiting[0]
@@ -840,6 +924,18 @@ class Engine:
         victim was preempted; the caller re-checks admission."""
         if not self.paged:
             return False        # a monolithic slot IS its memory: no park
+        if (req.generated and req.first_token_step is not None
+                and tpot_hopeless(req.slo_class, req.first_token_step,
+                                  self.steps, req.max_new_tokens,
+                                  time_scale=self.slo_time_scale)):
+            # TPOT-deadline admission: this resumed decode has already
+            # blown its per-token deadline beyond recovery — preempting
+            # healthy traffic for it buys no attainment. It waits for
+            # organic capacity and is counted against attainment.
+            if req.req_id not in self._tpot_hopeless_ids:
+                self._tpot_hopeless_ids.add(req.req_id)
+                self.tpot_skipped += 1
+            return False
         pr = priority_of(req.slo_class)
         short = self._mem_shortfall(req)
         cands = self._victim_slots(pr)
@@ -932,6 +1028,7 @@ class Engine:
         req.slot = None
         req.state = State.WAITING
         req.preemptions += 1
+        req.preempted_step = self.steps      # aging clock starts now
         self.preemptions += 1
         self.preempt_recomputes += 1
         self._seq += 1
@@ -939,6 +1036,34 @@ class Engine:
                                   self._worst_tokens(req), self._seq,
                                   time_scale=self.slo_time_scale)
         insert_sorted(self.waiting, req)
+
+    def _age_waiting(self) -> None:
+        """Starvation/aging guard (DESIGN.md §SLO scheduling): a
+        recompute-preempted request still waiting climbs one priority
+        class per TTFT budget elapsed since its preemption
+        (sched.slo.aging_promotion), so saturated higher-class traffic
+        cannot starve it forever. Keys keep their original deadline/size/
+        seq components — within a promoted class the victim competes on
+        its true deadline."""
+        changed = False
+        for req in self.waiting:
+            if req.preempted_step is None:
+                continue
+            promote = aging_promotion(req.slo_class, req.preempted_step,
+                                      self.steps,
+                                      time_scale=self.slo_time_scale)
+            if promote <= 0:
+                continue
+            key = queue_key(req.slo_class, req.arrival_step,
+                            self._worst_tokens(req), req.sched_key[3],
+                            time_scale=self.slo_time_scale, promote=promote)
+            if key != req.sched_key:
+                req.sched_key = key
+                changed = True
+        if changed:
+            ordered = sorted(self.waiting, key=lambda r: r.sched_key)
+            self.waiting.clear()
+            self.waiting.extend(ordered)
 
     def _resume_ready(self) -> None:
         """Restore parked requests into free slots — unless a waiting
@@ -1089,6 +1214,10 @@ class Engine:
                 one, (cache, tok, length), None, length=horizon)
             return cache, tok, length, toks    # toks [horizon, max_slots]
 
+        if self.tp > 1:
+            burst = self._smap(burst,
+                               (self._pspec, self._pool_spec, P(), P(), P()),
+                               (self._pool_spec, P(), P(), P()))
         fn = jax.jit(burst)
         self._burst_fns[key] = fn
         return fn
@@ -1119,6 +1248,10 @@ class Engine:
             ck_tok = jnp.argmax(ck_logits, axis=-1).astype(jnp.int32)
             return cache, tok, length, new_tok, ck_tok
 
+        if self.tp > 1:
+            step = self._smap(step, (self._pspec, self._pool_spec,
+                                     P(), P(), P(), P(), P(), P(), P()),
+                              (self._pool_spec, P(), P(), P(), P()))
         fn = jax.jit(step)
         self._mixed_fns[num_work] = fn
         return fn
@@ -1412,6 +1545,7 @@ class Engine:
         if not self.can_accept(req):
             return False
         slot = self._free_slot()
+        piece = self._localize_piece(piece)
         # a migrated shared prefix re-imports as PRIVATE (DESIGN.md
         # §Prefix cache): the wire piece is a plain contiguous gather, the
         # receiver allocates fresh blocks and reserves true length —

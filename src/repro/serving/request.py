@@ -71,6 +71,11 @@ class ServeRequest:
     sched_key: Optional[tuple] = dataclasses.field(
         default=None, repr=False, compare=False)
     preemptions: int = 0
+    # starvation/aging guard (DESIGN.md §SLO scheduling): step at which a
+    # recompute preemption re-enqueued this request; while it waits its
+    # queue key is promoted one class per elapsed TTFT budget
+    # (sched.slo.aging_promotion). None = never recompute-preempted.
+    preempted_step: Optional[int] = None
 
     @property
     def length(self) -> int:

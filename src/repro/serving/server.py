@@ -87,6 +87,12 @@ class EngineView:
     def queued_tokens(self) -> float:
         return float(self.eng.queued_tokens())
 
+    def capacity_weight(self) -> float:
+        """Instance-units this engine counts for — its tensor-parallel
+        ways (DESIGN.md §Sharded serving). FakeEngine harnesses without
+        a ``tp`` attribute weigh 1."""
+        return float(getattr(self.eng, "tp", 1) or 1)
+
     def requests(self) -> List[ReqView]:
         return [ReqView(r, r.req_id, float(len(r.prompt)), float(r.length),
                         ctx_done=float(r.ctx_done),
@@ -223,6 +229,7 @@ class MILSServer:
                  chunked_prefill: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  kv_dtype: Optional[str] = None,
+                 tp: Any = 1,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
         self.cfg = cfg
@@ -231,6 +238,18 @@ class MILSServer:
         # constructor kwargs override the ServerConfig defaults
         attn_backend = attn_backend or cfg.attn_backend
         kv_dtype = kv_dtype or cfg.kv_dtype
+        # tensor parallelism (DESIGN.md §Sharded serving): an int gives
+        # every engine the same TP ways; a sequence gives engine i
+        # tp[i] — a HETEROGENEOUS cluster (e.g. (2, 1, 1)) whose capacity
+        # weights the control plane uses for stage claiming and load
+        # normalization. Engines own disjoint device prefixes-by-mesh.
+        if isinstance(tp, (list, tuple)):
+            tps = [int(x) for x in tp]
+            assert len(tps) == plan.num_instances, \
+                f"tp has {len(tps)} entries for {plan.num_instances} engines"
+        else:
+            tps = [int(tp)] * plan.num_instances
+        self.tps = tps
         if engine_factory is None:
             def engine_factory(i):
                 return Engine(i, model, params, max_slots=max_slots,
@@ -243,7 +262,8 @@ class MILSServer:
                               prefix_cache=prefix_cache,
                               kv_dtype=kv_dtype,
                               preemption=cfg.preemption,
-                              slo_time_scale=cfg.slo_time_scale)
+                              slo_time_scale=cfg.slo_time_scale,
+                              tp=tps[i])
         self._engine_factory = engine_factory
         self.engines = [engine_factory(i)
                         for i in range(plan.num_instances)]
@@ -364,7 +384,9 @@ class MILSServer:
     def _inject_faults(self) -> None:
         if self.injector is None:
             return
-        for iid, at in self.cfg.faults.crashes:
+        # all_crashes folds correlated rack events into the per-instance
+        # schedule — several engines can die in the same step
+        for iid, at in self.cfg.faults.all_crashes:
             if int(at) == self.steps and iid not in self.crashed:
                 self._crash(iid)
         for iid, at in self.cfg.faults.rejoins:
@@ -507,6 +529,8 @@ class MILSServer:
         out["preempt_recomputes"] = sum(getattr(e, "preempt_recomputes", 0)
                                         for e in self.engines)
         out["resumes"] = sum(getattr(e, "resumes", 0) for e in self.engines)
+        out["tpot_skipped"] = sum(getattr(e, "tpot_skipped", 0)
+                                  for e in self.engines)
         return out
 
 

@@ -21,7 +21,8 @@ from repro.control import (MIG_STARTED, XFER_LOST, XFER_OK, XFER_STALL,
 from repro.core.migration import plan_live_migration
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
-from repro.sim.costmodel import HardwareProfile, decode_rate
+from repro.sim.costmodel import (HardwareProfile, decode_rate,
+                                 scale_profile_tp)
 from repro.sim.events import EventQueue
 from repro.sim.instance import Instance, SimRequest
 from repro.sim.workload import Request
@@ -31,6 +32,13 @@ from repro.sim.workload import Request
 class ClusterConfig:
     num_instances: int = 16
     capacity_tokens: float = 400_000.0
+    # per-instance tensor-parallel ways (DESIGN.md §Sharded serving):
+    # None = homogeneous single-chip cluster (bit-identical legacy). A
+    # tuple of num_instances entries gives instance i a tp=tps[i] engine:
+    # its profile re-shards via scale_profile_tp and its KV capacity is
+    # capacity_tokens × tps[i] (capacity_tokens stays PER-DEVICE, exactly
+    # like Engine.token_budget).
+    tps: Optional[Tuple[int, ...]] = None
     kv_block_size: int = 16            # paged-cache allocation granularity
     # prompt-chunk tokens per mixed iteration (DESIGN.md §Chunked
     # prefill), mirroring serving.Engine's token-budgeted scheduler;
@@ -93,8 +101,15 @@ class Cluster:
         self.profile = profile
         self.events = EventQueue()
         self.rng = np.random.default_rng(cfg.seed)
+        tps = cfg.tps
+        if tps is not None:
+            assert len(tps) == cfg.num_instances, \
+                f"tps has {len(tps)} entries for {cfg.num_instances} instances"
         self.instances = [
-            Instance(i, profile, cfg.capacity_tokens, self.events,
+            Instance(i,
+                     scale_profile_tp(profile, tps[i]) if tps else profile,
+                     cfg.capacity_tokens * (tps[i] if tps else 1),
+                     self.events,
                      block_size=cfg.kv_block_size,
                      prefill_budget=cfg.prefill_token_budget,
                      prefix_cache=cfg.prefix_cache,
@@ -130,8 +145,11 @@ class Cluster:
         for r in requests:
             self.submit(r)
         if self.cfg.faults is not None:
-            # scripted chaos: crashes/rejoins are ordinary events
-            for iid, at in self.cfg.faults.crashes:
+            # scripted chaos: crashes/rejoins are ordinary events.
+            # all_crashes expands correlated rack events into the same
+            # per-instance schedule, so several instances can die in one
+            # tick (deterministic same-tick order: listed order).
+            for iid, at in self.cfg.faults.all_crashes:
                 self.events.push(
                     at, lambda i=self.instances[iid]: i.crash(self.events.now))
             for iid, at in self.cfg.faults.rejoins:
@@ -383,6 +401,12 @@ class SimInstanceView:
 
     def queued_tokens(self) -> float:
         return self.inst.queued_tokens()
+
+    def capacity_weight(self) -> float:
+        """Instance-units this simulated engine counts for (the tp ways
+        its profile spans) — the plane's stage claiming and load
+        normalization hook (DESIGN.md §Sharded serving)."""
+        return float(self.inst.profile.num_devices)
 
     def requests(self) -> List[ReqView]:
         return [ReqView(sr, sr.req.req_id, float(sr.req.input_len),

@@ -21,8 +21,9 @@ import math
 from typing import Sequence
 
 from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
-                                decode_attn_time_s, kv_bytes_per_elem,
-                                mixed_iter_time_s, prefill_flops)
+                                allreduce_time_s, decode_attn_time_s,
+                                kv_bytes_per_elem, mixed_iter_time_s,
+                                prefill_flops)
 from repro.models.common import ModelConfig
 
 
@@ -41,11 +42,24 @@ class HardwareProfile:
     ragged_backend: bool = False   # beyond-paper kernel flag
     fused_backend: bool = False    # ONE-launch fused mixed iterations
     kv_dtype: str = "bf16"         # bf16 | int8 block pool
+    # tensor parallelism (DESIGN.md §Sharded serving): chips this instance
+    # spans. Per-chip terms above are already divided by it; the iteration
+    # models add the ring-all-reduce collectives it costs (needs d_model).
+    num_devices: int = 1
+    d_model: int = 0
 
     @property
     def t_weights(self) -> float:
         """Weight-streaming floor of one decode iteration (memory-bound)."""
         return self.weight_bytes / self.hbm
+
+    def t_collective(self, n_tokens: float) -> float:
+        """Per-iteration tensor-parallel collective time: two psums per
+        layer (attention wo + FFN down projections) of an
+        [n_tokens, d_model] bf16 activation over the instance's chips.
+        Zero at num_devices == 1 — untouched single-chip parity."""
+        payload = 2.0 * self.num_layers * float(n_tokens) * self.d_model * 2.0
+        return allreduce_time_s(payload, self.num_devices)
 
 
 def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
@@ -53,7 +67,11 @@ def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
                         fused_backend: bool = False,
                         kv_dtype: str = "bf16") -> HardwareProfile:
     """Build a per-instance hardware profile from a model config.
-    ``tp``: tensor-parallel ways (divides weights + KV per chip).
+    ``tp``: tensor-parallel ways (DESIGN.md §Sharded serving) — divides
+    weights + KV per chip AND the attention grid's head counts (each
+    shard owns H/tp q heads over Hkv/tp kv heads, so the GQA ratio and
+    per-block time are unchanged while the per-chip grid shrinks tp×);
+    the iteration models then add the 2-psum/layer collective term.
     ``kv_dtype="int8"`` prices the quantized block pool — per-token KV
     bytes (and so block bytes / capacity) shrink by ``(Dh+4)/(2·Dh)``,
     and every attention DMA term moves the smaller bytes."""
@@ -70,7 +88,8 @@ def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
         attn_p = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
             + cfg.num_heads * cfg.head_dim * d
         kv_elem = kv_bytes_per_elem(kv_dtype, cfg.head_dim)
-        spec = AttnSpec(cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+        spec = AttnSpec(max(cfg.num_heads // tp, 1),
+                        max(cfg.num_kv_heads // tp, 1), cfg.head_dim,
                         kv_bytes=kv_elem)
         kv_tok = 2 * cfg.num_kv_heads * cfg.head_dim * kv_elem  # K+V
         attn_layers = (L // cfg.attn_every) if cfg.attn_every else L
@@ -93,6 +112,31 @@ def profile_from_config(cfg: ModelConfig, *, tp: int = 1,
         ragged_backend=ragged_backend,
         fused_backend=fused_backend,
         kv_dtype=kv_dtype,
+        num_devices=tp,
+        d_model=d,
+    )
+
+
+def scale_profile_tp(prof: HardwareProfile, tp: int) -> HardwareProfile:
+    """Re-shard a single-chip profile across ``tp`` chips (DESIGN.md
+    §Sharded serving): per-chip weights/KV shrink tp×, the attention grid
+    keeps H/tp q heads over Hkv/tp kv heads (GQA ratio unchanged), and
+    ``num_devices`` turns on the collective term. ``tp <= 1`` returns the
+    profile unchanged, so homogeneous clusters are bit-identical."""
+    if tp <= 1:
+        return prof
+    spec = prof.attn_spec
+    return dataclasses.replace(
+        prof,
+        attn_spec=dataclasses.replace(
+            spec,
+            num_q_heads=max(spec.num_q_heads // tp, 1),
+            num_kv_heads=max(spec.num_kv_heads // tp, 1)),
+        params=prof.params / tp,
+        params_total=prof.params_total / tp,
+        kv_bytes_per_token=prof.kv_bytes_per_token / tp,
+        weight_bytes=prof.weight_bytes / tp,
+        num_devices=tp,
     )
 
 
@@ -106,7 +150,8 @@ def decode_iter_time(lengths: Sequence[int], prof: HardwareProfile) -> float:
     t_attn = (decode_attn_time_s(lengths, prof.attn_spec,
                                  ragged=prof.ragged_backend) * attn_layers
               if attn_layers else 0.0)
-    return prof.t_fixed + prof.t_weights + n * t_tok + t_attn
+    return (prof.t_fixed + prof.t_weights + n * t_tok + t_attn
+            + prof.t_collective(n))
 
 
 def prefill_time(input_len: int, prof: HardwareProfile,
@@ -125,7 +170,7 @@ def prefill_time(input_len: int, prof: HardwareProfile,
     attn_layers = round(prof.num_layers * prof.attn_frac)
     t_quad = (prefill_flops(int(input_len), prof.attn_spec, cached)
               * attn_layers / prof.peak)
-    return prof.t_fixed + t_linear + t_quad
+    return prof.t_fixed + t_linear + t_quad + prof.t_collective(I)
 
 
 def mixed_iter_time(chunks: Sequence, decode_lengths: Sequence[int],
@@ -152,7 +197,8 @@ def mixed_iter_time(chunks: Sequence, decode_lengths: Sequence[int],
     t_attn = (mixed_iter_time_s(chunks, decode_lengths, prof.attn_spec,
                                 decode_backend=backend)
               * attn_layers if attn_layers else 0.0)
-    return prof.t_fixed + prof.t_weights + n * t_tok + t_linear + t_attn
+    return (prof.t_fixed + prof.t_weights + n * t_tok + t_linear + t_attn
+            + prof.t_collective(n + chunk_toks))
 
 
 def kv_block_bytes(prof: HardwareProfile, block_size: int) -> float:

@@ -24,7 +24,8 @@ from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.core.migration import MigrationManager
-from repro.sched.slo import insert_sorted, priority_of, queue_key
+from repro.sched.slo import (aging_promotion, insert_sorted, priority_of,
+                             queue_key, tpot_hopeless)
 from repro.serving.block_pool import blocks_for
 from repro.sim.costmodel import (HardwareProfile, decode_iter_time,
                                  mixed_iter_time, prefill_time)
@@ -73,6 +74,9 @@ class SimRequest:
     # waiting-queue sort key (repro.sched.slo.queue_key)
     sched_key: Optional[tuple] = None
     preemptions: int = 0
+    # starvation/aging guard (mirrors ServeRequest.preempted_step): sim
+    # time of the recompute preemption that re-enqueued this request
+    preempted_t: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -156,6 +160,9 @@ class Instance:
         self.preemptions = 0
         self.preempt_recomputes = 0
         self.resumes = 0
+        # TPOT-deadline admission (mirrors serving.Engine.tpot_skipped)
+        self.tpot_skipped = 0
+        self._tpot_hopeless_ids: set = set()
         self.iterating = False
         self.migrations = MigrationManager()
         self.inbound_reserved = 0.0      # tokens reserved for inbound transfers
@@ -344,6 +351,7 @@ class Instance:
     def _start_iteration(self, t: float) -> None:
         admitted: List[SimRequest] = []
         if self.slo_sched:
+            self._age_waiting(t)
             self._resume_ready()
         chunks: List = []                       # (sr, chunk_len) this iter
         budget = self.prefill_budget
@@ -369,6 +377,7 @@ class Instance:
                 # full batch: a higher-class head may park the lowest-
                 # class resident decode (KV pinned, seat freed)
                 if not (self.slo_sched
+                        and not self._tpot_guard(self.waiting[0], t)
                         and self._preempt_seat(self.waiting[0])):
                     break
                 continue
@@ -400,7 +409,8 @@ class Instance:
                     + revived + pending):
                 # memory-blocked: parking frees nothing — recompute-
                 # preempt the lowest-class victim's KV instead
-                if not (self.slo_sched and self._preempt_mem(head)):
+                if not (self.slo_sched and not self._tpot_guard(head, t)
+                        and self._preempt_mem(head, t)):
                     break
                 continue
             sr = self.waiting.popleft()
@@ -471,7 +481,7 @@ class Instance:
         self.preemptions += 1
         return True
 
-    def _preempt_mem(self, head: SimRequest) -> bool:
+    def _preempt_mem(self, head: SimRequest, t: float) -> bool:
         """Memory-blocked admission: drop the lowest-class largest
         victim's KV and re-enqueue it as a recompute resume — running
         victims first, then parked ones (whose pinned blocks are
@@ -482,7 +492,7 @@ class Instance:
             v = max(cands, key=lambda r: (priority_of(r.req.slo_class),
                                           r.kv_len))
             self.running.remove(v)
-            self._recompute_preempt(v)
+            self._recompute_preempt(v, t)
             return True
         pcands = [r for r in self.parked
                   if priority_of(r.req.slo_class) > pr]
@@ -491,10 +501,10 @@ class Instance:
         v = max(pcands, key=lambda r: (priority_of(r.req.slo_class),
                                        r.kv_len))
         self.parked.remove(v)
-        self._recompute_preempt(v)
+        self._recompute_preempt(v, t)
         return True
 
-    def _recompute_preempt(self, v: SimRequest) -> None:
+    def _recompute_preempt(self, v: SimRequest, t: float) -> None:
         """Drop a victim's KV; prefill must rebuild prompt + generated
         rows minus the pending last token (mirrors the engine's
         ``_requeue_recompute``)."""
@@ -503,6 +513,7 @@ class Instance:
         v.ctx_done = 0
         v.cached_tokens = 0
         v.preemptions += 1
+        v.preempted_t = t              # aging clock starts now
         self.preemptions += 1
         self.preempt_recomputes += 1
         self._seq += 1
@@ -510,6 +521,41 @@ class Instance:
                                 v.req.input_len + v.req.output_len,
                                 self._seq)
         insert_sorted(self.waiting, v)
+
+    def _age_waiting(self, t: float) -> None:
+        """Starvation/aging guard (mirrors Engine._age_waiting): promote
+        recompute-preempted waiters one class per TTFT budget waited."""
+        changed = False
+        for r in self.waiting:
+            if r.preempted_t is None:
+                continue
+            promote = aging_promotion(r.req.slo_class, r.preempted_t, t)
+            if promote <= 0:
+                continue
+            key = queue_key(r.req.slo_class, r.req.arrival,
+                            r.req.input_len + r.req.output_len,
+                            r.sched_key[3], promote=promote)
+            if key != r.sched_key:
+                r.sched_key = key
+                changed = True
+        if changed:
+            ordered = sorted(self.waiting, key=lambda q: q.sched_key)
+            self.waiting.clear()
+            self.waiting.extend(ordered)
+
+    def _tpot_guard(self, head: SimRequest, t: float) -> bool:
+        """TPOT-deadline admission (mirrors Engine._preempt_for's guard):
+        a resumed decode whose TPOT deadline is already unrecoverable
+        must not preempt healthy traffic — counted once per request."""
+        if head.generated <= 0 or head.first_token_t is None:
+            return False
+        if not tpot_hopeless(head.req.slo_class, head.first_token_t, t,
+                             head.req.output_len):
+            return False
+        if head.req.req_id not in self._tpot_hopeless_ids:
+            self._tpot_hopeless_ids.add(head.req.req_id)
+            self.tpot_skipped += 1
+        return True
 
     def _resume_ready(self) -> None:
         """Restore parked requests into free batch seats, unless a

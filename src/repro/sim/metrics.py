@@ -178,6 +178,8 @@ class SimResult:
             "preempt_recomputes": sum(i.preempt_recomputes
                                       for i in self.instances),
             "resumes": sum(i.resumes for i in self.instances),
+            "tpot_skipped": sum(getattr(i, "tpot_skipped", 0)
+                                for i in self.instances),
         }
 
     # ---- load balance (paper Fig. 16) ---------------------------------------

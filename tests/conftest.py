@@ -4,6 +4,18 @@ import sys
 # src-layout import path (tests runnable without install)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Two virtual host devices so the tensor-parallel serving tests
+# (tests/test_tp_engine.py, DESIGN.md §Sharded serving) get a real
+# 2-device mesh on CPU. Must land before the first jax import anywhere
+# in the session — conftest is imported before every test module, and
+# launch/dryrun.py uses the same flag for its 512-chip dry run.
+# Single-device code paths are unaffected: default placement stays on
+# device 0 and tp=1 engines never enter shard_map.
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=2")
+
 import numpy as np
 import pytest
 

@@ -739,6 +739,68 @@ def test_sim_and_server_parity_with_prefix_caching(prefix_cache):
         assert route_of[5] in (2, 3), "legacy path must route true length"
 
 
+def test_sim_and_server_parity_on_heterogeneous_tp_cluster():
+    """The ISSUE-9 acceptance parity: a heterogeneous-TP cluster — one
+    tp=2 instance plus three tp=1 — makes identical routing AND
+    migration decisions in both drivers. Capacity weights flow in
+    through ``InstanceView.capacity_weight()`` (sim: the scaled
+    profile's num_devices; server: the engine's ``tp``), so weighted
+    stage claiming gives the big instance the whole short stage
+    (weight 2 satisfies ``num_instances=2``) and the last stage takes
+    the remaining three."""
+    from repro.configs import get_config
+    from repro.serving.request import ServeRequest
+    from repro.serving.server import MILSServer, ServerConfig
+    from repro.sim.cluster import CascadePolicy, Cluster, ClusterConfig
+    from repro.sim.costmodel import profile_from_config
+    from repro.sim.workload import Request
+
+    plan = two_stage_plan(4, boundary=32.0)
+    tps = (2, 1, 1, 1)
+    lens = [(20, 40), (8, 4), (20, 40), (10, 6), (20, 40), (20, 40)]
+
+    # --- sim driver -------------------------------------------------------
+    trace = [Request(i, 8.0 * i, il, ol) for i, (il, ol) in enumerate(lens)]
+    policy = CascadePolicy(plan, None, refinement="none", balancing="rr")
+    cluster = Cluster(profile_from_config(get_config("llama3.2-3b")),
+                      policy, ClusterConfig(num_instances=4, seed=0,
+                                            prefill_token_budget=8,
+                                            tps=tps))
+    res = cluster.run(trace, duration=60.0)
+    assert len(res.completed) == len(trace)
+    sim_log = policy.plane.decisions
+
+    # --- server driver (fake engines carrying a tp attr, no JAX) ----------
+    def factory(i):
+        eng = FakeEngine(i, prefill_budget=8)
+        eng.tp = tps[i]
+        return eng
+
+    srv = MILSServer(None, None, plan, None,
+                     ServerConfig(refinement="none", balancing="rr", seed=0),
+                     tp=tps, engine_factory=factory)
+    for i, (il, ol) in enumerate(lens):
+        srv.submit_at(ServeRequest(i, np.zeros(il, np.int32), ol),
+                      step=8 * i)
+    fin = srv.run(max_steps=400)
+    assert len(fin) == len(lens)
+    srv_log = srv.plane.decisions
+
+    # weighted stage claiming: the tp=2 instance IS the short stage
+    for plane in (policy.plane, srv.plane):
+        assert plane.stages[0].instance_ids == [0]
+        assert plane.stages[1].instance_ids == [1, 2, 3]
+
+    routes = lambda log: [d for d in log if d[0] == "route"]
+    migs = lambda log: [d for d in log if d[0] == "migrate"]
+    assert routes(sim_log) == routes(srv_log)
+    assert migs(sim_log) == migs(srv_log)
+    # every arrival lands on the short stage's big instance; the four
+    # boundary-crossers migrate rr across the three tp=1 instances
+    assert all(d[2] == 0 for d in routes(sim_log))
+    assert len(migs(sim_log)) == 4
+
+
 def test_server_conserves_requests_with_fake_engines():
     """Open-loop server over the mock engine: conservation + streaming."""
     from repro.serving.request import ServeRequest

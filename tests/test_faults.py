@@ -51,6 +51,19 @@ def test_fault_injector_is_deterministic_and_redraws_per_attempt():
     assert [FaultInjector(spec).transfer_event(4) for _ in range(32)] != seq_a
 
 
+def test_rack_events_expand_into_crashes():
+    """A rack event is sugar for several same-tick crashes: ``all_crashes``
+    folds racks after the scripted singles, and the injector resolves
+    crash_time for every member."""
+    spec = FaultSpec(seed=0, crashes=((0, 1.0),),
+                     racks=(((1, 2), 4.0), ((3,), 9.0)))
+    assert spec.all_crashes == ((0, 1.0), (1, 4.0), (2, 4.0), (3, 9.0))
+    inj = FaultInjector(spec)
+    assert inj.crash_time(1) == 4.0 and inj.crash_time(2) == 4.0
+    assert inj.crash_time(3) == 9.0 and inj.crash_time(0) == 1.0
+    assert FaultSpec(seed=0).all_crashes == ()
+
+
 def test_fault_injector_scripted_lookups():
     spec = FaultSpec(seed=0, crashes=((2, 5.0),), rejoins=((2, 9.0),),
                      slowdowns=((1, 3.0), (0, 0.5)))
@@ -296,6 +309,38 @@ def test_sim_conserves_requests_under_random_crashes(seed, crash_at, victim):
     assert len(res.completed) == len(lens)
     ids = [r.req.req_id for r in res.completed]
     assert len(set(ids)) == len(ids), "a request finished twice"
+
+
+def test_sim_rack_crash_conserves_requests_and_folds_stage():
+    """Correlated-failure chaos (ISSUE 9): a rack event kills BOTH
+    stage-1 instances in one tick. The whole stage folds into the
+    survivors (no length range black-holes), every resident is
+    re-dispatched, and request conservation holds — each submitted
+    request ends exactly once."""
+    spec = FaultSpec(seed=0, racks=(((2, 3), 0.9),))
+    lens = [(20, 400), (8, 4), (20, 400), (10, 6), (40, 30), (36, 20)]
+    cluster, policy, res = _sim_run(lens, spec, duration=80.0,
+                                    suspect_after_s=1.0, dead_after_s=2.0)
+    log = policy.plane.decisions
+    assert ("dead", 2) in log and ("dead", 3) in log, \
+        "both rack members must die"
+    # both deaths land in the same liveness tick: no routing happens
+    # between them, only the first victim's resident re-dispatch
+    deads = [i for i, d in enumerate(log) if d[0] == "dead"]
+    assert len(deads) == 2
+    between = log[deads[0] + 1:deads[1]]
+    assert all(d[0] == "redispatch" for d in between), between
+    assert len(res.completed) == len(lens)
+    ids = [r.req.req_id for r in res.completed]
+    assert len(set(ids)) == len(ids), "a request finished twice"
+    assert all(not r.failed for r in res.completed)
+    s = res.summary()
+    assert s["downtime_i2"] > 0 and s["downtime_i3"] > 0
+    # long requests kept arriving at stage 1 after the fold: they must
+    # have been served by the surviving short-stage instances
+    long_done = [r for r in res.completed if r.req.input_len >= 36]
+    assert long_done and all(set(r.tokens_by_instance) <= {0, 1}
+                             for r in long_done if r.req.arrival > 0.9)
 
 
 def test_sim_slowdown_shifts_load_not_correctness():
