@@ -1,0 +1,348 @@
+"""Multi-tier KV cache: demote cold prefix chains to host RAM under
+memory pressure, promote them back on a hit (DESIGN.md §Multi-tier KV).
+
+Three views:
+
+  * **engine** — a real reduced-model engine serves prompt P cold, then a
+    large pressure prompt Q whose allocations reclaim (and, with the host
+    tier on, DEMOTE) P's parked chain, then P again warm: the warm run
+    must produce bit-identical greedy tokens while skipping >= 90% of the
+    prefill block-work (the promoted blocks are staged h2d, not
+    recomputed) and keeping the decode loop's one-d2h-per-step contract.
+    ``host_kv_budget=0`` measures the drop-on-reclaim baseline: same
+    pressure, zero hit, full recompute.
+  * **parity** — the SAME 4-request trace (warm group -> pressure ->
+    pressure -> re-admit group) through the discrete-event simulator AND
+    the real server; their control planes must log identical route
+    decisions, with the final arrival steered by the tiered-hit warm
+    filter (host-warm instance) instead of the RR rotation, and both
+    sides counting demotions and promotions.
+  * **sim** — `compare_policies(workload="shared_prefix",
+    host_kv_budget=...)` under tight per-instance capacity: the cluster
+    tiering experiment (TTFT + tier traffic, tiered vs drop-on-reclaim).
+
+Emits BENCH_kv_tiering.json at the repo root; `run()` feeds
+benchmarks/run.py. The asserted acceptance (CI smoke): warm-after-
+eviction tokens bit-identical to cold, >= 90% of prefill block-work
+skipped with tiering ON (0% OFF), warm TTFT strictly below cold, no
+extra d2h during the warm serve, and sim-vs-server route-decision
+parity on the demote -> route-on-tiered-hit -> promote trace.
+
+Run: PYTHONPATH=src python benchmarks/bench_kv_tiering.py
+     [--prompt 2048] [--pressure 2560] [--budget 64] [--new-tokens 8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+try:
+    from benchmarks.common import write_artifact
+except ImportError:                     # run as a plain script
+    from common import write_artifact
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import engine as engine_mod
+from repro.serving.block_pool import blocks_for
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest, State
+
+
+def _serve(eng, req):
+    """Submit and drain one request; returns (wall TTFT seconds,
+    steps taken, d2h calls) — the last two bound the decode hot loop:
+    tier traffic must never add a sync d2h inside step()."""
+    eng.submit(req)
+    steps0, d2h0 = eng.steps, engine_mod.D2H_CALLS
+    t0 = time.perf_counter()
+    ttft = None
+    while req.state is not State.FINISHED:
+        eng.step()
+        if ttft is None and req.first_token_step is not None:
+            ttft = time.perf_counter() - t0
+    eng.allocator.check_invariants()
+    return ttft, eng.steps - steps0, engine_mod.D2H_CALLS - d2h0
+
+
+def run_engine_scenario(model, params, *, prompt_len, pressure_len, budget,
+                        new_tokens, host_kv_budget, seed=0):
+    """cold P -> pressure Q (demotes P's chain) -> warm P (promotes)."""
+    rng = np.random.default_rng(seed)
+    vocab = model.cfg.vocab_size
+    bs = 16
+    max_seq = 1 << (pressure_len + 2 * new_tokens + 64).bit_length()
+    # pool sized so Q fits but its allocations must reclaim nearly all of
+    # P's parked chain: the head blocks demote (or drop) depth-first
+    num_blocks = blocks_for(pressure_len + new_tokens, bs) + 4
+    eng = Engine(0, model, params, max_slots=2, max_seq=max_seq,
+                 token_budget=num_blocks * bs, block_size=bs,
+                 prefill_token_budget=budget, attn_backend="dense",
+                 prefix_cache=True, host_kv_budget=host_kv_budget)
+    # jit warmup on DIFFERENT prompts (same shapes, disjoint chains)
+    # through the SAME cold -> pressure -> warm sequence, so the measured
+    # runs pay no compilation — including the promote-scatter shape,
+    # which only the warm-after-eviction path traces
+    dummy = rng.integers(0, vocab, prompt_len).astype(np.int32)
+    dummy_q = rng.integers(0, vocab, pressure_len).astype(np.int32)
+    _serve(eng, ServeRequest(7, dummy.copy(), new_tokens))
+    _serve(eng, ServeRequest(8, dummy_q.copy(), new_tokens))
+    _serve(eng, ServeRequest(9, dummy.copy(), new_tokens))
+
+    prompt = rng.integers(0, vocab, prompt_len).astype(np.int32)
+    pressure = rng.integers(0, vocab, pressure_len).astype(np.int32)
+    work0 = eng.prefill_work_blocks
+    cold = ServeRequest(0, prompt.copy(), new_tokens)
+    cold_ttft, _, _ = _serve(eng, cold)
+    cold_work = eng.prefill_work_blocks - work0
+
+    demote0, drop0 = eng.cache_demotions, eng.cache_drops
+    _serve(eng, ServeRequest(1, pressure.copy(), new_tokens))
+    demotions = eng.cache_demotions - demote0
+    drops = eng.cache_drops - drop0
+
+    promo0, pblocks0 = eng.cache_promotions, eng.promoted_blocks_total
+    work1 = eng.prefill_work_blocks
+    warm = ServeRequest(2, prompt.copy(), new_tokens)
+    warm_ttft, warm_steps, warm_d2h = _serve(eng, warm)
+    warm_work = eng.prefill_work_blocks - work1
+    eng.check_drained()
+    return {
+        "host_kv_budget": host_kv_budget,
+        "prompt_len": prompt_len,
+        "pressure_len": pressure_len,
+        "pool_blocks": num_blocks,
+        "cold_ttft_s": cold_ttft,
+        "warm_ttft_s": warm_ttft,
+        "cold_work_blocks": cold_work,
+        "warm_work_blocks": warm_work,
+        "block_work_skipped": 1.0 - warm_work / max(cold_work, 1),
+        "warm_cached_tokens": int(warm.cached_tokens),
+        "demotions": int(demotions),
+        "drops": int(drops),
+        "promotions": int(eng.cache_promotions - promo0),
+        "promoted_blocks": int(eng.promoted_blocks_total - pblocks0),
+        "warm_steps": int(warm_steps),
+        "warm_d2h_calls": int(warm_d2h),
+        "tokens": {"cold": list(cold.generated),
+                   "warm": list(warm.generated)},
+    }
+
+
+def _parity_trace():
+    from repro.sim.workload import Request
+    # req0 publishes group-0's chain on instance 0 (RR), req1 lands on
+    # instance 1 (RR), req2 lands on instance 0 and its allocations
+    # demote the idle group-0 chain, req3 re-admits the group: the warm
+    # filter must steer it to the HOST-warm instance 0 (pure RR would
+    # pick instance 1) and the admission promotes the chain back.
+    return [Request(0, 0.0, 96, 8, prefix_group=0, prefix_len=95),
+            Request(1, 5.0, 120, 8),
+            Request(2, 6.0, 120, 8),
+            Request(3, 30.0, 96, 8, prefix_group=0, prefix_len=95)]
+
+
+def run_parity_scenario(*, seed=0):
+    """Same demote -> route-on-tiered-hit -> promote trace through the
+    simulator and the real server; route decision logs must match."""
+    import math
+
+    from repro.core.partition import PipelinePlan, Stage
+    from repro.core.qoe import QoEModel
+    from repro.serving.server import (MILSServer, ServerConfig,
+                                      requests_from_trace)
+    from repro.sim.cluster import CascadePolicy
+    from repro.sim.experiment import run_policy
+
+    trace = _parity_trace()
+    plan = PipelinePlan([Stage(0.0, math.inf, 2)], 0.0)
+    qoe = QoEModel(np.array([1e-3, 1e-4, 1e-6, 0.0, 1e-6]))
+    # 12-block pools: the group chain (5-6 blocks) plus a 120-token
+    # pressure prompt (8 blocks) cannot coexist, so admission must demote
+    pool_tokens, host_tokens = 192, 192
+
+    pol = CascadePolicy(plan, qoe, refinement="none", balancing="rr")
+    res = run_policy("llama3.2-3b", pol, trace, 60.0, E=2,
+                     capacity_tokens=pool_tokens, seed=seed,
+                     prefill_token_budget=64, prefix_cache=True,
+                     preemption=False, host_kv_budget=host_tokens)
+    sim_routes = [d for d in pol.plane.decisions if d[0] == "route"]
+    sim_sum = res.summary()
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def factory(i):
+        return Engine(i, model, params, max_slots=2, max_seq=256,
+                      token_budget=pool_tokens, block_size=16,
+                      prefill_token_budget=64, attn_backend="dense",
+                      prefix_cache=True, host_kv_budget=host_tokens,
+                      preemption=False)
+
+    srv = MILSServer(model, params, plan, qoe,
+                     ServerConfig(policy="cascade", refinement="none",
+                                  balancing="rr", seed=seed,
+                                  preemption=False,
+                                  host_kv_budget=host_tokens),
+                     max_slots=2, max_seq=256, engine_factory=factory)
+    for req, step in requests_from_trace(trace, vocab_size=cfg.vocab_size,
+                                         max_seq=256, seed=seed):
+        srv.submit_at(req, step)
+    srv.run(max_steps=400)
+    srv_routes = [d for d in srv.plane.decisions if d[0] == "route"]
+    srv_sum = srv.summary()
+    return {
+        "sim_routes": [list(d) for d in sim_routes],
+        "server_routes": [list(d) for d in srv_routes],
+        "sim": {k: sim_sum[k] for k in
+                ("completed", "cache_demotions", "cache_drops",
+                 "cache_promotions", "promoted_blocks_total")},
+        "server": {"finished": len(srv.finished),
+                   **{k: srv_sum[k] for k in
+                      ("cache_demotions", "cache_drops",
+                       "cache_promotions", "promoted_blocks_total")}},
+    }
+
+
+def run_sim_scenario(*, rate=8.0, duration=8.0, E=4, seed=0):
+    """Cluster tiering experiment: shared-prefix workload under tight
+    per-instance capacity, tiered vs drop-on-reclaim."""
+    from repro.sim.experiment import compare_policies
+    out = {}
+    for label, budget in (("tiered", 2048), ("drop", 0)):
+        res = compare_policies("llama3.2-3b", rate=rate, duration=duration,
+                               E=E, seed=seed, workload="shared_prefix",
+                               capacity_tokens=3000.0,
+                               prefill_token_budget=512,
+                               host_kv_budget=budget, kinds=("cascade",))
+        s = res["cascade"].summary()
+        out[label] = {"ttft_mean_s": s["ttft_mean"],
+                      "ttft_p95_s": s["ttft_p95"],
+                      "completed": s["completed"],
+                      "cache_demotions": s["cache_demotions"],
+                      "cache_drops": s["cache_drops"],
+                      "cache_promotions": s["cache_promotions"]}
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompt", type=int, default=2048,
+                    help="prompt length shared by the cold and warm run")
+    ap.add_argument("--pressure", type=int, default=2560,
+                    help="pressure prompt whose allocations demote the "
+                         "parked chain")
+    ap.add_argument("--budget", type=int, default=64,
+                    help="prompt-chunk tokens per mixed iteration; the "
+                         "chunk-grid work counter is quadratic in chunk "
+                         "count, so the >=90%% skip needs >=19 cold chunks")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--host-kv-budget", type=int, default=4096)
+    ap.add_argument("--skip-sim", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    out = {"config": {"arch": cfg.name, "prompt": args.prompt,
+                      "pressure": args.pressure, "budget": args.budget,
+                      "jax_backend": jax.default_backend()}}
+    on = run_engine_scenario(model, params, prompt_len=args.prompt,
+                             pressure_len=args.pressure,
+                             budget=args.budget,
+                             new_tokens=args.new_tokens,
+                             host_kv_budget=args.host_kv_budget)
+    off = run_engine_scenario(model, params, prompt_len=args.prompt,
+                              pressure_len=args.pressure,
+                              budget=args.budget,
+                              new_tokens=args.new_tokens,
+                              host_kv_budget=0)
+    # acceptance: the tier changes latency/work only, never tokens — the
+    # warm-after-eviction run is bit-identical to cold on BOTH settings
+    assert on["tokens"]["warm"] == on["tokens"]["cold"], \
+        "tiered warm tokens diverged from cold"
+    assert off["tokens"]["warm"] == off["tokens"]["cold"]
+    assert on["tokens"]["cold"] == off["tokens"]["cold"], \
+        "host tier changed cold-path tokens"
+    assert on["demotions"] > 0, "pressure prompt demoted nothing"
+    assert on["promotions"] > 0 and on["promoted_blocks"] > 0, \
+        "warm re-admit promoted nothing"
+    assert on["block_work_skipped"] >= 0.90, \
+        f"only {on['block_work_skipped']:.1%} of prefill block-work skipped"
+    assert off["block_work_skipped"] <= 0.0 and off["promotions"] == 0, \
+        "drop-on-reclaim baseline unexpectedly hit the cache"
+    assert on["warm_ttft_s"] < on["cold_ttft_s"], \
+        "warm-after-eviction TTFT not below cold"
+    # promote staging stays async: exactly the decode loop's one sync
+    # d2h per step, nothing extra
+    assert on["warm_d2h_calls"] == on["warm_steps"], \
+        (on["warm_d2h_calls"], on["warm_steps"])
+    for d in (on, off):
+        d.pop("tokens")
+    out["engine_tiered"], out["engine_drop"] = on, off
+    print(f"-- cold ttft {on['cold_ttft_s']*1e3:8.1f} ms  "
+          f"work {on['cold_work_blocks']} blocks")
+    print(f"-- warm ttft {on['warm_ttft_s']*1e3:8.1f} ms  "
+          f"work {on['warm_work_blocks']} blocks  "
+          f"({on['block_work_skipped']:.1%} skipped; "
+          f"{on['demotions']} demoted, {on['promoted_blocks']} promoted)")
+    print(f"-- drop-on-reclaim warm work {off['warm_work_blocks']} blocks "
+          f"({off['block_work_skipped']:.1%} skipped)")
+
+    par = run_parity_scenario()
+    assert par["sim_routes"] == par["server_routes"], \
+        f"route decisions diverged: {par['sim_routes']} " \
+        f"vs {par['server_routes']}"
+    assert par["sim_routes"][-1][2] == par["sim_routes"][0][2], \
+        "tiered-hit arrival not steered back to the demoting instance"
+    for side in ("sim", "server"):
+        assert par[side]["cache_demotions"] > 0, (side, par[side])
+        assert par[side]["cache_promotions"] > 0, (side, par[side])
+    out["parity"] = par
+    print(f"-- parity routes {par['server_routes']}  "
+          f"(sim == server; demote+promote on both)")
+
+    if not args.skip_sim:
+        out["sim"] = run_sim_scenario()
+        for k, v in out["sim"].items():
+            print(f"-- sim {k:7s} ttft mean {v['ttft_mean_s']:.3f} s  "
+                  f"demotions {v['cache_demotions']}  "
+                  f"promotions {v['cache_promotions']}")
+
+    print("wrote", write_artifact("kv_tiering", out))
+    return out
+
+
+def run():
+    """benchmarks/run.py entry: engine scenario + parity + sim compare."""
+    from benchmarks.common import row
+    out = main(["--prompt", "2048", "--pressure", "2560",
+                "--budget", "64", "--new-tokens", "8"])
+    on = out["engine_tiered"]
+    rows = [row("kv_tiering/engine/cold", on["cold_ttft_s"] * 1e6,
+                work_blocks=on["cold_work_blocks"]),
+            row("kv_tiering/engine/warm", on["warm_ttft_s"] * 1e6,
+                work_blocks=on["warm_work_blocks"],
+                skipped=on["block_work_skipped"],
+                promoted=on["promoted_blocks"]),
+            row("kv_tiering/engine/drop",
+                out["engine_drop"]["warm_ttft_s"] * 1e6,
+                work_blocks=out["engine_drop"]["warm_work_blocks"])]
+    for k, v in out.get("sim", {}).items():
+        rows.append(row(f"kv_tiering/sim/{k}", v["ttft_mean_s"] * 1e6,
+                        ttft_p95=v["ttft_p95_s"], completed=v["completed"],
+                        demotions=v["cache_demotions"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

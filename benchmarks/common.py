@@ -7,6 +7,7 @@ data}`` — and :func:`merge_artifacts` folds all of them into
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional
@@ -22,15 +23,27 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 SCHEMA_VERSION = 1
 
 
+def canonical_name(name: str) -> str:
+    """One canonical artifact name per benchmark: the module's short name
+    WITHOUT any leading ``bench_`` prefix. ``benchmarks.run`` passes full
+    module names (``bench_sharded_engine``) while modules' own
+    ``__main__`` blocks historically passed short ones
+    (``sharded_engine``) — normalizing here keeps both spellings writing
+    the SAME ``BENCH_<name>.json`` instead of leaving stale duplicates."""
+    return name[len("bench_"):] if name.startswith("bench_") else name
+
+
 def artifact_path(name: str) -> Path:
-    return REPO_ROOT / f"BENCH_{name}.json"
+    return REPO_ROOT / f"BENCH_{canonical_name(name)}.json"
 
 
 def write_artifact(name: str, data: Dict, rows: Optional[List[Dict]] = None,
                    merge: bool = True) -> Path:
-    """Write ``BENCH_<name>.json`` at the repo root. ``rows`` is the
-    CSV-shaped row list (``{name, us_per_call, derived}``); ``data`` holds
-    the benchmark's own structured results. Refreshes the summary."""
+    """Write ``BENCH_<canonical name>.json`` at the repo root. ``rows``
+    is the CSV-shaped row list (``{name, us_per_call, derived}``);
+    ``data`` holds the benchmark's own structured results. Refreshes the
+    summary."""
+    name = canonical_name(name)
     doc = {"bench": name, "schema_version": SCHEMA_VERSION,
            "rows": rows or [], "data": data}
     path = artifact_path(name)
@@ -42,8 +55,11 @@ def write_artifact(name: str, data: Dict, rows: Optional[List[Dict]] = None,
 
 def merge_artifacts() -> Path:
     """Fold every ``BENCH_*.json`` at the repo root into
-    ``BENCH_summary.json`` (bench name → document)."""
+    ``BENCH_summary.json`` (canonical bench name → document), warning on
+    collisions — two files claiming the same bench means a stale
+    pre-canonicalization duplicate is still lying around."""
     summary = {}
+    sources: Dict[str, str] = {}
     for p in sorted(REPO_ROOT.glob("BENCH_*.json")):
         if p.name == "BENCH_summary.json":
             continue
@@ -51,7 +67,13 @@ def merge_artifacts() -> Path:
             doc = json.loads(p.read_text())
         except (OSError, json.JSONDecodeError):
             continue
-        summary[doc.get("bench", p.stem[len("BENCH_"):])] = doc
+        key = canonical_name(doc.get("bench", p.stem[len("BENCH_"):]))
+        if key in summary:
+            print(f"WARNING: artifact collision on bench '{key}': "
+                  f"{sources[key]} vs {p.name} — delete the stale one",
+                  file=sys.stderr)
+        summary[key] = doc
+        sources[key] = p.name
     out = REPO_ROOT / "BENCH_summary.json"
     out.write_text(json.dumps({"schema_version": SCHEMA_VERSION,
                                "benches": summary},

@@ -40,6 +40,9 @@ MODULES = [
     "bench_sharded_engine",   # §Sharded serving: tp scan (resident KV
                               # ~tp x, bit-identical tokens) + hetero
                               # 2+1+1 cluster vs uniform 4x1 in sim
+    "bench_kv_tiering",       # §Multi-tier KV: demote under pressure,
+                              # promote on hit (>=90% work skipped,
+                              # bit-identical) + sim/server route parity
 ]
 
 

@@ -242,6 +242,7 @@ class ControlPlane:
     def route(self, req_id: int, length: float, *,
               cached_tokens: float = 0.0,
               prefix_digest: Optional[int] = None,
+              promote_cost_tokens: float = 0.0,
               slo_class: str = "standard") -> int:
         """Pure placement decision for one arrival.
 
@@ -253,6 +254,15 @@ class ControlPlane:
         toward instances advertising the request's prefix-head digest, so
         repeat prefixes land where their blocks already live; the stage RR
         counter advances either way, keeping placement deterministic.
+
+        Tier-aware pricing (DESIGN.md §Multi-tier KV): a hit whose blocks
+        were demoted to a host tier is NOT free — ``promote_cost_tokens``
+        (the h2d staging price in token units, from
+        ``kernels.cost.promote_cost_tokens``) is added back to the
+        effective length, so a host-tier hit routes as
+        ``uncached_tail + promote_cost``. Within the stage, the warm
+        filter prefers device-warm instances over host-warm ones via the
+        optional ``tiered_digests()`` view hook.
 
         SLO-aware dispatch (DESIGN.md §SLO scheduling): interactive
         arrivals pick the least-queued instance of the candidate set —
@@ -269,14 +279,26 @@ class ControlPlane:
                       key=lambda i: self.instances[i].load() / self._weight(i))
         else:
             si, ids = self._healthy_stage(
-                self.stage_for(max(length - cached_tokens, 1.0)))
+                self.stage_for(max(length - cached_tokens
+                                   + promote_cost_tokens, 1.0)))
             if not ids:            # whole cluster down: legacy placement
                 ids = self.stages[si].instance_ids
             c = self._rr.get(si, 0)
             self._rr[si] = c + 1
             if prefix_digest is not None:
-                warm = [i for i in ids
-                        if prefix_digest in self.instances[i].prefix_digests()]
+                dev_warm, host_warm = [], []
+                for i in ids:
+                    view = self.instances[i]
+                    fn = getattr(view, "tiered_digests", None)
+                    if fn is not None:
+                        tier = fn().get(prefix_digest)
+                        if tier == "device":
+                            dev_warm.append(i)
+                        elif tier is not None:
+                            host_warm.append(i)
+                    elif prefix_digest in view.prefix_digests():
+                        dev_warm.append(i)   # untiered views are all-device
+                warm = dev_warm or host_warm
                 if warm:
                     ids = warm
             if priority_of(slo_class) == 0 and len(ids) > 1:
@@ -291,10 +313,13 @@ class ControlPlane:
     def submit(self, ref: Any, req_id: int, length: float, *,
                cached_tokens: float = 0.0,
                prefix_digest: Optional[int] = None,
+               promote_cost_tokens: float = 0.0,
                slo_class: str = "standard") -> int:
         """Route an arrival and hand it to the backend."""
         iid = self.route(req_id, length, cached_tokens=cached_tokens,
-                         prefix_digest=prefix_digest, slo_class=slo_class)
+                         prefix_digest=prefix_digest,
+                         promote_cost_tokens=promote_cost_tokens,
+                         slo_class=slo_class)
         self.ops.dispatch(ref, iid)
         return iid
 

@@ -124,6 +124,15 @@ class InstanceView(Protocol):
 
     # Optional (resolved via getattr, like the fault-tolerance hooks):
     #
+    #   def tiered_digests(self) -> Dict[int, str]
+    #
+    # Tier-tagged form of :meth:`prefix_digests` for multi-tier KV
+    # backends (DESIGN.md §Multi-tier KV): head digest -> "device" |
+    # "host". Routing's warm filter prefers device-warm instances (hit
+    # is free) over host-warm ones (hit pays a promote price). Views
+    # without the hook are treated as all-device, preserving legacy
+    # warm-routing bit-for-bit.
+    #
     #   def capacity_weight(self) -> float
     #
     # Relative capacity of this instance in homogeneous instance-units

@@ -29,6 +29,32 @@ ICI_BW = 50e9                # bytes/s per link
 SKIP_OVERHEAD_S = 2e-7       # per skipped grid step (scalar branch + DMA mgmt)
 LAUNCH_OVERHEAD_S = 2e-6     # per EXTRA kernel launch beyond the first
                              # (dispatch + grid setup + scalar prefetch)
+HOST_STAGING_BW = 16e9       # bytes/s host<->device staging (PCIe-class
+                             # link the multi-tier KV demote/promote copies
+                             # ride — DESIGN.md §Multi-tier KV)
+PROMOTE_TOKEN_COST = 0.25    # routing price of one host-tier cached token:
+                             # the h2d copy is ~4x cheaper than recomputing
+                             # the token's prefill, so a host hit is priced
+                             # as a quarter-length prompt tail
+
+
+def h2d_block_time_s(block_bytes: float) -> float:
+    """Wall time to stage ONE KV block across the host link (either
+    direction — demote d2h and promote h2d ride the same staging path):
+    a launch-sized dispatch overhead plus the payload at staging
+    bandwidth."""
+    return LAUNCH_OVERHEAD_S + float(block_bytes) / HOST_STAGING_BW
+
+
+def promote_cost_tokens(n_blocks: int, block_size: int) -> float:
+    """Token-equivalent ROUTING price of promoting ``n_blocks`` host-tier
+    blocks: a host hit is cheaper than recompute but not free, so
+    routing's effective length charges ``uncached_tail + this`` instead
+    of treating the hit like a device hit. Pure and deterministic — the
+    real server and the simulator call it with identical inputs, which
+    is what keeps their decision logs in lockstep (DESIGN.md §Multi-tier
+    KV)."""
+    return PROMOTE_TOKEN_COST * float(n_blocks) * float(block_size)
 
 
 def kv_bytes_per_elem(kv_dtype: str, head_dim: int) -> float:

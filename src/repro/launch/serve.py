@@ -85,6 +85,17 @@ def main() -> None:
                     action="store_false",
                     help="disable prefix sharing — the bit-parity "
                          "legacy allocator path")
+    ap.add_argument("--host-kv-budget", type=int, default=4096,
+                    help="host-RAM KV tier capacity in tokens per engine "
+                         "(DESIGN.md §Multi-tier KV): evicted prefix "
+                         "chains demote here instead of dropping, and "
+                         "hits promote back asynchronously. 0 reproduces "
+                         "the drop-on-reclaim allocator bit-exactly "
+                         "(default: a conservative 4096)")
+    ap.add_argument("--no-kv-tiering", dest="host_kv_budget",
+                    action="store_const", const=0,
+                    help="disable the host KV tier (same as "
+                         "--host-kv-budget 0)")
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="workload arrivals/s, replayed at 1 step/s")
     ap.add_argument("--slo-class-mix", default=None,
@@ -169,7 +180,10 @@ def main() -> None:
                                   faults=faults,
                                   migration_timeout_steps=
                                   args.migration_timeout_steps,
-                                  dead_after_steps=args.dead_after_steps),
+                                  dead_after_steps=args.dead_after_steps,
+                                  host_kv_budget=(args.host_kv_budget
+                                                  if args.prefix_cache
+                                                  else 0)),
                      tp=tp,
                      max_slots=args.max_slots, max_seq=args.max_seq,
                      attn_backend=args.attn_backend,

@@ -39,7 +39,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
@@ -78,10 +79,140 @@ def prompt_chain(prompt, block_size: int,
     return out
 
 
+class HostBlockStore:
+    """Capacity-bounded host-RAM tier behind the device pool (DESIGN.md
+    §Multi-tier KV). Entries are keyed by chain digest and carry the
+    block's KV payload in the migration wire layout (leaves
+    ``[L, 1, BS, ...]``; int8 blocks keep their scale leaves), plus the
+    parent digest and head flag needed to re-publish on promote.
+
+    The store is LRU over *insertion* order (a demote re-inserts, a
+    promote removes), bounded at ``capacity_blocks`` entries. Making room
+    evicts the oldest entry AND every host-resident descendant — a child
+    whose parent is gone could never be reached by the chain-ordered
+    lookup anyway, so cascading keeps capacity honest instead of leaking
+    unreachable entries. A digest lives in exactly ONE tier: the
+    allocator drops the host entry the moment the same digest is
+    re-published on device."""
+
+    def __init__(self, capacity_blocks: int):
+        assert capacity_blocks > 0
+        self.capacity_blocks = int(capacity_blocks)
+        # digest -> (payload, parent_digest, head); dict preserves
+        # insertion order = demote order = LRU order
+        self._entries: Dict[int, Tuple[Any, int, bool]] = {}
+        self._children: Dict[int, Set[int]] = {}    # parent -> host children
+        # payloads still pending host materialization (the engine demotes
+        # with an async device-side snapshot and flushes to numpy at the
+        # end of the step — see Engine._flush_demotes)
+        self._pending: Set[int] = set()
+        self.drops = 0          # entries destroyed by host capacity pressure
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, digest: int) -> bool:
+        return digest in self._entries
+
+    def parent(self, digest: int) -> int:
+        return self._entries[digest][1]
+
+    def digests(self) -> frozenset:
+        return frozenset(self._entries)
+
+    def head_digests(self) -> frozenset:
+        return frozenset(h for h, (_, _, head) in self._entries.items()
+                         if head)
+
+    def _unlink(self, digest: int) -> Tuple[Any, int, bool]:
+        payload, parent, head = self._entries.pop(digest)
+        self._pending.discard(digest)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.discard(digest)
+            if not kids:
+                del self._children[parent]
+        return payload, parent, head
+
+    def _drop_subtree(self, digest: int) -> None:
+        """Destroy an entry and every host-resident descendant."""
+        stack = [digest]
+        while stack:
+            h = stack.pop()
+            if h not in self._entries:
+                continue
+            stack.extend(self._children.get(h, ()))
+            self._unlink(h)
+            self.drops += 1
+
+    def drop_children_of(self, digest: int) -> None:
+        """A parent left BOTH tiers (reclaim-time drop): its host-resident
+        descendants can never be reached by the chain-ordered lookup again
+        — destroy them so capacity stays honest."""
+        for child in list(self._children.get(digest, ())):
+            self._drop_subtree(child)
+
+    def discard(self, digest: int) -> None:
+        """Remove an entry whose digest was re-published on the device
+        tier (single-tier residence; the device copy supersedes, nothing
+        is lost, children stay — their parent is resident again)."""
+        if digest in self._entries:
+            self._unlink(digest)
+
+    def put(self, digest: int, payload: Any, parent: int, *, head: bool,
+            parent_ok: Callable[[int], bool]) -> bool:
+        """Admit a demoted block. Evicts LRU (+ descendants) to make
+        room; if making room destroyed the incoming block's own parent,
+        the demote fails (``False``) — the chain would be unreachable."""
+        assert digest not in self._entries, "digest already host-resident"
+        while len(self._entries) >= self.capacity_blocks:
+            self._drop_subtree(next(iter(self._entries)))
+        if not parent_ok(parent):
+            return False
+        self._entries[digest] = (payload, parent, head)
+        if parent:
+            self._children.setdefault(parent, set()).add(digest)
+        self._pending.add(digest)
+        return True
+
+    def pop(self, digest: int) -> Any:
+        """Remove an entry for promotion and return its payload. Children
+        stay: the promoted parent is about to be re-published on device,
+        so they remain reachable."""
+        payload, _, _ = self._unlink(digest)
+        return payload
+
+    def materialize(self, fn: Callable[[Any], Any]) -> int:
+        """Apply ``fn`` (device→numpy) to every payload still pending
+        host materialization. Returns the number flushed."""
+        n = 0
+        for h in self._pending:
+            if h in self._entries:
+                payload, parent, head = self._entries[h]
+                self._entries[h] = (fn(payload), parent, head)
+                n += 1
+        self._pending.clear()
+        return n
+
+    def check(self, tier_resident: Callable[[int], bool]) -> None:
+        assert len(self._entries) <= self.capacity_blocks, \
+            f"host tier over capacity: {len(self._entries)}" \
+            f"/{self.capacity_blocks}"
+        for h, (_, parent, _) in self._entries.items():
+            assert tier_resident(parent), \
+                f"host entry {h} has a non-resident parent {parent}"
+        for parent, kids in self._children.items():
+            for k in kids:
+                assert k in self._entries and self._entries[k][1] == parent
+
+
 @dataclasses.dataclass
 class BlockAllocator:
     num_blocks: int
     block_size: int
+    # host-RAM tier capacity in blocks (DESIGN.md §Multi-tier KV);
+    # 0 disables tiering — reclaim drops chains exactly as before
+    host_blocks: int = 0
 
     def __post_init__(self) -> None:
         assert self.num_blocks > 0 and self.block_size > 0
@@ -106,8 +237,23 @@ class BlockAllocator:
         # batch slot, never memory — so it must not be reclaimed or freed
         # while any parker holds it.
         self._parked: Dict[int, int] = {}
-        # telemetry
-        self.cache_evictions = 0     # cached blocks reclaimed under pressure
+        # ---- host-RAM tier (DESIGN.md §Multi-tier KV) ----
+        self._host: Optional[HostBlockStore] = (
+            HostBlockStore(self.host_blocks) if self.host_blocks > 0
+            else None)
+        # digest -> parent digest for every DEVICE-indexed block (0 for
+        # chain heads) — demote needs the link to keep host chains
+        # promotable, publish populates it
+        self._parent_of: Dict[int, int] = {}
+        # engine-installed payload snapshot: block id -> device-side KV
+        # slice (async; materialized off the hot loop). None = tier off.
+        self._demote_fetch: Optional[Callable[[int], Any]] = None
+        # telemetry: cache_evictions (the pre-tier counter) splits into
+        # demotions (chain went to the host tier) and drops (tier full,
+        # disabled, or the chain's head was already gone)
+        self.cache_demotions = 0
+        self._reclaim_drops = 0
+        self.cache_promotions = 0    # host-tier blocks revived onto device
 
     # ---- views -------------------------------------------------------------
     @property
@@ -150,6 +296,35 @@ class BlockAllocator:
         """Blocks an admission gate could still reserve."""
         return self.num_blocks - self._reserved - self._cached_live
 
+    # ---- host-tier views (DESIGN.md §Multi-tier KV) --------------------------
+    @property
+    def host_tier_enabled(self) -> bool:
+        return self._host is not None
+
+    @property
+    def host_blocks_used(self) -> int:
+        return len(self._host) if self._host is not None else 0
+
+    @property
+    def cache_drops(self) -> int:
+        """Cached chains destroyed outright: reclaim-time drops (tier
+        full/disabled/orphaned chain) plus host-tier capacity evictions."""
+        return self._reclaim_drops + (self._host.drops
+                                      if self._host is not None else 0)
+
+    @property
+    def cache_evictions(self) -> int:
+        """Back-compat view of the pre-tier counter: every cached block
+        that left the device index under pressure, wherever it went."""
+        return self.cache_demotions + self.cache_drops
+
+    def set_demote_fetch(self, fn: Optional[Callable[[int], Any]]) -> None:
+        """Install the engine's payload snapshot for demotes: called with
+        a block id INSIDE ``allocate`` (before the block is overwritten —
+        JAX program order makes the async device-side slice a consistent
+        snapshot), must return the block's KV payload or None to decline."""
+        self._demote_fetch = fn
+
     # ---- admission reservation ----------------------------------------------
     def can_reserve(self, n_blocks: int) -> bool:
         return self._reserved + self._cached_live + n_blocks <= self.num_blocks
@@ -189,17 +364,48 @@ class BlockAllocator:
 
     def _reclaim_one(self) -> None:
         """Evict the least-recently-released cached block: drop its index
-        entry and hand the physical block back to the free list. Never
-        touches a referenced block (those are not in ``_reclaimable``)."""
+        entry, DEMOTE its content to the host tier when possible, and hand
+        the physical block back to the free list. Never touches a
+        referenced block (those are not in ``_reclaimable``). Tables
+        release head-first, so chains demote in depth order — a child
+        always finds its parent already host-resident (or still on
+        device); a child whose parent was dropped is dropped too, so a
+        partially-destroyed chain can never be promoted."""
         b = next(iter(self._reclaimable))
         del self._reclaimable[b]
         assert self._refs[b] == 0
         h = self._hash_of.pop(b)
         self._index.pop(h, None)
+        was_head = h in self._head_digests
         self._head_digests.discard(h)
+        parent = self._parent_of.pop(h, 0)
+        if self._try_demote(b, h, parent, was_head):
+            self.cache_demotions += 1
+        else:
+            self._reclaim_drops += 1
+            if self._host is not None:
+                # the digest left both tiers: host descendants (possible
+                # after an earlier promote of this block) are unreachable
+                self._host.drop_children_of(h)
         self._free.append(b)
         self._free_set.add(b)
-        self.cache_evictions += 1
+
+    def _tier_resident(self, digest: int) -> bool:
+        """A chain link is promotable only while its parent is reachable
+        in SOME tier (0 = chain head, no parent)."""
+        return (digest == 0 or digest in self._index
+                or (self._host is not None and digest in self._host))
+
+    def _try_demote(self, b: int, h: int, parent: int, head: bool) -> bool:
+        if self._host is None or self._demote_fetch is None:
+            return False
+        if not self._tier_resident(parent):
+            return False        # orphaned link: could never be looked up
+        payload = self._demote_fetch(b)
+        if payload is None:
+            return False
+        return self._host.put(h, payload, parent, head=head,
+                              parent_ok=self._tier_resident)
 
     def release(self, block_ids: Sequence[int], *, owned: bool = True) -> None:
         """Drop one reference per block.
@@ -279,18 +485,25 @@ class BlockAllocator:
                 self._parked[b] = n - 1
 
     # ---- prefix index --------------------------------------------------------
-    def publish(self, block_id: int, digest: int, *, head: bool = False) -> bool:
+    def publish(self, block_id: int, digest: int, *, head: bool = False,
+                parent: int = 0) -> bool:
         """Register a FULL, written block under its chain digest. First
         writer wins: if the digest is already indexed (a concurrent
         request published the same content) the block stays private and
         ``False`` is returned. The block must be live — its publisher
-        still references it."""
+        still references it. ``parent`` is the chain-parent digest (0 for
+        heads), recorded so a later demote keeps the chain promotable; a
+        stale host-tier entry under the same digest is superseded by the
+        freshly-written device copy (single-tier residence)."""
         if digest in self._index:
             return False
         assert self._refs[block_id] > 0, "publish of an unreferenced block"
         assert block_id not in self._hash_of, "block already published"
         self._index[digest] = block_id
         self._hash_of[block_id] = digest
+        self._parent_of[digest] = parent
+        if self._host is not None:
+            self._host.discard(digest)
         # no accounting change: the block stays covered by its publisher's
         # reservation until the publisher releases it (see ``release``)
         if head:
@@ -324,6 +537,43 @@ class BlockAllocator:
         cache)."""
         return frozenset(self._head_digests)
 
+    # ---- host tier: tiered lookup + promote (DESIGN.md §Multi-tier KV) ------
+    def lookup_tiered(self, digests: Sequence[int]) -> Tuple[List[int],
+                                                             List[int]]:
+        """Longest chain across BOTH tiers: the device-resident prefix
+        (block ids, shareable for free) followed by the contiguous
+        host-resident continuation (digests, promotable at a copy cost).
+        Stops at the first digest found in neither tier, so each half is
+        a consistent chain run and the table layout stays
+        [shared device blocks][promoted blocks][private tail]."""
+        dev = self.lookup(digests)
+        host: List[int] = []
+        if self._host is not None:
+            for h in digests[len(dev):]:
+                if h not in self._host:
+                    break
+                host.append(h)
+        return dev, host
+
+    def host_head_digests(self) -> frozenset:
+        """Depth-1 digests resident only in the host tier — advertised
+        with a 'host' tier tag so routing prices the promote copy."""
+        return (self._host.head_digests() if self._host is not None
+                else frozenset())
+
+    def host_pop(self, digest: int):
+        """Remove a host-tier entry for promotion and return its payload.
+        The caller scatters it into a freshly allocated device block and
+        re-publishes the digest there (single-tier residence)."""
+        assert self._host is not None
+        self.cache_promotions += 1
+        return self._host.pop(digest)
+
+    def host_materialize(self, fn) -> int:
+        """Flush payloads still pending host materialization (the engine
+        calls this once per step, after its single d2h)."""
+        return self._host.materialize(fn) if self._host is not None else 0
+
     # ---- integrity (tests) ---------------------------------------------------
     def check_invariants(self) -> None:
         assert len(self._free) == len(self._free_set)
@@ -342,6 +592,14 @@ class BlockAllocator:
             assert n > 0 and self._refs[b] >= n, \
                 f"parked block {b} under-referenced"
             assert b not in self._free_set and b not in self._reclaimable
+        # device index carries a parent link for every digest it holds
+        assert set(self._parent_of) == set(self._index)
+        if self._host is not None:
+            # host-tier analogue of the device invariant: bounded capacity,
+            # single-tier residence, every chain link's parent reachable
+            self._host.check(self._tier_resident)
+            assert not (self._host.digests() & set(self._index)), \
+                "digest resident in both tiers"
 
     def check_drained(self) -> None:
         """A drained allocator holds NOTHING on behalf of requests: no

@@ -148,6 +148,7 @@ class Engine:
                  chunked_prefill: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  kv_dtype: str = "bf16",
+                 host_kv_budget: int = 0,
                  preemption: Optional[bool] = None,
                  slo_time_scale: float = 1.0,
                  tp: int = 1):
@@ -200,7 +201,16 @@ class Engine:
             # capacity is block-granular: tokens that don't fill a block
             # can't back any request (mirrors sim.Instance)
             self.token_budget = self.num_blocks * block_size
-            self.allocator = BlockAllocator(self.num_blocks, block_size)
+            # host-RAM KV tier (DESIGN.md §Multi-tier KV): reclaimed
+            # cached chains demote to a capacity-bounded host store
+            # instead of dying; 0 keeps the drop-on-reclaim behavior
+            # bit-exactly
+            self.host_kv_budget = int(host_kv_budget or 0)
+            self.allocator = BlockAllocator(
+                self.num_blocks, block_size,
+                host_blocks=self.host_kv_budget // block_size)
+            if self.allocator.host_tier_enabled:
+                self.allocator.set_demote_fetch(self._demote_snapshot)
             # +1 garbage block (id num_blocks, never allocated): dead batch
             # slots and padded table rows write/read there by construction,
             # so the fixed-shape device loop cannot corrupt live blocks
@@ -340,6 +350,9 @@ class Engine:
         self.prefill_work_blocks = 0
         self.prefill_tokens_done = 0
         self.cached_prompt_tokens_total = 0
+        # multi-tier KV counters (DESIGN.md §Multi-tier KV): blocks
+        # promoted from the host tier back onto device at admission
+        self.promoted_blocks_total = 0
         # last decode's grid accounting (bench_decode_hotloop reads it):
         # flat_items = work items the flat grid runs (pow2 bucket),
         # real_items = Σ_b ceil(L_b/BS), padded_items = B·max_b ceil(L_b/BS)
@@ -489,23 +502,106 @@ class Engine:
             return []
         return self.allocator.lookup(self._req_digests(req))
 
+    def _tiered_chain(self, req: ServeRequest):
+        """(device block ids, host digest continuation) — the two-tier
+        chain hit admission consumes: device blocks are shared for free,
+        host digests are promoted at a copy cost (DESIGN.md §Multi-tier
+        KV)."""
+        if not self.prefix_cache:
+            return [], []
+        return self.allocator.lookup_tiered(self._req_digests(req))
+
     def prefix_hint(self, req: ServeRequest):
-        """(head_digest, cached_tokens) for dispatch: the digest of the
-        prompt's first full block (None for sub-block prompts) and the
-        tokens resident here. The digest is content-derived, so it is
-        identical across engines for the same prompt."""
+        """(head_digest, cached_tokens, promote_blocks) for dispatch: the
+        digest of the prompt's first full block (None for sub-block
+        prompts), the tokens resident here across BOTH tiers, and how
+        many of those blocks are host-resident (routing prices their
+        promote copy — DESIGN.md §Multi-tier KV). The digest is
+        content-derived, so it is identical across engines for the same
+        prompt."""
         if not self.prefix_cache or len(req.prompt) <= self.block_size:
-            return None, 0
+            return None, 0, 0
         digests = self._req_digests(req)
-        cached = len(self.allocator.lookup(digests)) * self.block_size
-        return digests[0], cached
+        dev, host = self.allocator.lookup_tiered(digests)
+        return digests[0], (len(dev) + len(host)) * self.block_size, len(host)
 
     def prefix_digests(self) -> frozenset:
-        """Head digests of every cached chain — the compact advertisement
-        within-stage dispatch tie-breaks on."""
+        """Head digests of every cached chain (either tier) — the compact
+        advertisement within-stage dispatch tie-breaks on."""
         if not self.paged or not self.prefix_cache:
             return frozenset()
-        return self.allocator.head_digests()
+        return (self.allocator.head_digests()
+                | self.allocator.host_head_digests())
+
+    def tiered_digests(self) -> Dict[int, str]:
+        """Head digest -> tier tag ('device' | 'host'). The control
+        plane's warm filter prefers device-warm instances — a host hit
+        still beats recompute but pays the promote copy (DESIGN.md
+        §Multi-tier KV)."""
+        if not self.paged or not self.prefix_cache:
+            return {}
+        out = {h: "device" for h in self.allocator.head_digests()}
+        for h in self.allocator.host_head_digests():
+            out.setdefault(h, "host")
+        return out
+
+    # ---- multi-tier KV (DESIGN.md §Multi-tier KV) ----------------------------
+    def _demote_snapshot(self, block_id: int):
+        """Payload fetch the allocator calls when reclaiming a cached
+        block with the host tier on: an ASYNC device-side slice of the
+        block ([L, 1, BS, ...]; int8 pools carry their scale leaves in
+        the same pytree). Dispatch order guarantees the copy reads the
+        block BEFORE the allocation that triggered the reclaim overwrites
+        it; the host transfer itself happens at ``_flush_demotes`` — off
+        the decode hot loop, after the step's single d2h."""
+        return jax.tree.map(lambda a: a[:, block_id:block_id + 1],
+                            self.cache)
+
+    def _flush_demotes(self) -> None:
+        """Materialize this step's demoted payloads to host numpy. NOT
+        routed through :func:`d2h` on purpose: the step's one-d2h
+        contract is about the decode hot loop's sync token; these copies
+        were dispatched earlier and drain here, overlapped with the
+        iteration that evicted them."""
+        if self.paged and self.allocator.host_tier_enabled:
+            self.allocator.host_materialize(
+                lambda p: jax.tree.map(np.asarray, p))
+
+    def _promote_blocks(self, req: ServeRequest, shared: List[int],
+                        promo: List[int]) -> List[int]:
+        """Promote a host-tier chain continuation onto device: allocate
+        owned blocks (covered by the request's admission reservation),
+        scatter all payloads in ONE async device call — the h2d copy
+        overlaps the current mixed iteration; the request only
+        chunk-prefills its truly-uncached tail afterwards — and
+        re-publish each digest with its chain links restored."""
+        # pop payloads BEFORE allocating: the allocation may reclaim (and
+        # demote) other device blocks, and the resulting host-capacity
+        # pressure must never evict the very entries being promoted
+        payloads = [self.allocator.host_pop(h) for h in promo]
+        ids = self.allocator.allocate(len(promo))
+        piece = jax.tree.map(lambda *ps: jnp.concatenate(
+            [jnp.asarray(p) for p in ps], axis=1), *payloads)
+        self.cache = scatter_kv_blocks(self.cache, piece, ids)
+        digests = self._req_digests(req)
+        d0 = len(shared)
+        for j, (b, h) in enumerate(zip(ids, promo)):
+            parent = digests[d0 + j - 1] if d0 + j > 0 else 0
+            self.allocator.publish(b, h, head=(d0 + j == 0), parent=parent)
+        self.promoted_blocks_total += len(ids)
+        return ids
+
+    @property
+    def cache_demotions(self) -> int:
+        return self.allocator.cache_demotions if self.paged else 0
+
+    @property
+    def cache_drops(self) -> int:
+        return self.allocator.cache_drops if self.paged else 0
+
+    @property
+    def cache_promotions(self) -> int:
+        return self.allocator.cache_promotions if self.paged else 0
 
     def _publish_prompt(self, req: ServeRequest, slot: int) -> None:
         """Prefill finished: publish the prompt's FULL blocks into the
@@ -523,15 +619,20 @@ class Engine:
             digests.append(chain_hash(
                 parent, req.prompt[start:start + self.block_size]))
         for j, h in enumerate(digests[:n_full]):
-            self.allocator.publish(table[j], h, head=(j == 0))
+            self.allocator.publish(table[j], h, head=(j == 0),
+                                   parent=digests[j - 1] if j else 0)
 
     # ---- intake -------------------------------------------------------------
     def submit(self, req: ServeRequest) -> None:
         req.state = State.WAITING
         # prefix-hit hint for queued_tokens/load while the request waits
-        # (refreshed authoritatively at admission)
-        req.cached_tokens = (len(self._cached_chain(req)) * self.block_size
-                             if self.paged and self.prefix_cache else 0)
+        # (refreshed authoritatively at admission) — both tiers count: a
+        # host-resident chain still spares the queue its prefill work
+        if self.paged and self.prefix_cache:
+            dev, host = self._tiered_chain(req)
+            req.cached_tokens = (len(dev) + len(host)) * self.block_size
+        else:
+            req.cached_tokens = 0
         if self.slo_sched:
             self._seq += 1
             req.sched_key = queue_key(req.slo_class, req.arrival_step,
@@ -776,23 +877,28 @@ class Engine:
                 break
             slot = self._free_slot()
             self.waiting.popleft()
-            # longest cached chain: share those blocks (refcount++, zero
-            # copies), reserve only the uncached tail, and start chunking
-            # at ctx_done = cached_tokens — the cached blocks' prefill
-            # work never runs (DESIGN.md §Prefix cache)
-            shared = self._cached_chain(req)
+            # longest cached chain across both tiers: device blocks are
+            # shared (refcount++, zero copies), host-tier continuations
+            # PROMOTE — fresh owned blocks under this request's
+            # reservation, one async h2d scatter overlapping the mixed
+            # iteration — and chunking starts at ctx_done = cached_tokens,
+            # so only the truly-uncached tail's prefill work ever runs
+            # (DESIGN.md §Prefix cache, §Multi-tier KV)
+            shared, promo = self._tiered_chain(req)
             self._reserve(req, slot, cached_blocks=len(shared))
             self._slot_shared[slot] = len(shared)
             if shared:
                 self.allocator.share(shared)
-                self.cached_prompt_tokens_total += \
-                    len(shared) * self.block_size
-            req.cached_tokens = len(shared) * self.block_size
+            promoted = (self._promote_blocks(req, shared, promo)
+                        if promo else [])
+            req.cached_tokens = (len(shared) + len(promoted)) \
+                * self.block_size
+            self.cached_prompt_tokens_total += req.cached_tokens
             req.state = State.RUNNING
             req.engine_id = self.id
             req.slot = slot
             req.ctx_done = req.cached_tokens
-            self.block_tables[slot] = list(shared)
+            self.block_tables[slot] = list(shared) + promoted
             self.slots[slot] = req
             self.slot_len[slot] = req.ctx_done
             self._prefill_order.append(slot)
@@ -1178,6 +1284,7 @@ class Engine:
                     r.finish_step = self.steps
                     finished.append(r)
                     self._release(i)
+        self._flush_demotes()
         self.peak_kv_bytes = max(self.peak_kv_bytes, self.kv_bytes_pinned())
         assert self.free_tokens() >= 0, "admission let the budget go negative"
         return finished
@@ -1428,6 +1535,7 @@ class Engine:
                     finished.append(r)
                     self._release(i)
         self.steps = base + max(h - 1, 0)
+        self._flush_demotes()
         self.peak_kv_bytes = max(self.peak_kv_bytes, self.kv_bytes_pinned())
         assert self.free_tokens() >= 0, "admission let the budget go negative"
         return finished
@@ -1569,6 +1677,7 @@ class Engine:
             self.slot_len[slot] = written
             # device mirrors stay cleared (all-garbage table, length 0):
             # the decode batch treats a mid-prefill slot as dead
+            self._flush_demotes()   # import allocation may have demoted
             return True
         if self.paged:
             length = req.length
@@ -1595,6 +1704,7 @@ class Engine:
         req.tokens_by_engine.setdefault(self.id, 0)
         self.slots[slot] = req
         self.slot_len[slot] = req.length
+        self._flush_demotes()       # import allocation may have demoted
         return True
 
 

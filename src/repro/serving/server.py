@@ -31,6 +31,7 @@ from repro.control import (MIG_COMPLETED, MIG_FAILED, MIG_STARTED, XFER_OK,
                            FaultInjector, FaultSpec, ReqView)
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
+from repro.kernels.cost import promote_cost_tokens
 from repro.serving.engine import Engine
 from repro.serving.request import ServeRequest, State
 from repro.sim.metrics import class_slo_summary, fault_summary
@@ -58,6 +59,11 @@ class ServerConfig:
     preemption: bool = True
     slo_scale: float = 1.0             # paper §6.4 SLO-scale sweep knob
     slo_time_scale: float = 1.0        # engine steps per abstract SLO second
+    # Multi-tier KV (DESIGN.md §Multi-tier KV): host-RAM tier capacity in
+    # tokens per engine. 0 = tiering off — reclaim drops cached chains
+    # exactly as before (bit-identical to the pre-tier server); the
+    # launcher defaults this ON with a conservative budget.
+    host_kv_budget: int = 0
     # ---- fault tolerance (DESIGN.md §Fault tolerance) ----
     # None = fault-free: no heartbeats/liveness run, behavior is
     # bit-identical to the pre-fault server. Spec times are in STEPS.
@@ -104,6 +110,15 @@ class EngineView:
     def prefix_digests(self) -> frozenset:
         fn = getattr(self.eng, "prefix_digests", None)
         return fn() if fn is not None else frozenset()
+
+    def tiered_digests(self):
+        """digest -> "device"|"host" for tier-aware warm routing. Engines
+        without a host tier (or FakeEngines without the hook) advertise
+        everything as device-resident."""
+        fn = getattr(self.eng, "tiered_digests", None)
+        if fn is not None:
+            return fn()
+        return {d: "device" for d in self.prefix_digests()}
 
     def request_view(self):
         return self.eng.request_view()
@@ -229,6 +244,7 @@ class MILSServer:
                  chunked_prefill: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  kv_dtype: Optional[str] = None,
+                 host_kv_budget: Optional[int] = None,
                  tp: Any = 1,
                  engine_factory: Optional[Callable[[int], Any]] = None,
                  on_token: Optional[TokenCallback] = None):
@@ -238,6 +254,8 @@ class MILSServer:
         # constructor kwargs override the ServerConfig defaults
         attn_backend = attn_backend or cfg.attn_backend
         kv_dtype = kv_dtype or cfg.kv_dtype
+        host_kv_budget = (cfg.host_kv_budget if host_kv_budget is None
+                          else int(host_kv_budget))
         # tensor parallelism (DESIGN.md §Sharded serving): an int gives
         # every engine the same TP ways; a sequence gives engine i
         # tp[i] — a HETEROGENEOUS cluster (e.g. (2, 1, 1)) whose capacity
@@ -261,6 +279,7 @@ class MILSServer:
                               chunked_prefill=chunked_prefill,
                               prefix_cache=prefix_cache,
                               kv_dtype=kv_dtype,
+                              host_kv_budget=host_kv_budget,
                               preemption=cfg.preemption,
                               slo_time_scale=cfg.slo_time_scale,
                               tp=tps[i])
@@ -303,28 +322,37 @@ class MILSServer:
 
     # ---- intake --------------------------------------------------------------
     def _prefix_hint(self, req: ServeRequest):
-        """(head_digest, best cached tokens) across the engine pool — the
-        dispatch hint cache-aware routing consumes. Engines without a
-        prefix cache (or FakeEngines without the hook) contribute
-        nothing."""
-        digest, cached = None, 0.0
+        """(head_digest, best cached tokens, promote price in token units)
+        across the engine pool — the dispatch hint cache-aware routing
+        consumes. Engines without a prefix cache (or FakeEngines without
+        the hook) contribute nothing. Tier-aware engines return a 3-tuple
+        whose third element counts host-tier blocks the hit would have to
+        promote; legacy 2-tuple hints price as all-device. Ties on cached
+        tokens prefer the cheaper (device-warm) instance, and the SAME
+        pure pricing fn (`kernels.cost.promote_cost_tokens`) runs in the
+        simulator's CascadePolicy so decision logs stay comparable."""
+        digest, cached, price = None, 0.0, 0.0
         for eng in self.engines:
             fn = getattr(eng, "prefix_hint", None)
             if fn is None:
                 continue
-            d, c = fn(req)
+            out = fn(req)
+            d, c, promo = out if len(out) == 3 else (out[0], out[1], 0)
+            p = promote_cost_tokens(promo, getattr(eng, "block_size", 0))
             if d is not None:
                 digest = d
-            cached = max(cached, float(c))
-        return digest, cached
+            if (float(c), -p) > (cached, -price):
+                cached, price = float(c), p
+        return digest, cached, price
 
     def submit(self, req: ServeRequest) -> None:
         """Closed-loop submission: the request arrives now."""
         req.arrival_step = self.steps
         self.submitted += 1
-        digest, cached = self._prefix_hint(req)
+        digest, cached, price = self._prefix_hint(req)
         self.plane.submit(req, req.req_id, float(len(req.prompt)),
                           cached_tokens=cached, prefix_digest=digest,
+                          promote_cost_tokens=price,
                           slo_class=req.slo_class)
 
     def submit_at(self, req: ServeRequest, step: int) -> None:
@@ -338,9 +366,10 @@ class MILSServer:
         while self._schedule and self._schedule[0][0] <= self.steps:
             _, _, req = heapq.heappop(self._schedule)
             req.arrival_step = self.steps
-            digest, cached = self._prefix_hint(req)
+            digest, cached, price = self._prefix_hint(req)
             self.plane.submit(req, req.req_id, float(len(req.prompt)),
                               cached_tokens=cached, prefix_digest=digest,
+                              promote_cost_tokens=price,
                               slo_class=req.slo_class)
 
     # ---- token streaming -----------------------------------------------------
@@ -531,6 +560,10 @@ class MILSServer:
         out["resumes"] = sum(getattr(e, "resumes", 0) for e in self.engines)
         out["tpot_skipped"] = sum(getattr(e, "tpot_skipped", 0)
                                   for e in self.engines)
+        # multi-tier KV traffic (DESIGN.md §Multi-tier KV)
+        for k in ("cache_demotions", "cache_drops", "cache_promotions",
+                  "promoted_blocks_total"):
+            out[k] = sum(getattr(e, k, 0) for e in self.engines)
         return out
 
 

@@ -21,6 +21,7 @@ from repro.control import (MIG_STARTED, XFER_LOST, XFER_OK, XFER_STALL,
 from repro.core.migration import plan_live_migration
 from repro.core.partition import PipelinePlan
 from repro.core.qoe import QoEModel
+from repro.kernels.cost import promote_cost_tokens
 from repro.sim.costmodel import (HardwareProfile, decode_rate,
                                  scale_profile_tp)
 from repro.sim.events import EventQueue
@@ -52,6 +53,11 @@ class ClusterConfig:
     # deadline-ordered queues + seat/memory preemption of lower classes.
     # Uniform-class traffic with distinct arrivals is FCFS either way.
     preemption: bool = True
+    # multi-tier KV (DESIGN.md §Multi-tier KV): host-RAM tier capacity in
+    # tokens per instance. 0 = tiering off — idle published prefixes cost
+    # nothing and are never demoted (the legacy no-reclaim model,
+    # bit-identical).
+    host_kv_budget: int = 0
     bandwidth: float = 25e9            # inter-instance KV path
     # hand-off disruption: final stop-and-copy stall + scheduler/alloc
     # coordination on both ends (Llumnix reports tens of ms per migration);
@@ -113,7 +119,9 @@ class Cluster:
                      block_size=cfg.kv_block_size,
                      prefill_budget=cfg.prefill_token_budget,
                      prefix_cache=cfg.prefix_cache,
-                     preemption=cfg.preemption)
+                     preemption=cfg.preemption,
+                     host_kv_blocks=cfg.host_kv_budget
+                     // cfg.kv_block_size)
             for i in range(cfg.num_instances)]
         self.completed: List[SimRequest] = []
         self.injector = (FaultInjector(cfg.faults)
@@ -419,6 +427,9 @@ class SimInstanceView:
     def prefix_digests(self) -> frozenset:
         return self.inst.prefix_digests()
 
+    def tiered_digests(self):
+        return self.inst.tiered_digests()
+
     def request_view(self):
         return self.inst.request_view()
 
@@ -541,21 +552,30 @@ class CascadePolicy(Policy):
 
     # ---- driver events ------------------------------------------------------
     def _prefix_hint(self, sr: SimRequest):
-        """(digest, best cached tokens) across the cluster — the sim's
-        mirror of MILSServer._prefix_hint (group id stands in for the
-        content-derived head digest; membership patterns match, which is
-        all routing consumes)."""
+        """(digest, best cached tokens, promote price in token units)
+        across the cluster — the sim's mirror of MILSServer._prefix_hint
+        (group id stands in for the content-derived head digest;
+        membership patterns match, which is all routing consumes). Ties
+        on cached tokens prefer the cheaper (device-warm) instance, and
+        the promote price comes from the SAME pure pricing fn
+        (`kernels.cost.promote_cost_tokens`) the server calls, so the
+        decision logs stay comparable."""
         if sr.req.prefix_group < 0:
-            return None, 0.0
-        cached = max(float(i.cached_tokens_for(sr))
-                     for i in self.cluster.instances)
+            return None, 0.0, 0.0
+        cached, price = 0.0, 0.0
+        for i in self.cluster.instances:
+            c = float(i.cached_tokens_for(sr))
+            p = promote_cost_tokens(i.host_blocks_for(sr), i.block_size)
+            if (c, -p) > (cached, -price):
+                cached, price = c, p
         digest = sr.req.prefix_group
-        return digest, cached
+        return digest, cached, price
 
     def dispatch(self, sr: SimRequest, t: float) -> None:
-        digest, cached = self._prefix_hint(sr)
+        digest, cached, price = self._prefix_hint(sr)
         self.plane.submit(sr, sr.req.req_id, sr.length,
                           cached_tokens=cached, prefix_digest=digest,
+                          promote_cost_tokens=price,
                           slo_class=sr.req.slo_class)
 
     def on_iteration_end(self, inst, t):

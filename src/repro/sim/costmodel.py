@@ -22,8 +22,8 @@ from typing import Sequence
 
 from repro.kernels.cost import (AttnSpec, HBM_BW, PEAK_FLOPS,
                                 allreduce_time_s, decode_attn_time_s,
-                                kv_bytes_per_elem, mixed_iter_time_s,
-                                prefill_flops)
+                                h2d_block_time_s, kv_bytes_per_elem,
+                                mixed_iter_time_s, prefill_flops)
 from repro.models.common import ModelConfig
 
 
@@ -206,6 +206,31 @@ def kv_block_bytes(prof: HardwareProfile, block_size: int) -> float:
     unit the serving engine's BlockAllocator hands out; capacity planning
     and migration volume accounting are multiples of this."""
     return prof.kv_bytes_per_token * block_size
+
+
+def promote_time(n_blocks: int, prof: HardwareProfile,
+                 block_size: int) -> float:
+    """Host→device staging time for ``n_blocks`` promoted KV blocks
+    (DESIGN.md §Multi-tier KV): per-block launch overhead + bytes over
+    the host staging link — the same ``kernels.cost.h2d_block_time_s``
+    the engine's promote pricing uses, applied to this profile's block
+    bytes. This is what a host-tier prefix hit costs the admission
+    iteration (the truly-uncached tail still prefills on top)."""
+    if n_blocks <= 0:
+        return 0.0
+    return n_blocks * h2d_block_time_s(kv_block_bytes(prof, block_size))
+
+
+def demote_time(n_blocks: int, prof: HardwareProfile,
+                block_size: int) -> float:
+    """Device→host flush time for ``n_blocks`` demoted KV blocks. The
+    engine stages demotes asynchronously (the device-side snapshot
+    overlaps the running iteration) but the host-side flush still
+    occupies the step's wall clock — priced symmetrically to
+    :func:`promote_time` over the same staging link."""
+    if n_blocks <= 0:
+        return 0.0
+    return n_blocks * h2d_block_time_s(kv_block_bytes(prof, block_size))
 
 
 def capacity_blocks(hbm_bytes_free: float, prof: HardwareProfile,

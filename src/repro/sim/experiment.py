@@ -91,6 +91,7 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                prefill_token_budget: Optional[int] = None,
                prefix_cache: bool = True,
                preemption: bool = True,
+               host_kv_budget: int = 0,
                faults=None,
                migration_timeout_s: Optional[float] = None) -> SimResult:
     prof = profile_from_config(get_config(arch), tp=tp,
@@ -99,7 +100,8 @@ def run_policy(arch: str, policy: Policy, requests: Sequence[Request],
                         seed=seed, bandwidth=bandwidth,
                         prefill_token_budget=prefill_token_budget,
                         prefix_cache=prefix_cache,
-                        preemption=preemption, faults=faults,
+                        preemption=preemption,
+                        host_kv_budget=host_kv_budget, faults=faults,
                         migration_timeout_s=migration_timeout_s)
     cluster = Cluster(prof, policy, cfg)
     return cluster.run(requests, duration)
@@ -112,6 +114,7 @@ def compare_policies(arch: str, rate: float, duration: float, *,
                      prefill_token_budget: Optional[int] = None,
                      prefix_cache: bool = True,
                      preemption: bool = True,
+                     host_kv_budget: int = 0,
                      kinds: Sequence[str] = ("round-robin", "llumnix",
                                              "cascade")) -> Dict[str, SimResult]:
     """Same workload, all policies — the Fig. 6/7/10 experiment.
@@ -126,7 +129,11 @@ def compare_policies(arch: str, rate: float, duration: float, *,
     ``workload="slo"`` runs the open-loop SLO-class mix with diurnal +
     bursty arrivals (``sim.workload.slo_spec``) — the goodput-under-SLO
     experiment (``preemption=False`` ablates the tiered scheduler back
-    to FCFS)."""
+    to FCFS). ``host_kv_budget`` (tokens per instance) turns on the
+    multi-tier KV mirror — idle published prefixes pin device capacity
+    until pressure demotes them to a bounded host store, and hits on
+    demoted groups pay the promote staging price — so shared_prefix runs
+    become tiering policy experiments (DESIGN.md §Multi-tier KV)."""
     if workload == "longtail":
         requests = generate(longtail_spec(rate, duration, seed=seed))
     elif workload == "slo":
@@ -149,5 +156,6 @@ def compare_policies(arch: str, rate: float, duration: float, *,
                                capacity_tokens=capacity_tokens, seed=seed,
                                prefill_token_budget=prefill_token_budget,
                                prefix_cache=prefix_cache,
-                               preemption=preemption)
+                               preemption=preemption,
+                               host_kv_budget=host_kv_budget)
     return out

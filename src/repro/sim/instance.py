@@ -28,7 +28,8 @@ from repro.sched.slo import (aging_promotion, insert_sorted, priority_of,
                              queue_key, tpot_hopeless)
 from repro.serving.block_pool import blocks_for
 from repro.sim.costmodel import (HardwareProfile, decode_iter_time,
-                                 mixed_iter_time, prefill_time)
+                                 demote_time, mixed_iter_time, prefill_time,
+                                 promote_time)
 from repro.sim.workload import Request
 
 BATCH_CAP = 1024   # vLLM official default (paper §6.1)
@@ -126,7 +127,8 @@ class Instance:
                  block_size: int = KV_BLOCK_SIZE,
                  prefill_budget: Optional[int] = None,
                  prefix_cache: bool = True,
-                 preemption: bool = False):
+                 preemption: bool = False,
+                 host_kv_blocks: int = 0):
         self.id = inst_id
         self.profile = profile
         self.block_size = block_size
@@ -143,6 +145,22 @@ class Instance:
         # = free); sim runs never model reclaim-under-pressure.
         self.prefix_cache = prefix_cache and prefill_budget is not None
         self._prefix_store: Dict[int, int] = {}
+        # multi-tier KV mirror (DESIGN.md §Multi-tier KV): with a host
+        # budget, published groups whose blocks have NO live sharer pin
+        # device capacity (the engine's refcount-0 parked chains) until
+        # memory-pressure demotes them — group-granular — into
+        # ``_host_store`` (insertion order = LRU, capacity-bounded in
+        # blocks). A later hit promotes the group back, charging the h2d
+        # staging time. host_kv_blocks == 0 keeps the legacy model
+        # bit-for-bit: idle published groups cost nothing and are never
+        # demoted (the sim's old no-reclaim simplification).
+        self.host_kv_blocks = int(host_kv_blocks) if self.prefix_cache else 0
+        self._host_store: Dict[int, int] = {}
+        self.cache_demotions = 0
+        self.cache_drops = 0
+        self.cache_promotions = 0
+        self.promoted_blocks_total = 0
+        self._tier_io_s = 0.0    # staged copies charged to this iteration
         # capacity is block-granular: what a paged allocator can actually
         # hand out (tokens that don't fill a block can't back any request)
         self.capacity_blocks = int(capacity_tokens // block_size)
@@ -208,6 +226,14 @@ class Instance:
             if cb:
                 g = r.req.prefix_group
                 shared_depth[g] = max(shared_depth.get(g, 0), cb)
+        if self.host_kv_blocks > 0:
+            # tiered model: a published group's FULL chain stays device-
+            # resident (the engine's refcount-0 parked blocks) until a
+            # memory-pressure demote moves it to the host tier — so idle
+            # prefixes genuinely pin capacity, exactly what makes
+            # demotion fire under the same pressure the engine feels
+            for g, blocks in self._prefix_store.items():
+                shared_depth[g] = max(shared_depth.get(g, 0), blocks)
         return (private + sum(shared_depth.values())
                 + blocks_for(self.inbound_reserved, bs))
 
@@ -248,19 +274,44 @@ class Instance:
 
     # ---- prefix cache (DESIGN.md §Prefix cache) ----------------------------
     def cached_tokens_for(self, sr: SimRequest) -> int:
-        """Prompt tokens this instance's prefix store could serve right
-        now (block-aligned; capped so >= 1 token always re-prefils —
-        mirrors the engine's capped ``_cached_chain`` lookup)."""
+        """Prompt tokens this instance's prefix stores — device OR host
+        tier — could serve right now (block-aligned; capped so >= 1
+        token always re-prefils — mirrors the engine's capped tiered
+        chain lookup). A host-tier hit skips the same prefill work; it
+        just pays the promote staging time at admission."""
         g = sr.req.prefix_group
-        if not self.prefix_cache or g < 0 or g not in self._prefix_store:
+        if not self.prefix_cache or g < 0:
+            return 0
+        blocks = self._prefix_store.get(g)
+        if blocks is None:
+            blocks = self._host_store.get(g)
+        if blocks is None:
             return 0
         cap = (sr.req.input_len - 1) // self.block_size
-        return min(self._prefix_store[g], cap) * self.block_size
+        return min(blocks, cap) * self.block_size
+
+    def host_blocks_for(self, sr: SimRequest) -> int:
+        """Blocks a hit by ``sr`` would have to PROMOTE from the host
+        tier (0 for device-resident or missing groups) — the quantity
+        tier-aware routing prices via ``promote_cost_tokens``."""
+        g = sr.req.prefix_group
+        if not self.prefix_cache or g < 0 or g not in self._host_store:
+            return 0
+        cap = (sr.req.input_len - 1) // self.block_size
+        return min(self._host_store[g], cap)
 
     def prefix_digests(self) -> frozenset:
-        """Published prefix groups — the sim's analogue of the engine's
-        head-digest advertisement."""
-        return frozenset(self._prefix_store)
+        """Published prefix groups (either tier) — the sim's analogue of
+        the engine's head-digest advertisement."""
+        return frozenset(self._prefix_store) | frozenset(self._host_store)
+
+    def tiered_digests(self) -> Dict[int, str]:
+        """group -> "device"|"host" (single-tier residence: a group lives
+        in exactly one store). Mirrors ``Engine.tiered_digests``."""
+        out = {g: "device" for g in self._prefix_store}
+        for g in self._host_store:
+            out.setdefault(g, "host")
+        return out
 
     def _live_shared_depth(self, group: int) -> int:
         """Deepest live sharer's cached blocks for ``group`` — prefix
@@ -282,7 +333,61 @@ class Instance:
         if blocks <= 0:
             return
         self._prefix_store[g] = blocks
+        self._host_store.pop(g, None)   # single-tier residence
         sr.cached_tokens = max(sr.cached_tokens, blocks * self.block_size)
+
+    # ---- multi-tier KV (DESIGN.md §Multi-tier KV) --------------------------
+    def _demote_idle_prefixes(self, keep_group: int) -> bool:
+        """Memory-pressure reclaim mirror: the engine's allocator, out of
+        free blocks, reclaims refcount-0 cached chains — demoting them
+        to the host tier. Group-granular here: every published group
+        with no live sharer (except the admission candidate's own) moves
+        to the host store, freeing its device blocks. Returns True if
+        anything was demoted (caller retries the admission gate, exactly
+        like the allocator's reclaim-then-allocate)."""
+        if self.host_kv_blocks <= 0:
+            return False
+        freed = False
+        for g in list(self._prefix_store):
+            if g == keep_group:
+                continue
+            if any(r.req.prefix_group == g and r.cached_tokens > 0
+                   for r in self.running + self.parked):
+                continue               # live sharers pin the chain
+            self._host_put(g, self._prefix_store.pop(g))
+            freed = True
+        return freed
+
+    def _host_put(self, g: int, blocks: int) -> None:
+        """Insert a demoted group into the capacity-bounded host store
+        (LRU eviction destroys whole groups — the store's analogue of the
+        engine's subtree drops)."""
+        if blocks > self.host_kv_blocks:
+            self.cache_drops += 1      # can never fit: destroyed outright
+            return
+        while (sum(self._host_store.values()) + blocks
+               > self.host_kv_blocks):
+            self._host_store.pop(next(iter(self._host_store)))
+            self.cache_drops += 1
+        self._host_store[g] = blocks
+        self.cache_demotions += 1
+        self._tier_io_s += demote_time(blocks, self.profile,
+                                       self.block_size)
+
+    def _promote_group(self, sr: SimRequest) -> None:
+        """An admission hit a host-resident group: stage its blocks back
+        to the device tier, charging the h2d copy to this iteration (the
+        engine overlaps the copy with the running mixed iteration; the
+        sim charges the same staging time into the iteration length)."""
+        if self.host_blocks_for(sr) <= 0:
+            return
+        g = sr.req.prefix_group
+        blocks = self._host_store.pop(g)
+        self._prefix_store[g] = blocks
+        self.cache_promotions += 1
+        self.promoted_blocks_total += blocks
+        self._tier_io_s += promote_time(blocks, self.profile,
+                                        self.block_size)
 
     # ---- request intake ---------------------------------------------------
     def enqueue(self, sr: SimRequest, t: float) -> None:
@@ -333,6 +438,8 @@ class Instance:
         self.running.clear()
         self.parked.clear()
         self._prefix_store.clear()
+        self._host_store.clear()
+        self._tier_io_s = 0.0
         self._iter_chunks = []
         self.inbound_reserved = 0.0
         self.migrations = MigrationManager()
@@ -402,18 +509,29 @@ class Instance:
             # capacity where the server refuses.
             head = self.waiting[0]
             cached = self.cached_tokens_for(head)
-            revived = max(0, cached - self._live_shared_depth(
-                head.req.prefix_group) * self.block_size)
+            if self.host_kv_blocks > 0:
+                # tiered accounting: device-resident chains already pin
+                # their blocks in kv_blocks (no revival charge), but a
+                # host-tier hit must find device room for the blocks it
+                # promotes
+                revived = self.host_blocks_for(head) * self.block_size
+            else:
+                revived = max(0, cached - self._live_shared_depth(
+                    head.req.prefix_group) * self.block_size)
             if self.free_tokens() < (
                     self.block_tokens(head.length - cached)
                     + revived + pending):
-                # memory-blocked: parking frees nothing — recompute-
-                # preempt the lowest-class victim's KV instead
+                # memory-blocked: first reclaim like the engine — demote
+                # idle published chains to the host tier and retry —
+                # then recompute-preempt the lowest-class victim's KV
+                if self._demote_idle_prefixes(head.req.prefix_group):
+                    continue
                 if not (self.slo_sched and not self._tpot_guard(head, t)
                         and self._preempt_mem(head, t)):
                     break
                 continue
             sr = self.waiting.popleft()
+            self._promote_group(sr)        # host hit: stage blocks back
             sr.cached_tokens = cached
             sr.ctx_done = max(sr.ctx_done, cached)
             self.running.append(sr)
@@ -444,6 +562,8 @@ class Instance:
             self.iterating = False
             return
         dur *= self.slowdown             # slow-instance degradation fault
+        dur += self._tier_io_s           # staged tier copies land this iter
+        self._tier_io_s = 0.0
         self._iter_chunks = chunks
         self._iter_start = t
         self.busy_until = t + dur

@@ -151,6 +151,11 @@ class SimResult:
             "throughput_tok_s": self.throughput(),
         }
         out.update(self.fault_summary())
+        # multi-tier KV traffic (DESIGN.md §Multi-tier KV); getattr keeps
+        # pre-tier Instance stand-ins (test doubles) summarizable
+        for k in ("cache_demotions", "cache_drops", "cache_promotions",
+                  "promoted_blocks_total"):
+            out[k] = sum(getattr(i, k, 0) for i in self.instances)
         return out
 
     # ---- throughput -------------------------------------------------------

@@ -441,14 +441,15 @@ def test_prefix_hint_and_queued_tokens_use_uncached_length(setup, rng):
                  block_size=16, prefill_token_budget=64,
                  attn_backend="dense")
     r0 = ServeRequest(0, prompt.copy(), 24)
-    _d, c = eng.prefix_hint(r0)
+    _d, c, _p = eng.prefix_hint(r0)
     assert c == 0                                 # cold
     eng.submit(r0)
     while r0.first_token_step is None:
         eng.step()
-    digest, cached = eng.prefix_hint(ServeRequest(1, prompt.copy(), 4))
+    digest, cached, promo = eng.prefix_hint(ServeRequest(1, prompt.copy(), 4))
     assert digest == chain_hash(0, prompt[:16])
     assert cached == 144                          # 9 of 10 blocks (cap)
+    assert promo == 0                             # all device-resident
     assert digest in eng.prefix_digests()
     # the slot is occupied, so the warm submit waits — queued as its
     # 16-token effective self, not a 160-token prompt
@@ -531,3 +532,191 @@ def test_shared_prefix_workload_generator():
     # popular groups repeat — the whole point of prefix caching
     from collections import Counter
     assert Counter(r.prefix_group for r in reqs).most_common(1)[0][1] >= 3
+
+
+# --------------------------------------------------------------------------
+# Multi-tier KV (DESIGN.md §Multi-tier KV): demote / promote / host bound
+# --------------------------------------------------------------------------
+def _run_random_tiered_program(seed: int, num_blocks: int, host_blocks: int,
+                               n_ops: int) -> None:
+    """The engine-shaped random program of ``_run_random_program``, with
+    the host tier ON and park/unpark in the mix: admissions consume
+    two-tier chain hits (share the device run, promote the host run —
+    the engine's ``_promote_blocks`` sequence: pop payloads FIRST, then
+    allocate under the reservation, then re-publish with chain links).
+    After every op the device invariant (``check_invariants`` — which
+    also walks the host store: capacity bound, parent residency, single-
+    tier residence) and the explicit host capacity bound must hold."""
+    rng = np.random.default_rng(seed)
+    BS = 4
+    a = BlockAllocator(num_blocks, BS, host_blocks=host_blocks)
+    a.set_demote_fetch(lambda b: ("snap", b))
+    live = {}        # rid -> [digests, shared, owned, reserved, parked?]
+    published = set()
+    rid = 0
+    for _ in range(n_ops):
+        ops = ["admit", "materialize"]
+        if live:
+            ops += ["grow", "publish", "finish", "parkflip"]
+        op = ops[rng.integers(0, len(ops))]
+        if op == "admit":
+            nblk = int(rng.integers(1, 5))
+            prompt = np.repeat(rng.integers(0, 3, nblk).astype(np.int32),
+                               BS)
+            digests = prompt_chain(prompt, BS)
+            worst = nblk + int(rng.integers(0, 3))        # growth headroom
+            dev, host_run = a.lookup_tiered(digests)
+            need = worst - len(dev) + a.revival_cost(dev)
+            if not a.can_reserve(need):
+                continue
+            a.reserve(worst - len(dev))
+            if dev:
+                a.share(dev)
+            # promote: pop payloads BEFORE allocating — the allocation's
+            # own reclaim-demotes must never evict what's being promoted
+            payloads = [a.host_pop(h) for h in host_run]
+            assert all(p is not None for p in payloads)
+            owned = a.allocate(nblk - len(dev))
+            for j, h in enumerate(host_run):
+                d0 = len(dev) + j
+                a.publish(owned[j], h, head=(d0 == 0),
+                          parent=digests[d0 - 1] if d0 else 0)
+            live[rid] = [digests, list(dev), owned, worst - len(dev),
+                         None]
+            if host_run:
+                published.add(rid)      # promoted digests are re-indexed
+            rid += 1
+        elif op == "materialize":
+            a.host_materialize(lambda p: ("mat", p))
+        elif op == "grow":
+            r = sorted(live)[rng.integers(0, len(live))]
+            _, _, owned, reserved, parked = live[r]
+            # a parked request is preempted: it never grows until resumed
+            if parked is None and reserved > len(owned):  # covered: cannot fail
+                owned.extend(a.allocate(1))
+        elif op == "publish":
+            r = sorted(live)[rng.integers(0, len(live))]
+            if r in published:
+                continue
+            published.add(r)
+            digests, shared, owned, _, _ = live[r]
+            table = shared + owned
+            for j, h in enumerate(digests):
+                a.publish(table[j], h, head=(j == 0),
+                          parent=digests[j - 1] if j else 0)
+        elif op == "parkflip":
+            r = sorted(live)[rng.integers(0, len(live))]
+            digests, shared, owned, _, parked = live[r]
+            if parked is not None:
+                a.unpark(parked)            # resume: exact parked snapshot
+                live[r][4] = None
+            elif shared + owned:
+                live[r][4] = list(shared + owned)
+                a.park(live[r][4])
+        else:   # finish
+            r = sorted(live)[rng.integers(0, len(live))]
+            digests, shared, owned, reserved, parked = live.pop(r)
+            if parked is not None:
+                a.unpark(parked)
+            if shared:
+                a.release(shared, owned=False)
+            if owned:
+                a.release(owned, owned=True)
+            a.unreserve(reserved)
+        a.check_invariants()
+        assert a.allocated_blocks + a.free_blocks == a.num_blocks
+        assert a.host_blocks_used <= host_blocks
+        assert a.free_tokens() >= 0
+    for r in sorted(live):                      # drain
+        digests, shared, owned, reserved, parked = live.pop(r)
+        if parked is not None:
+            a.unpark(parked)
+        if shared:
+            a.release(shared, owned=False)
+        if owned:
+            a.release(owned, owned=True)
+        a.unreserve(reserved)
+        a.check_invariants()
+    assert a.allocated_blocks == 0 and a.reserved_blocks == 0
+    assert a.host_blocks_used <= host_blocks
+    # the split counters tile the legacy one exactly
+    assert a.cache_evictions == a.cache_demotions + a.cache_drops
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**16), num_blocks=st.integers(6, 20),
+       host_blocks=st.integers(1, 10), n_ops=st.integers(1, 60))
+def test_tiered_allocator_invariants_random_interleavings(
+        seed, num_blocks, host_blocks, n_ops):
+    _run_random_tiered_program(seed, num_blocks, host_blocks, n_ops)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tiered_allocator_invariants_fixed_seeds(seed):
+    """Same property on fixed seeds — runs even where hypothesis is
+    stubbed out (see conftest shim)."""
+    _run_random_tiered_program(seed, num_blocks=8 + 2 * seed,
+                               host_blocks=1 + seed, n_ops=60)
+
+
+def test_partially_dropped_chain_never_promotes():
+    """A chain whose demote was cut short (host tier too small: admitting
+    a later block evicted its own ancestors) must never advertise a
+    promotable run — ``lookup_tiered`` stops at the first digest in
+    neither tier, and the host store drops orphaned descendants rather
+    than keeping unreachable payloads."""
+    prompt = np.repeat(np.arange(3, dtype=np.int32), 4)
+    digests = prompt_chain(prompt, 4)          # 3-block chain
+    for cap, want_host in ((3, 3), (2, 0)):
+        a = BlockAllocator(num_blocks=4, block_size=4, host_blocks=cap)
+        a.set_demote_fetch(lambda b: ("snap", b))
+        a.reserve(3)
+        ids = a.allocate(3)
+        for j, h in enumerate(digests):
+            a.publish(ids[j], h, head=(j == 0),
+                      parent=digests[j - 1] if j else 0)
+        a.release(ids)
+        a.unreserve(3)                         # chain parked, reclaimable
+        a.reserve(4)
+        a.allocate(4)                          # reclaims the whole chain
+        a.check_invariants()
+        # cap 3: whole chain demotes -> fully promotable. cap 2: block 3's
+        # put evicts LRU (the chain HEAD) which cascades through its own
+        # descendants -> nothing survives, nothing promotable, and no
+        # orphaned host entries linger
+        dev, host_run = a.lookup_tiered(digests)
+        assert dev == []
+        assert len(host_run) == want_host
+        assert a.host_blocks_used == want_host
+        if want_host == 0:
+            assert a.host_head_digests() == frozenset()
+        assert a.cache_demotions + a.cache_drops >= 3
+
+
+def test_int8_scales_round_trip_demote_promote(setup, rng):
+    """int8 KV blocks demote WITH their quantization scales and promote
+    back bit-exactly: cold -> pressure (demotes the parked chain) ->
+    warm re-admit of the same prompt must produce bit-identical greedy
+    tokens from the promoted int8 payloads."""
+    cfg, model, params = setup
+    prompt = rng.integers(0, cfg.vocab_size, 256).astype(np.int32)
+    pressure = rng.integers(0, cfg.vocab_size, 320).astype(np.int32)
+    # pool: pressure (21 blocks worst) + slack 2; the cold chain (16
+    # blocks) cannot stay device-resident through the pressure serve
+    eng = Engine(0, model, params, max_slots=2, max_seq=512,
+                 token_budget=23 * 16, block_size=16,
+                 prefill_token_budget=64, attn_backend="dense",
+                 kv_dtype="int8", host_kv_budget=512)
+    cold = ServeRequest(0, prompt.copy(), 6)
+    _drain(eng, cold)
+    d0 = eng.cache_demotions
+    _drain(eng, ServeRequest(1, pressure.copy(), 6))
+    assert eng.cache_demotions > d0, "pressure prompt demoted nothing"
+    p0 = eng.cache_promotions
+    warm = ServeRequest(2, prompt.copy(), 6)
+    _drain(eng, warm)
+    assert eng.cache_promotions > p0, "warm re-admit promoted nothing"
+    assert warm.cached_tokens > 0
+    assert warm.generated == cold.generated, \
+        "int8 demote->promote round trip changed tokens"
+    eng.check_drained()
